@@ -1,0 +1,3 @@
+# Benchmark package: one module per paper claim (the paper has no numeric
+# tables — it is explicit that results are forthcoming — so each benchmark
+# operationalizes one of its §III/§IV claims; see DESIGN.md §5).

@@ -1,0 +1,56 @@
+"""Paper claim (§III): the reuse factor trades parallelism against
+resources; hls4ml's full unrolling "quickly depletes available resources".
+
+TPU translation measured here:
+  * scan unroll factor (reuse_factor → unroll) vs HLO size (the FPGA
+    'area' analogue is compiled code size / instruction count),
+  * qmatmul block-K (reuse of one MXU tile across K steps) vs VMEM
+    working set and grid steps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import get_family, loss_fn
+from repro.nn.context import QuantContext
+
+
+def _hlo_size(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    txt = c.as_text()
+    return len(txt), txt.count("\n")
+
+
+def run():
+    rows = []
+    cfg = get_config("yi-6b").smoke()
+    fam = get_family(cfg)
+    params = jax.eval_shape(lambda: fam.init(jax.random.PRNGKey(0), cfg))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
+
+    for rf in (1, 2, 4, 8):
+        ctx = QuantContext(compute_dtype=jnp.float32, reuse_factor=rf)
+        size, lines = _hlo_size(
+            lambda p, b: loss_fn(p, b, cfg, ctx)[0], params, batch)
+        rows.append({"bench": "reuse_factor",
+                     "name": f"scan_unroll/rf{rf}",
+                     "unroll": ctx.scan_unroll,
+                     "hlo_bytes": size, "hlo_lines": lines})
+
+    # kernel-level: block-K reuse vs VMEM footprint (static analysis)
+    for bk in (128, 256, 512, 1024):
+        bm = bn = 256
+        vmem = bm * bk + bk * bn + bm * bn * 4 + bm * bn * 4
+        steps = 1024 // bk
+        rows.append({"bench": "reuse_factor", "name": f"qmatmul_bk{bk}",
+                     "vmem_bytes": vmem, "k_steps": steps,
+                     "reuse": steps})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

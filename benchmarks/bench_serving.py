@@ -1,0 +1,76 @@
+"""The deployment scenario (§I/§V): quantized inference throughput.
+
+Serves the smoke gemma model through the continuous-batching engine under
+each numeric mode and reports tokens/s (CPU walltime — relative between
+modes) plus greedy-token agreement vs the fp32 reference (accuracy
+counterpart of the throughput numbers)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models.api import get_family
+from repro.nn.context import QuantContext
+from repro.core.precision import PrecisionPolicy
+from repro.core.qtypes import AC_FIXED_16_6
+
+
+def _greedy(cfg, fam, params, ctx, prompts, gen=8):
+    outs = []
+    for p in prompts:
+        cache = fam.init_cache(cfg, 1, p.shape[0] + gen + 1, jnp.float32)
+        last, cache = fam.prefill(params, p[None], cache, cfg, ctx)
+        toks = []
+        pos = jnp.asarray([p.shape[0]], jnp.int32)
+        tok = jnp.argmax(last[:, -1], -1)[:, None].astype(jnp.int32)
+        for t in range(gen):
+            toks.append(int(tok[0, 0]))
+            lg, cache = fam.decode_step(params, tok, cache, pos + t, cfg,
+                                        ctx)
+            tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
+        outs.append(toks)
+    return outs
+
+
+def run():
+    rows = []
+    cfg = get_config("gemma-2b").smoke()
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    src = SyntheticLM(cfg.vocab, seed=0)
+    prompts = [jnp.asarray(src.tokens(i, 1, 8)[0, :-1], jnp.int32)
+               for i in range(4)]
+
+    ctxs = {
+        "fp32": QuantContext(compute_dtype=jnp.float32),
+        "fake_fx16_6": QuantContext(
+            mode="fake", policy=PrecisionPolicy.uniform(AC_FIXED_16_6),
+            compute_dtype=jnp.float32),
+        "lut": QuantContext(use_lut=True, compute_dtype=jnp.float32),
+    }
+    ref = None
+    for name, ctx in ctxs.items():
+        t0 = time.perf_counter()
+        outs = _greedy(cfg, fam, params, ctx, prompts)
+        dt = time.perf_counter() - t0
+        ntok = sum(len(o) for o in outs)
+        row = {"bench": "serving", "name": name,
+               "us_per_call": dt / ntok * 1e6,
+               "tok_per_s": ntok / dt}
+        if ref is None:
+            ref = outs
+        else:
+            agree = np.mean([np.mean(np.asarray(a) == np.asarray(b))
+                             for a, b in zip(ref, outs)])
+            row["greedy_agreement_vs_fp32"] = float(agree)
+        rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

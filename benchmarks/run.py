@@ -1,0 +1,71 @@
+"""Benchmark harness: one module per paper claim (DESIGN.md §5).
+
+Prints ``name,us_per_call,derived`` CSV: ``us_per_call`` where a walltime
+exists (CPU-relative), and every other measured quantity folded into the
+``derived`` column as ``key=value`` pairs.  Roofline benchmarks (per
+paper-scale table) live in the dry-run artifacts; ``--with-roofline``
+appends their summary lines if artifacts/dryrun exists.
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def _fmt_derived(row):
+    skip = {"bench", "name", "us_per_call"}
+    parts = []
+    for k, v in row.items():
+        if k in skip:
+            continue
+        if isinstance(v, float):
+            parts.append(f"{k}={v:.6g}")
+        else:
+            parts.append(f"{k}={v}")
+    return ";".join(parts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--with-roofline", action="store_true")
+    args, _ = ap.parse_known_args()
+
+    from . import (bench_backends, bench_lut_tables, bench_qmatmul,
+                   bench_quant_accuracy, bench_reuse_factor, bench_serving)
+    modules = {
+        "lut_tables": bench_lut_tables,
+        "quant_accuracy": bench_quant_accuracy,
+        "qmatmul": bench_qmatmul,
+        "reuse_factor": bench_reuse_factor,
+        "backends": bench_backends,
+        "serving": bench_serving,
+    }
+    wanted = set(args.only.split(",")) if args.only else set(modules)
+
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if name not in wanted:
+            continue
+        for row in mod.run():
+            us = row.get("us_per_call", "")
+            us = f"{us:.3f}" if isinstance(us, float) else ""
+            print(f"{row['bench']}/{row['name']},{us},{_fmt_derived(row)}")
+
+    if args.with_roofline and os.path.isdir("artifacts/dryrun"):
+        for fn in sorted(glob.glob("artifacts/dryrun/*.json")):
+            d = json.load(open(fn))
+            if d.get("status") != "ok":
+                continue
+            derived = (f"bottleneck={d['bottleneck']};mfu={d['mfu']:.4f};"
+                       f"compute_s={d['compute_s']:.4f};"
+                       f"memory_s={d['memory_s']:.4f};"
+                       f"collective_s={d['collective_s']:.4f}")
+            print(f"roofline/{d['arch']}/{d['shape']}/{d['mesh']},,"
+                  f"{derived}")
+
+
+if __name__ == "__main__":
+    main()

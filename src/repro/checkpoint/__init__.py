@@ -1,0 +1,6 @@
+"""Sharded checkpointing with async save and elastic restore."""
+
+from .store import (CheckpointManager, latest_step, restore_state,
+                    save_state)
+
+__all__ = ["CheckpointManager", "latest_step", "restore_state", "save_state"]

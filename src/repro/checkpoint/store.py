@@ -1,0 +1,153 @@
+"""Checkpoint store: per-leaf .npy shards + JSON manifest.
+
+Layout (one directory per step)::
+
+    <dir>/step_000100/
+        manifest.json        # flat path -> {shape, dtype, file}
+        <leaf-path>.npy      # full logical value (single-host)
+
+Design points for cluster scale:
+
+* **Elastic restore**: files store the *logical* (global) array; restore
+  re-shards onto whatever mesh the job restarts with (``device_put`` with
+  the target sharding) — growing or shrinking the mesh between runs needs
+  no conversion step.  On a real multi-host pod each host would write its
+  addressable shards with an index (the manifest schema already carries
+  shape/dtype per leaf); the single-process container writes the fused
+  value, which is the degenerate n_hosts=1 case of the same format.
+* **Async save**: device→host transfer happens on the caller thread (cheap
+  since checkpoints read sharded buffers), file IO in a worker thread;
+  ``wait()`` joins before the next save or process exit.
+* **Atomicity**: writes go to ``<dir>.tmp`` then ``os.replace`` — a crash
+  mid-save never corrupts the latest complete checkpoint.
+* **Retention**: ``keep`` most recent complete checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_state", "restore_state", "latest_step", "CheckpointManager"]
+
+_SEP = "."
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def name(k):
+        for attr in ("key", "name", "idx"):
+            if hasattr(k, attr):
+                return str(getattr(k, attr))
+        return str(k)
+
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_SEP.join(name(k) for k in kp)] = leaf
+    return flat
+
+
+def save_state(state, directory: str, step: int) -> str:
+    """Blocking save.  Returns the final checkpoint path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    manifest = {}
+    for path, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fn = path.replace("/", "_") + ".npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest[path] = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                          "file": fn}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore_state(template, directory: str, step: int, *,
+                  shardings=None):
+    """Restore into the structure of ``template`` (a state pytree or
+    ShapeDtypeStruct pytree).  ``shardings``: optional matching pytree of
+    NamedShardings for elastic placement on the current mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    flat_t = _flatten(template)
+    flat_s = _flatten(shardings) if shardings is not None else {}
+    loaded = {}
+    for key, leaf in flat_t.items():
+        fn = os.path.join(path, key.replace("/", "_") + ".npy")
+        arr = np.load(fn)
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"ckpt leaf {key}: shape {arr.shape} != {want}")
+        sh = flat_s.get(key)
+        loaded[key] = (jax.device_put(arr, sh) if sh is not None
+                       else jnp.asarray(arr))
+    # rebuild the pytree in template order
+    treedef = jax.tree_util.tree_structure(template)
+    keys = list(_flatten(template).keys())
+    return jax.tree_util.tree_unflatten(treedef, [loaded[k] for k in keys])
+
+
+class CheckpointManager:
+    """Async save + retention + restore-latest."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, state, step: int, *, blocking: bool = False):
+        self.wait()
+        host_state = jax.tree_util.tree_map(
+            lambda l: np.asarray(jax.device_get(l)), state)
+
+        def work():
+            save_state(host_state, self.directory, step)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, template, *, shardings=None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return restore_state(template, self.directory, step,
+                             shardings=shardings), step
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,43 @@
+"""Assigned architecture configs (``--arch <id>``) + the paper's own MLP.
+
+Each module defines ``CONFIG: ModelConfig`` with the exact published
+dimensions (sources cited per-file).  ``get_config(name)`` resolves ids;
+``list_archs()`` enumerates them.  Reduced smoke variants come from
+``CONFIG.smoke()``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from ..models.config import ModelConfig
+
+__all__ = ["get_config", "list_archs", "ARCH_IDS"]
+
+ARCH_IDS = [
+    "yi-6b",
+    "gemma-2b",
+    "glm4-9b",
+    "command-r-35b",
+    "whisper-base",
+    "mamba2-370m",
+    "deepseek-v2-236b",
+    "olmoe-1b-7b",
+    "llama-3.2-vision-11b",
+    "zamba2-1.2b",
+    "jet-mlp",          # the paper's canonical hls4ml use case
+]
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULE_FOR:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f".{_MODULE_FOR[name]}", __package__)
+    return mod.CONFIG
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

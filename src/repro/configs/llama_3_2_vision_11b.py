@@ -1,0 +1,29 @@
+"""llama-3.2-vision-11b — VLM: dense GQA text stack with gated cross-attn
+image layers every 5th layer [hf:meta-llama/Llama-3.2-11B-Vision;
+unverified].  Vision frontend is a STUB per the brief: ``input_specs``
+provides precomputed patch embeddings.
+
+40L, d_model 4096, 32 heads (GQA kv=8), d_ff 14336, vocab 128256.
+"""
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    mlp_act="silu",
+    mlp_gated=True,
+    norm_type="rmsnorm",
+    norm_eps=1e-5,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    cross_attn_every=5,
+    n_img_tokens=1601,      # one 560×560 tile → 1601 patch tokens
+)

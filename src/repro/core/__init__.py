@@ -1,0 +1,32 @@
+"""Core of the reproduction: the paper's de-specialized component library.
+
+* :mod:`repro.core.qtypes`    — parametric fixed-point / minifloat formats
+* :mod:`repro.core.tables`    — trace-time constant tables ("constexpr")
+* :mod:`repro.core.quantize`  — PTQ / QAT / dynamic-range quantizers
+* :mod:`repro.core.precision` — per-layer heterogeneous precision policies
+* :mod:`repro.core.registry`  — backend-pluggable op registry
+"""
+
+from .precision import FP32_PRECISION, LayerPrecision, PrecisionPolicy
+from .qtypes import (AC_FIXED_8_3, AC_FIXED_16_6, AC_FIXED_18_8, E4M3, E5M2,
+                     FixedPointType, MiniFloatType, QTensor, storage_dtype)
+from .quantize import (calibrate_scale, dequantize_params, fake_quant,
+                       ptq_params, quantize_dynamic)
+from .registry import (current_backend, get_impl, list_ops, register_op,
+                       set_default_backend, use_backend)
+from .tables import (ConstexprTable, SoftmaxTablePolicy, TableSpec, get_table,
+                     lut_activation, register_compute, softmax_table_policy,
+                     table_lookup, table_softmax)
+
+__all__ = [
+    "FP32_PRECISION", "LayerPrecision", "PrecisionPolicy",
+    "AC_FIXED_8_3", "AC_FIXED_16_6", "AC_FIXED_18_8", "E4M3", "E5M2",
+    "FixedPointType", "MiniFloatType", "QTensor", "storage_dtype",
+    "calibrate_scale", "dequantize_params", "fake_quant", "ptq_params",
+    "quantize_dynamic",
+    "current_backend", "get_impl", "list_ops", "register_op",
+    "set_default_backend", "use_backend",
+    "ConstexprTable", "SoftmaxTablePolicy", "TableSpec", "get_table",
+    "lut_activation", "register_compute", "softmax_table_policy",
+    "table_lookup", "table_softmax",
+]

@@ -1,0 +1,66 @@
+"""Per-layer heterogeneous precision policies (the hls4ml config dict).
+
+hls4ml exposes "a data type for the whole model or on a per-layer basis".
+:class:`PrecisionPolicy` reproduces that interface against arbitrary
+parameter paths: a default :class:`LayerPrecision` plus ordered
+fnmatch-style pattern overrides, resolved most-specific-last.
+
+This is also where the paper's §Arch-applicability caveats are enforced in
+code: e.g. an SSM recurrence or a MoE router can be pinned to fp32 while
+the surrounding projections run int8 — per-layer heterogeneity is exactly
+the paper's point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Optional, Sequence, Tuple, Union
+
+from .qtypes import FixedPointType, MiniFloatType
+
+__all__ = ["LayerPrecision", "PrecisionPolicy", "FP32_PRECISION"]
+
+QType = Union[FixedPointType, MiniFloatType, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPrecision:
+    """Quantization assignment for one layer (None = keep float)."""
+
+    weights: QType = None
+    activations: QType = None
+    #: activation-table length/format override (None = module default)
+    table_n: Optional[int] = None
+    table_qtype: QType = None
+
+
+FP32_PRECISION = LayerPrecision()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Default precision + ordered (pattern, LayerPrecision) overrides.
+
+    ``resolve(path)`` returns the last matching override (patterns are
+    fnmatch globs over '/'-joined parameter paths), else the default —
+    matching hls4ml's model-then-layer configuration granularity.
+    """
+
+    default: LayerPrecision = FP32_PRECISION
+    overrides: Tuple[Tuple[str, LayerPrecision], ...] = ()
+
+    def resolve(self, path: str) -> LayerPrecision:
+        hit = self.default
+        for pattern, prec in self.overrides:
+            if fnmatch.fnmatch(path, pattern):
+                hit = prec
+        return hit
+
+    def with_override(self, pattern: str, prec: LayerPrecision) -> "PrecisionPolicy":
+        return dataclasses.replace(self, overrides=self.overrides + ((pattern, prec),))
+
+    @staticmethod
+    def uniform(weights: QType, activations: QType = None) -> "PrecisionPolicy":
+        return PrecisionPolicy(default=LayerPrecision(weights=weights,
+                                                      activations=activations))

@@ -1,0 +1,86 @@
+"""Weight pruning — the paper's §III "weights compression".
+
+hls4ml enforces sparsity during training and relies on the HLS backend to
+eliminate zero-weight multipliers.  On TPU, unstructured zeros buy nothing
+on the dense MXU — the de-specialized translation keeps the paper's
+*training-time sparsity enforcement* but produces **structured** masks the
+hardware can exploit:
+
+* ``magnitude_mask`` — global unstructured top-k (the hls4ml-faithful
+  form; useful for accuracy studies and for backends that do eliminate
+  zeros),
+* ``nm_mask`` — N:M structured sparsity (keep N largest of every M
+  consecutive weights along the reduction dim — the form sparse tensor
+  units accelerate),
+* ``apply_masks`` / ``enforce`` — masked-training hook: re-apply masks to
+  params after every optimizer step so sparsity survives training,
+  exactly the paper's "enforcing sparsity in the training phase".
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["magnitude_mask", "nm_mask", "make_masks", "apply_masks",
+           "sparsity"]
+
+
+def magnitude_mask(w: jnp.ndarray, sparsity_target: float) -> jnp.ndarray:
+    """Boolean keep-mask zeroing the smallest |w| fraction."""
+    k = int(round(w.size * (1.0 - sparsity_target)))
+    k = max(k, 1)
+    thresh = jnp.sort(jnp.abs(w).reshape(-1))[-k]
+    return jnp.abs(w) >= thresh
+
+
+def nm_mask(w: jnp.ndarray, n: int = 2, m: int = 4) -> jnp.ndarray:
+    """N:M structured mask along the leading (reduction) axis.
+
+    Requires w.shape[0] % m == 0; keeps the n largest of each group of m.
+    """
+    d_in = w.shape[0]
+    assert d_in % m == 0, (d_in, m)
+    groups = w.reshape(d_in // m, m, *w.shape[1:])
+    a = jnp.abs(groups)
+    # rank within each group of m; keep the top n
+    order = jnp.argsort(a, axis=1)
+    ranks = jnp.argsort(order, axis=1)
+    keep = ranks >= (m - n)
+    return keep.reshape(w.shape)
+
+
+def make_masks(params, *, sparsity_target: float = 0.5,
+               structured: Optional[tuple] = None,
+               min_ndim: int = 2) -> Dict:
+    """Mask pytree for every weight matrix (None for passthrough leaves)."""
+    def one(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < min_ndim:
+            return None
+        if structured is not None:
+            n, m = structured
+            if leaf.shape[0] % m == 0:
+                return nm_mask(leaf, n, m)
+            return None
+        return magnitude_mask(leaf, sparsity_target)
+
+    return jax.tree_util.tree_map(one, params)
+
+
+def apply_masks(params, masks):
+    """Zero out pruned weights (call after each optimizer step)."""
+    return jax.tree_util.tree_map(
+        lambda p, m: p if m is None else p * m.astype(p.dtype),
+        params, masks, is_leaf=lambda x: x is None)
+
+
+def sparsity(params) -> float:
+    """Fraction of exactly-zero weight entries across matrix leaves."""
+    zeros = total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
+            zeros += int(jnp.sum(leaf == 0))
+            total += leaf.size
+    return zeros / max(total, 1)

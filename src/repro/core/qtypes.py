@@ -1,0 +1,296 @@
+"""Parametric arbitrary-precision data types (the ``ac_types`` analogue).
+
+The paper replaces Xilinx ``ap_types`` with a modified open-source
+``ac_types`` library so that (a) types are parametric in width/format,
+(b) they can be evaluated at compile time (constexpr-compatible), and
+(c) they are portable across HLS backends.
+
+On TPU the analogue is a *software-defined numeric format* carried in a
+narrow storage dtype and executed either on the VPU (elementwise) or the
+MXU (int8 matmul with int32 accumulation).  Two families are provided:
+
+* :class:`FixedPointType` — ``ac_fixed<W, I, S, Q, O>`` semantics: a
+  binary-point format with ``width`` total bits, ``int_bits`` integer bits,
+  configurable rounding (``Q``) and overflow (``O``) behaviour.
+* :class:`MiniFloatType` — the paper's "custom floating-point data types":
+  arbitrary (exponent, mantissa) splits, IEEE-like or extended-range
+  (OCP fp8) semantics.
+
+Both are frozen dataclasses so they can key dictionaries (per-layer
+precision policies) and be closed over by jitted functions as static data.
+All quantization math is pure ``jnp`` and differentiable via the
+straight-through estimator in :mod:`repro.core.quantize`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FixedPointType",
+    "MiniFloatType",
+    "QTensor",
+    "storage_dtype",
+    # canonical instances
+    "AC_FIXED_16_6",
+    "AC_FIXED_18_8",
+    "AC_FIXED_8_3",
+    "E4M3",
+    "E5M2",
+]
+
+_ROUNDING_MODES = ("rnd_even", "rnd", "trn")
+_OVERFLOW_MODES = ("sat", "wrap")
+
+
+def storage_dtype(width: int) -> jnp.dtype:
+    """Narrowest signed integer dtype that can carry ``width`` bits."""
+    if width <= 8:
+        return jnp.int8
+    if width <= 16:
+        return jnp.int16
+    if width <= 32:
+        return jnp.int32
+    raise ValueError(f"fixed-point width {width} > 32 unsupported")
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointType:
+    """``ac_fixed``-style parametric fixed-point format.
+
+    value = stored_integer * 2**(int_bits - width)
+
+    ``int_bits`` counts the sign bit when ``signed`` (matching ac_fixed).
+    ``rounding``: ``rnd_even`` (round half to even — default, matches the
+    MXU requantization path), ``rnd`` (round half away from zero, the
+    ``AC_RND`` analogue), ``trn`` (truncate toward -inf, ``AC_TRN``).
+    ``overflow``: ``sat`` (saturate, ``AC_SAT``) or ``wrap`` (two's
+    complement wraparound, ``AC_WRAP``).
+    """
+
+    width: int
+    int_bits: int
+    signed: bool = True
+    rounding: str = "rnd_even"
+    overflow: str = "sat"
+
+    def __post_init__(self):
+        if self.width < 1:
+            raise ValueError("width must be >= 1")
+        if self.rounding not in _ROUNDING_MODES:
+            raise ValueError(f"rounding must be one of {_ROUNDING_MODES}")
+        if self.overflow not in _OVERFLOW_MODES:
+            raise ValueError(f"overflow must be one of {_OVERFLOW_MODES}")
+
+    # ---- static format properties -------------------------------------
+    @property
+    def frac_bits(self) -> int:
+        return self.width - self.int_bits
+
+    @property
+    def lsb(self) -> float:
+        """Value of one unit in the last place (the quantization step)."""
+        return float(2.0 ** (self.int_bits - self.width))
+
+    @property
+    def int_min(self) -> int:
+        return -(1 << (self.width - 1)) if self.signed else 0
+
+    @property
+    def int_max(self) -> int:
+        return (1 << (self.width - 1)) - 1 if self.signed else (1 << self.width) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.int_min * self.lsb
+
+    @property
+    def max_value(self) -> float:
+        return self.int_max * self.lsb
+
+    @property
+    def dtype(self) -> jnp.dtype:
+        return storage_dtype(self.width)
+
+    # ---- quantization --------------------------------------------------
+    def _round(self, y: jnp.ndarray) -> jnp.ndarray:
+        if self.rounding == "rnd_even":
+            return jnp.round(y)
+        if self.rounding == "rnd":
+            return jnp.trunc(y + jnp.copysign(0.5, y))
+        return jnp.floor(y)  # trn
+
+    def to_int(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Quantize real values to the stored-integer representation."""
+        y = self._round(jnp.asarray(x, jnp.float32) / self.lsb)
+        if self.overflow == "sat":
+            y = jnp.clip(y, self.int_min, self.int_max)
+        else:  # two's-complement wraparound
+            span = float(1 << self.width)
+            y = jnp.mod(y - self.int_min, span) + self.int_min
+        return y.astype(self.dtype)
+
+    def from_int(self, i: jnp.ndarray) -> jnp.ndarray:
+        return i.astype(jnp.float32) * self.lsb
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Round-trip a real tensor through this format (values stay f32)."""
+        return self.from_int(self.to_int(x))
+
+    def np_quantize(self, x: np.ndarray) -> np.ndarray:
+        """NumPy twin of :meth:`quantize` for trace-time (constexpr) use."""
+        y = np.asarray(x, np.float64) / self.lsb
+        if self.rounding == "rnd_even":
+            y = np.round(y)
+        elif self.rounding == "rnd":
+            y = np.trunc(y + np.copysign(0.5, y))
+        else:
+            y = np.floor(y)
+        if self.overflow == "sat":
+            y = np.clip(y, self.int_min, self.int_max)
+        else:
+            span = float(1 << self.width)
+            y = np.mod(y - self.int_min, span) + self.int_min
+        return (y * self.lsb).astype(np.float32)
+
+    def short_name(self) -> str:
+        s = "s" if self.signed else "u"
+        return f"fx{s}{self.width}_{self.int_bits}"
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniFloatType:
+    """Custom floating-point format with ``exp_bits``/``man_bits`` split.
+
+    ``ieee_inf=True`` reserves the all-ones exponent for inf/NaN (IEEE
+    semantics, e.g. E5M2).  ``ieee_inf=False`` uses the extended OCP-style
+    range where the top exponent carries normal values (e.g. E4M3: max
+    finite 448).  Values are emulated in float32: quantization rounds the
+    mantissa to ``man_bits`` at the value's (clamped) exponent, which also
+    reproduces gradual underflow through subnormals.
+    """
+
+    exp_bits: int
+    man_bits: int
+    bias: Optional[int] = None
+    ieee_inf: bool = True
+
+    def __post_init__(self):
+        if self.exp_bits < 2 or self.exp_bits > 8:
+            raise ValueError("exp_bits must be in [2, 8]")
+        if self.man_bits < 0 or self.man_bits > 23:
+            raise ValueError("man_bits must be in [0, 23]")
+
+    @property
+    def _bias(self) -> int:
+        return self.bias if self.bias is not None else (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def max_exp(self) -> int:
+        """Largest usable unbiased exponent."""
+        top = (1 << self.exp_bits) - (2 if self.ieee_inf else 1)
+        return top - self._bias
+
+    @property
+    def min_normal_exp(self) -> int:
+        return 1 - self._bias
+
+    @property
+    def max_value(self) -> float:
+        if self.ieee_inf:
+            frac = 2.0 - 2.0 ** (-self.man_bits)
+        else:  # all-ones exponent usable, only one NaN encoding: drop one ulp
+            frac = 2.0 - 2.0 ** (-self.man_bits) * (2.0 if self.man_bits > 0 else 1.0)
+        return float(frac * 2.0**self.max_exp)
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.min_normal_exp - self.man_bits))
+
+    @property
+    def width(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        x = jnp.asarray(x, jnp.float32)
+        a = jnp.abs(x)
+        # floor(log2(a)) via frexp: a = mant * 2**e, mant in [0.5, 1)
+        _, e = jnp.frexp(a)
+        e_unb = e - 1
+        eff = jnp.maximum(e_unb, self.min_normal_exp)
+        # ldexp, not exp2: XLA CPU's exp2 is approximate (~5e-7 rel) and
+        # breaks exact power-of-two quanta / idempotence
+        quantum = jnp.ldexp(jnp.float32(1.0), eff - self.man_bits)
+        q = jnp.round(a / quantum) * quantum
+        # rounding can bump the exponent (e.g. 1.111|1 -> 10.00); that is
+        # still representable unless it exceeds max_value: saturate-to-finite
+        q = jnp.minimum(q, self.max_value)
+        return jnp.where(a == 0, 0.0, jnp.copysign(q, x))
+
+    def np_quantize(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        a = np.abs(x).astype(np.float64)
+        with np.errstate(divide="ignore"):
+            _, e = np.frexp(a)
+        e_unb = e - 1
+        eff = np.maximum(e_unb, self.min_normal_exp)
+        quantum = np.exp2((eff - self.man_bits).astype(np.float64))
+        q = np.where(quantum > 0, np.round(a / np.where(quantum == 0, 1, quantum)) * quantum, 0.0)
+        q = np.minimum(q, self.max_value)
+        return np.where(a == 0, 0.0, np.copysign(q, x)).astype(np.float32)
+
+    def short_name(self) -> str:
+        return f"e{self.exp_bits}m{self.man_bits}"
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """A quantized tensor: integer payload + per-channel (or scalar) scale.
+
+    Used by the dynamic-range int8 path (MXU matmuls): ``value ≈ data *
+    scale`` with ``data`` in the type's storage dtype.  ``scale`` broadcasts
+    against ``data`` (scalar, or shaped for per-channel axes).
+    """
+
+    def __init__(self, data: jnp.ndarray, scale: jnp.ndarray, qtype: FixedPointType):
+        self.data = data
+        self.scale = scale
+        self.qtype = qtype
+
+    @property
+    def shape(self):
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return (self.data.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.data, self.scale), self.qtype
+
+    @classmethod
+    def tree_unflatten(cls, qtype, children):
+        return cls(children[0], children[1], qtype)
+
+    def __repr__(self):
+        return f"QTensor({self.data.shape}, {self.qtype.short_name()})"
+
+
+# Canonical instances -----------------------------------------------------
+#: hls4ml's classic default model type.
+AC_FIXED_16_6 = FixedPointType(16, 6)
+#: The paper's softmax-table type (sized for a Xilinx 18k BRAM).
+AC_FIXED_18_8 = FixedPointType(18, 8)
+#: Aggressive edge-inference type.
+AC_FIXED_8_3 = FixedPointType(8, 3)
+#: OCP fp8 formats (E4M3 uses the extended range, max finite 448).
+E4M3 = MiniFloatType(4, 3, ieee_inf=False)
+E5M2 = MiniFloatType(5, 2, ieee_inf=True)

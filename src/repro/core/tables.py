@@ -1,0 +1,287 @@
+"""Trace-time constant table generation — the ``constexpr`` analogue.
+
+The paper's central concrete artifact: hls4ml built activation-function
+lookup tables with a C++ loop that *only Vivado HLS* recognized and folded
+into BRAM constants; the paper replaces it with portable ``constexpr``
+evaluation (a class template taking a static ``compute()`` method and a
+length ``N``, plus the constexpr math library *gcem*).
+
+The XLA analogue of "compile time" is *trace time*: anything computed in
+Python/NumPy while building the jaxpr is embedded in the HLO as a literal
+constant.  Relying on XLA to constant-fold a traced loop of transcendentals
+would be exactly the fragile backend-specific pattern the paper removes —
+so tables here are built eagerly in NumPy (:class:`TableSpec` +
+:func:`get_table`), quantized to their target format with the *NumPy twin*
+of the qtype (``np_quantize``, our "gcem"), and only then handed to JAX.
+
+Faithfulness notes (validated in benchmarks/bench_lut_tables.py):
+
+* The hls4ml softmax silently overrides the user's default fixed-point type
+  with **1024-entry tables of 18-bit values** (sized to fill one Xilinx 18k
+  BRAM).  ``softmax_table_policy`` reproduces that override, and exposes
+  ``respect_user_type=True`` — the de-specialized behaviour the paper
+  advocates.
+* hls4ml tables f(x) directly and indexes by truncation.  We keep that as
+  ``indexing="trunc"`` / gate-free mode for the faithful baseline, and add
+  ``indexing="interp"`` (linear interpolation) plus *gated* forms for
+  unbounded activations (silu/gelu table the bounded gate, multiply by x),
+  which keep the table bounded and the asymptotics exact — part of the
+  "more efficient accelerators" the paper targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .qtypes import AC_FIXED_18_8, FixedPointType, MiniFloatType
+
+__all__ = [
+    "TableSpec",
+    "ConstexprTable",
+    "get_table",
+    "register_compute",
+    "table_lookup",
+    "lut_activation",
+    "table_softmax",
+    "softmax_table_policy",
+    "COMPUTE_FNS",
+    "GATED_FORMS",
+]
+
+QType = Union[FixedPointType, MiniFloatType, None]
+
+# --------------------------------------------------------------------------
+# The "static compute() method" registry — trace-time (NumPy) math only.
+# --------------------------------------------------------------------------
+COMPUTE_FNS: Dict[str, Callable[[np.ndarray], np.ndarray]] = {}
+
+
+def register_compute(name: str):
+    def deco(fn):
+        COMPUTE_FNS[name] = fn
+        return fn
+    return deco
+
+
+@register_compute("sigmoid")
+def _sigmoid(x):  # numerically-stable logistic
+    return np.where(x >= 0, 1.0 / (1.0 + np.exp(-x)), np.exp(x) / (1.0 + np.exp(x)))
+
+
+@register_compute("tanh")
+def _tanh(x):
+    return np.tanh(x)
+
+
+@register_compute("exp")
+def _exp(x):
+    return np.exp(x)
+
+
+@register_compute("invert")
+def _invert(x):
+    return 1.0 / np.maximum(x, 1e-12)
+
+
+@register_compute("silu")
+def _silu(x):
+    return x * _sigmoid(x)
+
+
+@register_compute("gelu")
+def _gelu(x):  # tanh approximation, as used by gemma et al.
+    return 0.5 * x * (1.0 + np.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+@register_compute("gelu_gate")
+def _gelu_gate(x):  # bounded gate: gelu(x) = x * gelu_gate(x)
+    return 0.5 * (1.0 + np.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+@register_compute("silu_gate")
+def _silu_gate(x):  # bounded gate: silu(x) = x * sigmoid(x)
+    return _sigmoid(x)
+
+
+@register_compute("softplus")
+def _softplus(x):
+    return np.logaddexp(0.0, x)
+
+
+@register_compute("erf")
+def _erf(x):
+    # constexpr-style erf (Abramowitz & Stegun 7.1.26) — avoids scipy,
+    # mirroring the paper's swap of std::math for a self-contained gcem.
+    t = 1.0 / (1.0 + 0.3275911 * np.abs(x))
+    y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+                - 0.284496736) * t + 0.254829592) * t * np.exp(-x * x)
+    return np.sign(x) * y
+
+
+@register_compute("relu")
+def _relu(x):
+    return np.maximum(x, 0.0)
+
+
+#: Activations with exact gated forms: f(x) = x * gate(x), gate bounded.
+GATED_FORMS = {"silu": "silu_gate", "gelu": "gelu_gate"}
+
+_INDEXING = ("trunc", "nearest", "interp")
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    """Fully static description of a constant table (hashable cache key)."""
+
+    fn: str                      # key into COMPUTE_FNS
+    n: int = 1024                # table length (hls4ml default: 1024)
+    lo: float = -8.0             # input domain [lo, hi)
+    hi: float = 8.0
+    qtype: QType = None          # value quantization (None = float32)
+    indexing: str = "trunc"      # trunc | nearest | interp
+
+    def __post_init__(self):
+        if self.fn not in COMPUTE_FNS:
+            raise KeyError(f"unknown compute fn {self.fn!r}; register it first")
+        if self.n < 2:
+            raise ValueError("table length must be >= 2")
+        if not self.hi > self.lo:
+            raise ValueError("need hi > lo")
+        if self.indexing not in _INDEXING:
+            raise ValueError(f"indexing must be one of {_INDEXING}")
+
+    @property
+    def step(self) -> float:
+        return (self.hi - self.lo) / self.n
+
+
+class ConstexprTable:
+    """An ``N``-entry constant array evaluated at trace time.
+
+    Mirrors the paper's class template: it takes the ``compute()`` method
+    (via ``spec.fn``) and the length ``N`` (``spec.n``) and produces the
+    populated constant array — here a NumPy array that becomes an HLO
+    literal when first used inside a traced function.
+    """
+
+    def __init__(self, spec: TableSpec):
+        self.spec = spec
+        knots = spec.lo + spec.step * np.arange(spec.n, dtype=np.float64)
+        vals = COMPUTE_FNS[spec.fn](knots).astype(np.float32)
+        if spec.qtype is not None:
+            vals = spec.qtype.np_quantize(vals)
+        #: trace-time ("constexpr") values; read-only.
+        self.np_values: np.ndarray = vals
+        self.np_values.setflags(write=False)
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return table_lookup(x, jnp.asarray(self.np_values), self.spec.lo,
+                            self.spec.hi, self.spec.indexing)
+
+    def __repr__(self):
+        return f"ConstexprTable({self.spec})"
+
+
+@functools.lru_cache(maxsize=256)
+def get_table(spec: TableSpec) -> ConstexprTable:
+    """Build (or fetch the cached) constant table for ``spec``."""
+    return ConstexprTable(spec)
+
+
+# --------------------------------------------------------------------------
+# Reference lookup (pure jnp).  The Pallas VMEM-resident kernel lives in
+# repro.kernels.lut_activation and is numerics-matched to this function.
+# --------------------------------------------------------------------------
+def table_lookup(x: jnp.ndarray, values: jnp.ndarray, lo: float, hi: float,
+                 indexing: str = "trunc") -> jnp.ndarray:
+    """Map ``x`` into the table domain and gather (optionally interpolate)."""
+    n = values.shape[0]
+    step = (hi - lo) / n
+    pos = (x.astype(jnp.float32) - lo) / step
+    if indexing == "interp":
+        # values[i] = f(lo + i*step); interpolate between adjacent knots.
+        pos = jnp.clip(pos, 0.0, n - 1.0)
+        i0 = jnp.floor(pos)
+        frac = pos - i0
+        i0 = i0.astype(jnp.int32)
+        i1 = jnp.minimum(i0 + 1, n - 1)
+        return values[i0] * (1.0 - frac) + values[i1] * frac
+    if indexing == "nearest":
+        idx = jnp.clip(jnp.round(pos), 0, n - 1).astype(jnp.int32)
+    else:  # trunc — hls4ml-faithful
+        idx = jnp.clip(jnp.floor(pos), 0, n - 1).astype(jnp.int32)
+    return values[idx]
+
+
+def lut_activation(x: jnp.ndarray, fn: str, *, n: int = 1024,
+                   lo: float = -8.0, hi: float = 8.0, qtype: QType = None,
+                   indexing: str = "interp", gated: bool = True) -> jnp.ndarray:
+    """Apply activation ``fn`` via a trace-time constant table.
+
+    ``gated=True`` uses the exact gated form for unbounded activations
+    (silu/gelu): f(x) = x * gate_table(x).  ``gated=False`` tables f
+    directly (hls4ml-faithful; saturates for |x| > hi).
+    """
+    if gated and fn in GATED_FORMS:
+        gate = get_table(TableSpec(GATED_FORMS[fn], n, lo, hi, qtype, indexing))
+        return x * gate(x)
+    if fn == "softplus":
+        # softplus(x) -> x for large x; keep the asymptote exact.
+        t = get_table(TableSpec(fn, n, lo, hi, qtype, indexing))
+        return jnp.where(x >= hi, x, t(x))
+    t = get_table(TableSpec(fn, n, lo, hi, qtype, indexing))
+    return t(x)
+
+
+# --------------------------------------------------------------------------
+# Softmax — reproducing (and de-specializing) the hls4ml implementation.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SoftmaxTablePolicy:
+    n: int = 1024
+    qtype: QType = AC_FIXED_18_8
+    exp_lo: float = -16.0
+    exp_hi: float = 0.0
+    inv_hi: float = 64.0          # hls4ml invert-table domain cap
+    exact_divide: bool = True     # improved mode: exact div after LUT exp
+    indexing: str = "trunc"
+
+
+def softmax_table_policy(user_qtype: QType = None, *,
+                         respect_user_type: bool = False,
+                         n: int = 1024, exact_divide: bool = True,
+                         indexing: str = "trunc") -> SoftmaxTablePolicy:
+    """The paper-documented override: softmax tables are 1024×18-bit fixed
+    point (filling one Xilinx 18k BRAM) *regardless* of the user's model
+    type — unless ``respect_user_type`` asks for the de-specialized fix.
+    """
+    qtype = user_qtype if respect_user_type else AC_FIXED_18_8
+    return SoftmaxTablePolicy(n=n, qtype=qtype, exact_divide=exact_divide,
+                              indexing=indexing)
+
+
+def table_softmax(x: jnp.ndarray, axis: int = -1,
+                  policy: Optional[SoftmaxTablePolicy] = None) -> jnp.ndarray:
+    """Softmax whose exp (and optionally 1/x) come from constant tables.
+
+    ``exact_divide=False`` is the fully hls4ml-faithful path: the reduction
+    sum is inverted through a second table over (0, inv_hi] — accurate only
+    while the row sum stays inside the table domain.  The improved default
+    keeps the LUT exp (the expensive transcendental) and divides exactly.
+    """
+    p = policy or SoftmaxTablePolicy()
+    exp_t = get_table(TableSpec("exp", p.n, p.exp_lo, p.exp_hi, p.qtype, p.indexing))
+    z = x - jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    z = jnp.maximum(z, p.exp_lo)  # saturate into table domain
+    e = exp_t(z)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    if p.exact_divide:
+        return e / s
+    inv_t = get_table(TableSpec("invert", p.n, 1.0 / p.n, p.inv_hi, p.qtype, p.indexing))
+    return e * inv_t(jnp.minimum(s, p.inv_hi))

@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline with background prefetch."""
+
+from .pipeline import SyntheticLM, Prefetcher, make_batch, batch_struct
+
+__all__ = ["SyntheticLM", "Prefetcher", "make_batch", "batch_struct"]

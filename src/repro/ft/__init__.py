@@ -1,0 +1,6 @@
+"""Fault tolerance: recovery loop, straggler detection, heartbeats."""
+
+from .recovery import FaultInjector, ResilientLoop
+from .straggler import StragglerMonitor
+
+__all__ = ["FaultInjector", "ResilientLoop", "StragglerMonitor"]

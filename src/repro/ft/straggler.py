@@ -1,0 +1,49 @@
+"""Straggler detection and mitigation hooks.
+
+On a real pod, per-host step times are exchanged over an out-of-band
+channel (or inferred from collective wait times); a persistent straggler
+triggers mitigation: alerting, traffic re-balancing, or ejecting the host
+and re-meshing (the elastic-restore path in repro.checkpoint).
+
+In-process we implement the full detection logic against observed step
+durations — EMA baseline + threshold ratio, consecutive-hit debouncing —
+and a pluggable mitigation callback; the multi-host transport is the only
+stubbed piece (documented per the brief).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Callable, Optional
+
+__all__ = ["StragglerMonitor"]
+
+
+class StragglerMonitor:
+    def __init__(self, *, window: int = 32, ratio: float = 1.5,
+                 patience: int = 3,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.window = window
+        self.ratio = ratio
+        self.patience = patience
+        self.on_straggler = on_straggler
+        self.times = collections.deque(maxlen=window)
+        self.hits = 0
+        self.events = []
+
+    def record(self, step: int, duration: float) -> bool:
+        """Feed one step duration; returns True when mitigation fires."""
+        if len(self.times) >= max(4, self.window // 4):
+            baseline = sorted(self.times)[len(self.times) // 2]  # median
+            if duration > self.ratio * baseline:
+                self.hits += 1
+                if self.hits >= self.patience:
+                    self.events.append((step, duration))
+                    self.hits = 0
+                    if self.on_straggler is not None:
+                        self.on_straggler(step, duration)
+                    return True
+            else:
+                self.hits = 0
+        self.times.append(duration)
+        return False

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three artifacts (per the de-specialization discipline):
+
+* ``<name>.py`` — the Pallas lowering (``pl.pallas_call`` + BlockSpec),
+* ``ref.py``    — the pure-jnp oracle (numerics contract + CPU fallback),
+* ``ops.py``    — the backend-dispatched public wrapper.
+"""
+
+from .ops import attention, lut_activation, qmatmul
+
+__all__ = ["attention", "lut_activation", "qmatmul"]

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention, GQA-aware.
+
+Beyond-paper performance layer (recorded separately in EXPERIMENTS.md
+§Perf): prefill attention is the dominant compute term at 32k context, and
+a blocked online-softmax keeps the (Sq × Skv) logits out of HBM entirely —
+the working set per grid step is one (bq, d) query block, one (bk, d)
+key/value block, and (bq, d)+(bq, 1)×2 f32 scratch in VMEM.
+
+GQA is honoured structurally: K/V keep their ``Hkv`` head axis and the
+BlockSpec index map folds the query head onto its KV group
+(``h // group``) — grouped KV is *never* broadcast-materialized, which is
+the whole point of GQA's cache-size savings.
+
+Causality is handled at two granularities: whole (iq, ik) blocks strictly
+above the diagonal are skipped via ``pl.when`` (no MXU work, no VMEM
+traffic), and the diagonal blocks apply an elementwise mask.  Padded tail
+positions (wrapper pads Sq/Skv to block multiples) are masked with the
+same mechanism.
+
+Head dim should be a multiple of 128 for exact MXU tiling; other sizes
+(e.g. MLA's 192) are still correct — Mosaic pads the lane dimension.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            sq: int, skv: int, bq: int, bk: int, nk: int, causal: bool,
+            scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions; queries sit at the tail of the kv context
+    q_off = skv - sq
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, bk)
+
+        qpos = q_off + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < skv                                    # kv padding
+        if causal:
+            mask = mask & (qpos >= kpos)
+        logits = jnp.where(mask, logits, _NEG)
+
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal: no kv position in this
+        # block is visible to any query in the q block
+        visible = (q_off + iq * bq + (bq - 1)) >= (ik * bk)
+        pl.when(visible)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softmax_scale", "bq",
+                                             "bk", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True,
+                           softmax_scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, dv = k.shape[0], k.shape[1], k.shape[2], v.shape[3]
+    assert hq % hkv == 0 and dv == d
+    group = hq // hkv
+    scale = softmax_scale if softmax_scale is not None else float(1.0 / np.sqrt(d))
+
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    pq = (-sq) % bq
+    pk = (-skv) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))) if pk else v
+    nq = qp.shape[2] // bq
+    nk = kp.shape[2] // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, sq=sq, skv=skv, bq=bq, bk=bk, nk=nk,
+                          causal=causal, scale=scale),
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, iq, ik: (bb, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, iq, ik: (bb, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, iq, ik: (bb, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, h, iq, ik: (bb, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(qp, kp, vp)
+
+    return out[:, :, :sq] if pq else out

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: VMEM-resident lookup-table activation.
+
+The BRAM→VMEM adaptation of the paper's constant-table activations.  The
+table (built at trace time by :mod:`repro.core.tables`) rides into VMEM
+once per block via a replicated BlockSpec; each input block is mapped to
+table indices on the VPU and gathered (plus an optional linear
+interpolation — two gathers and an FMA).  This replaces transcendental
+``exp/tanh/erf`` evaluations, which are the slow path on the VPU, with a
+gather — the same trade the paper's BRAM tables make against DSP/LUT logic.
+
+Layout: the wrapper flattens any input to (rows, LANES) with LANES=128 so
+the last dimension is lane-aligned; ``block_rows`` rows are processed per
+grid step (8 sublanes × k).  VMEM working set per step:
+``block_rows*128*4`` bytes for x/out + ``4*n`` bytes for the table —
+a 1024-entry table is 4 KiB, the BRAM-sized footprint the paper targets.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.tables import TableSpec, get_table
+
+__all__ = ["lut_activation_pallas"]
+
+LANES = 128
+
+
+def _kernel(x_ref, t_ref, o_ref, *, lo: float, step_inv: float, n: int,
+            indexing: str):
+    x = x_ref[...].astype(jnp.float32)
+    t = t_ref[...]
+    pos = (x - lo) * step_inv
+    if indexing == "interp":
+        pos = jnp.clip(pos, 0.0, n - 1.0)
+        i0f = jnp.floor(pos)
+        frac = pos - i0f
+        i0 = i0f.astype(jnp.int32)
+        i1 = jnp.minimum(i0 + 1, n - 1)
+        y0 = jnp.take(t, i0.reshape(-1), axis=0).reshape(x.shape)
+        y1 = jnp.take(t, i1.reshape(-1), axis=0).reshape(x.shape)
+        o_ref[...] = y0 * (1.0 - frac) + y1 * frac
+    else:
+        if indexing == "nearest":
+            idx = jnp.clip(jnp.round(pos), 0, n - 1).astype(jnp.int32)
+        else:  # trunc
+            idx = jnp.clip(jnp.floor(pos), 0, n - 1).astype(jnp.int32)
+        o_ref[...] = jnp.take(t, idx.reshape(-1), axis=0).reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block_rows", "interpret"))
+def lut_activation_pallas(x: jnp.ndarray, spec: TableSpec, *,
+                          block_rows: int = 256,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Apply the table described by ``spec`` to ``x`` (any shape)."""
+    table = jnp.asarray(get_table(spec).np_values)
+    n = spec.n
+    orig_shape, orig_dtype = x.shape, x.dtype
+
+    flat = x.reshape(-1)
+    cols = LANES
+    pad = (-flat.shape[0]) % (block_rows * cols)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    x2 = flat.reshape(-1, cols)
+    rows = x2.shape[0]
+    grid = (rows // block_rows,)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, lo=spec.lo, step_inv=1.0 / spec.step,
+                          n=n, indexing=spec.indexing),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            # the table is replicated into VMEM for every block
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x2, table)
+
+    out = out.reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(orig_shape).astype(orig_dtype)

@@ -1,0 +1,75 @@
+"""Public kernel API with backend dispatch (the de-specialized interface).
+
+Every op is registered under the backends it supports; callers use these
+wrappers (or the registry directly) and never import a specific lowering.
+On CPU hosts the ``pallas`` backend automatically runs in interpret mode,
+which executes the kernel body in Python — the portability story the paper
+asks for: one interface, ``ref`` everywhere, specialization where the
+hardware exists.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.registry import get_impl, register_op
+from ..core.tables import TableSpec
+from . import ref as _ref
+from .flash_attention import flash_attention_pallas
+from .lut_activation import lut_activation_pallas
+from .qmatmul import qmatmul_pallas
+
+__all__ = ["lut_activation", "qmatmul", "attention"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# -- registrations ---------------------------------------------------------
+register_op("lut_activation", "ref")(_ref.lut_activation_ref)
+
+
+@register_op("lut_activation", "pallas")
+def _lut_pallas(x, spec: TableSpec, **kw):
+    return lut_activation_pallas(x, spec, interpret=_interpret(), **kw)
+
+
+register_op("qmatmul", "ref")(_ref.qmatmul_ref)
+
+
+@register_op("qmatmul", "pallas")
+def _qmatmul_pallas(a, b, sa, sb, out_dtype=jnp.float32, **kw):
+    return qmatmul_pallas(a, b, sa, sb, out_dtype=out_dtype,
+                          interpret=_interpret(), **kw)
+
+
+register_op("attention", "ref")(_ref.flash_attention_ref)
+
+
+@register_op("attention", "pallas")
+def _attention_pallas(q, k, v, *, causal=True, softmax_scale=None, **kw):
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  softmax_scale=softmax_scale,
+                                  interpret=_interpret(), **kw)
+
+
+# -- public wrappers -------------------------------------------------------
+def lut_activation(x: jnp.ndarray, spec: TableSpec, *,
+                   backend: Optional[str] = None, **kw) -> jnp.ndarray:
+    return get_impl("lut_activation", backend)(x, spec, **kw)
+
+
+def qmatmul(a_data, b_data, a_scale, b_scale, *, out_dtype=jnp.float32,
+            backend: Optional[str] = None, **kw) -> jnp.ndarray:
+    return get_impl("qmatmul", backend)(a_data, b_data, a_scale, b_scale,
+                                        out_dtype=out_dtype, **kw)
+
+
+def attention(q, k, v, *, causal: bool = True, softmax_scale=None,
+              backend: Optional[str] = None, **kw) -> jnp.ndarray:
+    return get_impl("attention", backend)(q, k, v, causal=causal,
+                                          softmax_scale=softmax_scale, **kw)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the "portable C++" lowering).
+
+Each function here is the numerics contract: kernels in this package must
+match these to tight tolerances across shape/dtype sweeps (see
+tests/test_kernels_*.py).  They are also the ``ref`` backend registered in
+:mod:`repro.core.registry` — portability means these always work, on any
+XLA backend, with no Pallas/Mosaic dependency.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.tables import TableSpec, get_table, table_lookup
+
+__all__ = ["lut_activation_ref", "qmatmul_ref", "flash_attention_ref"]
+
+
+def lut_activation_ref(x: jnp.ndarray, spec: TableSpec) -> jnp.ndarray:
+    """Table-lookup activation: gather from a trace-time constant table."""
+    table = get_table(spec)
+    return table_lookup(x, jnp.asarray(table.np_values), spec.lo, spec.hi,
+                        spec.indexing)
+
+
+def qmatmul_ref(a_data: jnp.ndarray, b_data: jnp.ndarray,
+                a_scale: jnp.ndarray, b_scale: jnp.ndarray,
+                out_dtype=jnp.float32) -> jnp.ndarray:
+    """Quantized matmul oracle: int8 × int8 → int32 accumulate → rescale.
+
+    ``a_data``: (M, K) int8, row scales ``a_scale``: (M, 1) or scalar.
+    ``b_data``: (K, N) int8, col scales ``b_scale``: (1, N) or scalar.
+    Result: (M, N) in ``out_dtype`` ≈ (a_data·a_scale) @ (b_data·b_scale).
+    """
+    acc = jax.lax.dot_general(
+        a_data, b_data, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * a_scale * b_scale).astype(out_dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        bias: Optional[jnp.ndarray] = None,
+                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """Plain attention oracle with f32 softmax accumulation.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0 (GQA).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(d)
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if bias is not None:
+        logits = logits + bias.reshape(b, hkv, group, sq, skv)
+    if causal:
+        # queries are the last sq positions of the skv-long context
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        mask = qpos >= jnp.arange(skv)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,408 @@
+"""Trip-count-aware cost analysis over post-optimization HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts every while-loop BODY
+exactly once (verified empirically: a 16-step ``lax.scan`` over a matmul
+reports 1/16th of the unrolled flops).  Our programs are scan-heavy by
+design — layer stacks, gradient-accumulation microbatches, attention
+chunks — so flops, bytes *and in-loop collectives* would all be
+undercounted by 1–2 orders of magnitude without correction.
+
+Method:
+  pass 1 — build a symbol table: instruction name → result shape (operand
+           references in CPU post-opt HLO are bare ``%name``s);
+  pass 2 — per-computation costs:
+           * dot flops = 2 · result_elements · contracted_elements
+             (contraction sizes from ``lhs_contracting_dims`` + the lhs
+             operand's shape),
+           * elementwise flops = result elements (guard rail; dots and
+             collectives dominate every roofline we report),
+           * bytes = result + operand bytes per instruction, with pure
+             data-movement ops (parameter/tuple/gte/bitcast/copy/reshape/
+             broadcast/transpose) free — approximating TPU fusion,
+           * collective wire bytes under the ring model, replica-group
+             aware;
+  pass 3 — propagate through the call graph: ``while`` bodies scale by
+           ``backend_config.known_trip_count`` (fallback: largest constant
+           in the loop condition), fusions/calls/reduces by 1.
+
+Result: per-device cost of ONE step, loop-corrected.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost", "per_op_breakdown"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*(?:e\dm\d(?:fn)?)?)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*->.*\{\s*$")
+
+_FREE_OPS = frozenset((
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "iota", "reshape",
+    "broadcast", "transpose", "custom-call", "partition-id", "replica-id",
+    "get-dimension-size", "domain", "opt-barrier", "rng-bit-generator",
+))
+
+_ELEMENTWISE = frozenset((
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "tanh", "rsqrt", "sqrt", "power", "log", "negate",
+    "abs", "floor", "ceil", "round-nearest-even", "round-nearest-afz",
+    "compare", "select", "convert", "and", "or", "not", "xor", "sine",
+    "cosine", "clamp", "erf", "exponential-minus-one", "log-plus-one",
+    "sign", "atan2", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite", "reduce-precision",
+))
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+#: op classes that genuinely touch HBM on TPU (everything else is assumed
+#: fused): matmuls, gathers/scatters (embeddings, MoE dispatch, KV-cache
+#: updates), windowed ops, reductions crossing fusion boundaries.
+_MEMORY_OPS = frozenset((
+    "dot", "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "reduce", "reduce-window", "sort", "select-and-scatter", "convolution",
+    "fft", "triangular-solve", "cholesky",
+))
+
+_OP_RE = re.compile(r"=\s*(?:\(.*?\)|[\w\[\],{}]+(?:\s|\{[\d,]*\})*)\s*"
+                    r"([\w\-]+)\(")
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0          # fusion-aware (memory-bound op classes)
+    bytes_all: float = 0.0      # pessimistic: every instruction's IO
+    wire_bytes: float = 0.0
+    collectives: List[Dict] = dataclasses.field(default_factory=list)
+
+    def scaled(self, m: float) -> "HloCost":
+        return HloCost(self.flops * m, self.bytes * m, self.bytes_all * m,
+                       self.wire_bytes * m,
+                       [dict(c, count=c.get("count", 1) * m,
+                             wire_bytes=c["wire_bytes"] * m,
+                             tensor_bytes=c["tensor_bytes"] * m)
+                        for c in self.collectives])
+
+    def add(self, o: "HloCost") -> None:
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.bytes_all += o.bytes_all
+        self.wire_bytes += o.wire_bytes
+        self.collectives.extend(o.collectives)
+
+
+def _nelems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_nelems(dims) * _DTYPE_BYTES.get(dt, 4)
+               for dt, dims in _SHAPE_RE.findall(text))
+
+
+def _result_type_str(line: str) -> str:
+    """The type expression between '=' and the op name's paren."""
+    rhs = line.split("=", 1)[1]
+    m = _OP_RE.search(line)
+    if not m:
+        return rhs
+    idx = rhs.find(m.group(1) + "(")
+    return rhs[:idx] if idx > 0 else rhs
+
+
+def _op_of(line: str) -> Optional[str]:
+    m = _OP_RE.search(line)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str, total: int) -> int:
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{(.*?)\}", line)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        if ids:
+            return len(ids)
+    return total
+
+
+def analyze_hlo(hlo: str, total_devices: int) -> HloCost:
+    # ---- pass 0: computations + symbol table -------------------------------
+    comps: Dict[str, List[str]] = {}
+    shapes: Dict[str, str] = {}      # %name -> result type string
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and not line.startswith(" "):
+            cur = h.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        comps[cur].append(line)
+        nm = _NAME_RE.match(line)
+        if nm:
+            shapes[nm.group(1)] = _result_type_str(line)
+
+    if entry is None:
+        entry = next(iter(comps), None)
+        if entry is None:
+            return HloCost()
+
+    def operand_names(line: str) -> List[str]:
+        op = _op_of(line)
+        if op is None:
+            return []
+        rhs = line.split("=", 1)[1]
+        start = rhs.find(op + "(") + len(op) + 1
+        depth, i = 1, start
+        while i < len(rhs) and depth:
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+            i += 1
+        return _OPERAND_RE.findall(rhs[start:i - 1])
+
+    def dot_flops(line: str) -> float:
+        res_elems = sum(_nelems(d) for _, d in
+                        _SHAPE_RE.findall(_result_type_str(line)))
+        ops = operand_names(line)
+        if not ops:
+            return 0.0
+        lhs_type = shapes.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if not sm:
+            return 0.0
+        lhs_dims = [int(x) for x in sm.group(2).split(",") if x]
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        contracted = 1
+        if cm and cm.group(1):
+            for i in cm.group(1).split(","):
+                if int(i) < len(lhs_dims):
+                    contracted *= lhs_dims[int(i)]
+        return 2.0 * res_elems * contracted
+
+    def line_cost(line: str) -> Tuple[HloCost, Optional[str], bool]:
+        op = _op_of(line)
+        cost = HloCost()
+        if op is None:
+            return cost, None, False
+
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES:
+            t_bytes = _shapes_bytes(_result_type_str(line))
+            if op.endswith("-start"):
+                t_bytes //= 2           # (operand, result) tuple
+            kind = "all-to-all" if base == "ragged-all-to-all" else base
+            n = max(_group_size(line, total_devices), 1)
+            ring = (n - 1) / n if n > 1 else 0.0
+            factor = {"all-reduce": 2 * ring, "all-gather": ring,
+                      "reduce-scatter": ring, "all-to-all": ring,
+                      "collective-permute": 1.0}[kind]
+            cost.wire_bytes = t_bytes * factor
+            cost.bytes = 2.0 * t_bytes
+            cost.bytes_all = 2.0 * t_bytes
+            cost.collectives.append({"kind": kind, "tensor_bytes": t_bytes,
+                                     "group": n, "count": 1,
+                                     "wire_bytes": cost.wire_bytes})
+            return cost, None, False
+        if op.endswith("-done") or op in _FREE_OPS:
+            return cost, None, False
+
+        if op == "while":
+            b = _BODY_RE.search(line)
+            return cost, (b.group(1) if b else None), True
+
+        callee = None
+        if op in ("fusion", "call", "conditional", "map", "reduce",
+                  "scatter", "sort", "reduce-window", "select-and-scatter",
+                  "reduce-scatter", "async-start"):
+            cm = _CALL_RE.search(line)
+            callee = cm.group(1) if cm else None
+
+        # IO bytes: result + operands (via symbol table).  ``bytes``
+        # (the roofline memory term) only charges memory-bound op
+        # classes — elementwise chains are assumed fused into their
+        # producers/consumers, as the TPU compiler does; ``bytes_all``
+        # keeps the pessimistic every-instruction total.
+        res_b = _shapes_bytes(_result_type_str(line))
+        opds = operand_names(line)
+        opd_b = sum(_shapes_bytes(shapes.get(o, "")) for o in opds)
+        cost.bytes_all = float(res_b + opd_b)
+        if op in ("dynamic-slice", "gather"):
+            # reads only the sliced/gathered region, not the source buffer
+            cost.bytes = 2.0 * res_b
+        elif op in ("dynamic-update-slice", "scatter"):
+            # read-modify-write of the update region only (in-place on TPU)
+            upd = (_shapes_bytes(shapes.get(opds[1], ""))
+                   if len(opds) > 1 else res_b)
+            if op == "scatter" and len(opds) > 2:
+                upd = _shapes_bytes(shapes.get(opds[-1], ""))
+            cost.bytes = 2.0 * upd
+        elif op in _MEMORY_OPS:
+            cost.bytes = float(res_b + opd_b)
+        if op == "dot":
+            cost.flops = dot_flops(line)
+        elif op in _ELEMENTWISE:
+            cost.flops = float(sum(_nelems(d) for _, d in
+                                   _SHAPE_RE.findall(_result_type_str(line))))
+        return cost, callee, False
+
+    memo: Dict[str, HloCost] = {}
+
+    def cost_of(name: str, stack=()) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return HloCost()
+        total = HloCost()
+        for line in comps[name]:
+            c, callee, is_while = line_cost(line)
+            total.add(c)
+            if callee is not None and is_while:
+                trips = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cm = _COND_RE.search(line)
+                    if cm and cm.group(1) in comps:
+                        consts = [int(x) for l in comps[cm.group(1)]
+                                  for x in _CONST_RE.findall(l)]
+                        trips = max(consts or [1])
+                total.add(cost_of(callee, stack + (name,)).scaled(trips))
+            elif callee is not None:
+                total.add(cost_of(callee, stack + (name,)))
+        memo[name] = total
+        return total
+
+    result = cost_of(entry)
+    agg: Dict[str, Dict] = {}
+    for c in result.collectives:
+        a = agg.setdefault(c["kind"], {"kind": c["kind"], "count": 0,
+                                       "tensor_bytes": 0.0,
+                                       "wire_bytes": 0.0})
+        a["count"] += c.get("count", 1)
+        a["tensor_bytes"] += c["tensor_bytes"]
+        a["wire_bytes"] += c["wire_bytes"]
+    result.collectives = sorted(agg.values(), key=lambda a: -a["wire_bytes"])
+    return result
+
+
+def per_op_breakdown(hlo: str, total_devices: int, top: int = 12):
+    """Loop-corrected (bytes, flops) per op kind + the largest single
+    contributors — the profiling view the §Perf loop reads."""
+    from collections import defaultdict
+    comps: Dict[str, List[str]] = {}
+    shapes: Dict[str, str] = {}
+    cur = None
+    for line in hlo.splitlines():
+        h = _HEADER_RE.match(line)
+        if h and not line.startswith(" "):
+            cur = h.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        comps[cur].append(line)
+        nm = _NAME_RE.match(line)
+        if nm:
+            shapes[nm.group(1)] = _result_type_str(line)
+
+    m = re.search(r"^ENTRY\s+(%[\w.\-]+)", hlo, re.M)
+    if not m:
+        return {}, []
+    bykind = defaultdict(lambda: [0.0, 0.0])   # op -> [bytes, flops]
+    biggest = []
+
+    def op_names(line, op):
+        rhs = line.split("=", 1)[1]
+        start = rhs.find(op + "(") + len(op) + 1
+        depth, i = 1, start
+        while i < len(rhs) and depth:
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+            i += 1
+        return _OPERAND_RE.findall(rhs[start:i - 1])
+
+    def walk(name, mult, stack=()):
+        if name not in comps or name in stack:
+            return
+        for line in comps[name]:
+            op = _op_of(line)
+            if op is None:
+                continue
+            if op == "while":
+                b = _BODY_RE.search(line)
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                if b:
+                    walk(b.group(1), mult * trips, stack + (name,))
+                continue
+            cm = _CALL_RE.search(line)
+            if cm and op in ("fusion", "call", "conditional", "map",
+                             "reduce", "scatter", "sort"):
+                walk(cm.group(1), mult, stack + (name,))
+            res = _shapes_bytes(_result_type_str(line))
+            opds = op_names(line, op)
+            if op in ("dynamic-slice", "gather"):
+                v = 2.0 * res
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = (_shapes_bytes(shapes.get(opds[1], ""))
+                       if len(opds) > 1 else res)
+                if op == "scatter" and len(opds) > 2:
+                    upd = _shapes_bytes(shapes.get(opds[-1], ""))
+                v = 2.0 * upd
+            elif op.replace("-start", "") in _COLLECTIVES:
+                v = 2.0 * res
+                op = "collective:" + op.replace("-start", "")
+            elif op in _MEMORY_OPS:
+                v = float(res + sum(_shapes_bytes(shapes.get(o, ""))
+                                    for o in opds))
+            else:
+                continue
+            bykind[op][0] += mult * v
+            if op == "dot":
+                bykind[op][1] += mult * 0  # flops tracked elsewhere
+            if mult * v > 0.2e9:
+                biggest.append((mult * v, op, line.strip()[:200]))
+    walk(m.group(1), 1.0)
+    table = sorted(((k, v[0]) for k, v in bykind.items()),
+                   key=lambda kv: -kv[1])
+    return dict(table), sorted(biggest, reverse=True)[:top]

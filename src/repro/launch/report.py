@@ -1,0 +1,95 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSON artifacts.
+
+Usage:  PYTHONPATH=src python -m repro.launch.report [--dir artifacts/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load(dirname):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        cells.append(json.load(open(fn)))
+    return cells
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def roofline_table(cells, mesh="single", tag=""):
+    rows = ["| arch | shape | compute | memory | collective | bottleneck "
+            "| MODEL/HLO flops | MFU* | per-chip HBM |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        if c.get("mesh") != mesh or c.get("tag", "") != tag:
+            continue
+        if c["status"] == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | "
+                        f"skipped | — | — | — |")
+            continue
+        if c["status"] != "ok":
+            rows.append(f"| {c['arch']} | {c['shape']} | ERROR | | | | | | |")
+            continue
+        mem = c.get("memory_analysis") or {}
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0)) / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(c['compute_s'])} | "
+            f"{fmt_s(c['memory_s'])} | {fmt_s(c['collective_s'])} | "
+            f"**{c['bottleneck']}** | {c['useful_flops_fraction']:.2f} | "
+            f"{c['mfu']:.4f} | {hbm:.1f} GB |")
+    return "\n".join(rows)
+
+
+def collective_detail(cells, picks):
+    out = []
+    for c in cells:
+        key = (c["arch"], c["shape"], c.get("mesh"))
+        if key not in picks or c["status"] != "ok":
+            continue
+        out.append(f"**{c['arch']} × {c['shape']} × {c['mesh']}** "
+                   f"(wire {c['wire_bytes_per_chip'] / 1e9:.1f} GB/chip):")
+        for col in c.get("collectives", [])[:5]:
+            out.append(f"  - {col['kind']}: n={col['count']:.0f}, "
+                       f"tensor {col['tensor_bytes'] / 1e9:.2f} GB, "
+                       f"wire {col['wire_bytes'] / 1e9:.2f} GB")
+    return "\n".join(out)
+
+
+def summary(cells):
+    ok = [c for c in cells if c["status"] == "ok"]
+    sk = [c for c in cells if c["status"] == "skipped"]
+    er = [c for c in cells if c["status"] == "error"]
+    by_bn = defaultdict(int)
+    for c in ok:
+        by_bn[c["bottleneck"]] += 1
+    return (f"{len(ok)} compiled, {len(sk)} skipped (documented), "
+            f"{len(er)} errors; bottlenecks: {dict(by_bn)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    cells = load(args.dir)
+    cells = [c for c in cells if c.get("tag", "") == args.tag]
+    print(summary(cells))
+    print()
+    print(roofline_table(cells, args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

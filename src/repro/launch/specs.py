@@ -1,0 +1,122 @@
+"""Shape plans and ShapeDtypeStruct input specs for every dry-run cell.
+
+The assigned shape grid (per-arch applicability is enforced here and the
+skips documented in DESIGN.md §Arch-applicability):
+
+    train_4k      train_step   seq 4096,    global_batch 256
+    prefill_32k   prefill      seq 32768,   global_batch 32
+    decode_32k    serve_step   kv 32768,    global_batch 128
+    long_500k     serve_step   kv 524288,   global_batch 1   (ssm/hybrid only)
+
+``input_specs`` returns weak-type-correct, shardable stand-ins — no device
+allocation ever happens for the full configs (init/caches go through
+``jax.eval_shape``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..data.pipeline import batch_struct
+from ..models.api import get_family
+from ..models.config import ModelConfig
+
+__all__ = ["ShapePlan", "SHAPES", "applicable", "input_specs",
+           "state_struct", "cache_struct", "microbatches_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePlan:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapePlan] = {
+    "train_4k": ShapePlan("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapePlan("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapePlan("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapePlan("long_500k", "decode", 524288, 1),
+}
+
+#: archs whose state is sub-quadratic in context (run long_500k)
+_LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    plan = SHAPES[shape]
+    if plan.name == "long_500k" and cfg.family not in _LONG_OK_FAMILIES:
+        return False, ("pure full-attention arch: 524k dense KV decode is "
+                       "out of regime (skip per brief; DESIGN.md)")
+    return True, ""
+
+
+#: (arch-name, shape) -> gradient-accumulation microbatches for train_4k.
+#: Sized so live activations fit 16 GB/chip HBM next to params+optimizer
+#: (napkin math in EXPERIMENTS.md §Dry-run).
+_MICROBATCHES = {
+    "deepseek-v2-236b": 16,
+    "command-r-35b": 8,
+    "glm4-9b": 4,
+    "yi-6b": 4,
+    "llama-3.2-vision-11b": 4,
+    "gemma-2b": 2,
+    "olmoe-1b-7b": 2,
+}
+
+
+def microbatches_for(cfg: ModelConfig, shape: str, dp: int = 16) -> int:
+    """Gradient-accumulation count, capped so every microbatch still
+    spans the full data-parallel group (B/µb ≥ dp — otherwise the batch
+    dimension stops sharding and activations replicate across ``dp``,
+    measured as an 8× per-chip compute blowup on the 2-pod mesh)."""
+    if SHAPES[shape].kind != "train":
+        return 1
+    mb = _MICROBATCHES.get(cfg.name, 1)
+    return max(1, min(mb, SHAPES[shape].batch // max(dp, 1)))
+
+
+def state_struct(cfg: ModelConfig, *, dtype=jnp.float32):
+    """ShapeDtypeStruct pytree of the full train state (no allocation)."""
+    from ..train.step import init_state
+    return jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def params_struct(cfg: ModelConfig, *, dtype=jnp.float32):
+    fam = get_family(cfg)
+    return jax.eval_shape(
+        lambda: fam.init(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    fam = get_family(cfg)
+    return jax.eval_shape(
+        lambda: fam.init_cache(cfg, batch, max_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, dtype=jnp.bfloat16):
+    """Model-input ShapeDtypeStructs for one (arch × shape) cell.
+
+    train  -> {"batch": …}
+    prefill-> {"batch": …, "cache": …}
+    decode -> {"tokens": (B,1), "pos": (B,), "cache": …}
+    """
+    plan = SHAPES[shape]
+    act_dtype = jnp.bfloat16 if dtype == jnp.int8 else dtype
+    if plan.kind == "train":
+        return {"batch": batch_struct(cfg, plan.batch, plan.seq, act_dtype)}
+    if plan.kind == "prefill":
+        return {"batch": batch_struct(cfg, plan.batch, plan.seq, act_dtype),
+                "cache": cache_struct(cfg, plan.batch, plan.seq, dtype)}
+    # decode: one new token against a seq-long cache
+    return {"tokens": jax.ShapeDtypeStruct((plan.batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((plan.batch,), jnp.int32),
+            "cache": cache_struct(cfg, plan.batch, plan.seq, dtype)}

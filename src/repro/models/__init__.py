@@ -1,0 +1,5 @@
+"""Model families assembled from the nn substrate."""
+
+from .config import ModelConfig, MoEConfig
+
+__all__ = ["ModelConfig", "MoEConfig"]

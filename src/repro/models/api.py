@@ -1,0 +1,55 @@
+"""Family registry: uniform interface over the five model families.
+
+Every family module exposes::
+
+    init(rng, cfg, *, dtype)                        -> params
+    loss(params, batch, cfg, ctx)                   -> (scalar, metrics)
+    init_cache(cfg, batch, max_len, dtype)          -> cache pytree
+    prefill(params, <tokens|batch>, cache, cfg, ctx)-> (last_logits, cache)
+    decode_step(params, tokens, cache, pos, cfg, ctx)-> (logits, cache)
+
+``batch`` layouts (see repro.data): lm/ssm/hybrid use {"tokens",
+"labels"}; encdec adds "enc_input"; vlm adds "img_embed".
+"""
+
+from __future__ import annotations
+
+from types import ModuleType
+
+from . import encdec, hybrid, lm, ssm_lm, vlm
+from .config import ModelConfig
+
+__all__ = ["get_family", "FAMILIES"]
+
+FAMILIES = {
+    "lm": lm,
+    "encdec": encdec,
+    "ssm": ssm_lm,
+    "hybrid": hybrid,
+    "vlm": vlm,
+}
+
+
+def get_family(cfg: ModelConfig) -> ModuleType:
+    try:
+        return FAMILIES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r} "
+                       f"(have {sorted(FAMILIES)})") from None
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx):
+    """Family-dispatched training loss."""
+    fam = get_family(cfg)
+    return fam.loss(params, batch, cfg, ctx)
+
+
+def prefill_fn(params, batch, cache, cfg: ModelConfig, ctx):
+    fam = get_family(cfg)
+    if cfg.family in ("encdec", "vlm"):
+        return fam.prefill(params, batch, cache, cfg, ctx)
+    return fam.prefill(params, batch["tokens"], cache, cfg, ctx)
+
+
+def decode_fn(params, tokens, cache, pos, cfg: ModelConfig, ctx):
+    return get_family(cfg).decode_step(params, tokens, cache, pos, cfg, ctx)

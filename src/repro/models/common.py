@@ -1,0 +1,50 @@
+"""Shared model utilities: losses, position tables."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["cross_entropy", "sinusoidal_table"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  *, z_loss: float = 1e-4):
+    """Token-level CE with optional z-loss.  labels < 0 are masked.
+
+    logits: (B, S, V) — V may be sharded over the model axis: the label
+    log-prob is extracted with a one-hot contraction (shards cleanly as a
+    masked reduce + psum) instead of ``take_along_axis``, whose gather
+    forces GSPMD to all-gather the full vocab axis.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), lf.shape[-1],
+                            dtype=jnp.float32)
+    from ..dist.constrain import constrain
+    onehot = constrain(onehot, "dp", None, "tp")
+    ll = jnp.einsum("bsv,bsv->bs", lf, onehot)
+    nll = lse - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    if z_loss:
+        loss = loss + z_loss * jnp.sum(jnp.square(lse) * mask) / denom
+    acc = jnp.sum((jnp.argmax(lf, -1) == labels) * mask) / denom
+    return loss, {"nll": jnp.sum(nll * mask) / denom, "accuracy": acc,
+                  "tokens": jnp.sum(mask)}
+
+
+@functools.lru_cache(maxsize=16)
+def sinusoidal_table(length: int, d: int) -> np.ndarray:
+    """Trace-time constant sinusoidal position table (whisper encoder)."""
+    pos = np.arange(length, dtype=np.float64)[:, None]
+    dim = np.arange(0, d, 2, dtype=np.float64)[None, :]
+    inv = np.exp(-np.log(10000.0) * dim / d)
+    tbl = np.zeros((length, d), np.float32)
+    tbl[:, 0::2] = np.sin(pos * inv)
+    tbl[:, 1::2] = np.cos(pos * inv)
+    return tbl

@@ -1,0 +1,203 @@
+"""Unified architecture configuration (the ``--arch`` contract).
+
+One frozen dataclass covers all five families (lm / encdec / ssm / hybrid /
+vlm); family-specific sections are optional sub-configs.  Every assigned
+architecture in ``repro.configs`` instantiates exactly one of these, and
+``smoke()`` derives the reduced-width variant used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from ..nn.attention import AttnDims, MLADims
+from ..nn.ssm import SSMDims
+
+__all__ = ["MoEConfig", "ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # deepseek: always-on shared experts
+    first_k_dense: int = 0       # deepseek: leading dense layers
+    renormalize: bool = True
+    capacity_factor: float = 1.25
+    routed_scale: float = 1.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # lm | encdec | ssm | hybrid | vlm
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention (unused for pure ssm)
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    # dense FFN
+    d_ff: int = 0
+    mlp_act: str = "silu"        # silu | gelu (gated) | gelu_plain (fc1/fc2)
+    mlp_gated: bool = True
+    # block structure
+    norm_type: str = "rmsnorm"   # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    norm_plus_one: bool = False  # gemma (1 + scale)
+    parallel_block: bool = False # command-r
+    qkv_bias: bool = False       # glm4
+    # embeddings / positions
+    tie_embeddings: bool = True
+    embed_scale: bool = False    # gemma √d scaling
+    pos_type: str = "rope"       # rope | learned | sinusoidal
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0   # glm4: 0.5
+    max_position: int = 1 << 19  # learned-pos table size / rope max
+    # family sections
+    attn_kind: str = "gqa"       # gqa | mla
+    mla: Optional[MLADims] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMDims] = None
+    # hybrid (zamba2): one shared transformer block applied every k layers
+    shared_attn_every: int = 0
+    # vlm (llama-vision): cross-attn block every k layers; stub image tokens
+    cross_attn_every: int = 0
+    n_img_tokens: int = 1024
+    # encdec (whisper)
+    enc_layers: int = 0
+    enc_len_cap: int = 4096      # stub frontend: frames per example cap
+    # training
+    remat: str = "full"          # none | dots | full
+    scan_layers: bool = True
+
+    # ---- derived ----------------------------------------------------------
+    def attn_dims(self, *, causal: bool = True, use_rope: bool = True
+                  ) -> AttnDims:
+        return AttnDims(d_model=self.d_model, n_heads=self.n_heads,
+                        n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+                        rope_theta=self.rope_theta,
+                        rope_fraction=self.rope_fraction,
+                        use_rope=use_rope and self.pos_type == "rope",
+                        qkv_bias=self.qkv_bias, causal=causal)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (drives 6·N·D in the roofline)."""
+        d, v = self.d_model, self.vocab
+        total = v * d * (1 if self.tie_embeddings else 2)
+        if self.pos_type == "learned":
+            total += self.max_position * d
+
+        def dense_ffn(ff):
+            return d * ff * (3 if self.mlp_gated else 2)
+
+        def attn_params():
+            if self.attn_kind == "mla":
+                m = self.mla
+                return (d * m.q_lora_rank + m.q_lora_rank * self.n_heads * m.qk_dim
+                        + d * (m.kv_lora_rank + m.qk_rope_dim)
+                        + m.kv_lora_rank * self.n_heads *
+                        (m.qk_nope_dim + m.v_head_dim)
+                        + self.n_heads * m.v_head_dim * d)
+            hq = self.n_heads * self.head_dim
+            hkv = self.n_kv_heads * self.head_dim
+            return d * hq + 2 * d * hkv + hq * d
+
+        if self.family == "ssm" or self.family == "hybrid":
+            s = self.ssm
+            per = (d * (2 * s.d_inner + 2 * s.n_groups * s.d_state + s.n_heads)
+                   + s.d_conv * s.conv_dim + s.d_inner * d + 3 * s.n_heads
+                   + s.d_inner)
+            total += self.n_layers * per
+            if self.family == "hybrid" and self.shared_attn_every:
+                total += attn_params() + dense_ffn(self.d_ff)
+            return total
+
+        per_dense = attn_params() + dense_ffn(self.d_ff)
+        if self.moe is not None:
+            m = self.moe
+            per_moe = (attn_params() + d * m.n_experts
+                       + m.n_experts * 3 * d * m.d_ff_expert
+                       + (3 * d * m.d_ff_expert * m.n_shared))
+            n_moe = self.n_layers - m.first_k_dense
+            total += m.first_k_dense * per_dense + n_moe * per_moe
+        else:
+            total += self.n_layers * per_dense
+        if self.family == "encdec":
+            total += self.enc_layers * per_dense
+            total += self.n_layers * (2 * d * self.n_kv_heads * self.head_dim
+                                      + 2 * d * self.n_heads * self.head_dim)
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            n_self = self.n_layers - n_cross
+            total = (v * d + n_self * per_dense
+                     + n_cross * (attn_params() + dense_ffn(self.d_ff)))
+        return total
+
+    def active_params(self) -> int:
+        """Activated parameters per token (MoE: top-k + shared only)."""
+        if self.moe is None:
+            return self.n_params()
+        m = self.moe
+        d = self.d_model
+        full = self.n_params()
+        n_moe = self.n_layers - m.first_k_dense
+        inactive = n_moe * (m.n_experts - m.top_k) * 3 * d * m.d_ff_expert
+        return full - inactive
+
+    def flop_params(self) -> int:
+        """Active params that participate in matmuls (drives 6·N·D).
+
+        Input-embedding tables are gathers, not matmuls — excluded.  A
+        *tied* table still does the unembed matmul, so it counts once
+        (i.e. n_params already counts it once and we keep it).  Learned
+        position tables are gathers — excluded.
+        """
+        n = self.active_params()
+        if not self.tie_embeddings:
+            n -= self.vocab * self.d_model      # gather-only input table
+        if self.pos_type == "learned":
+            n -= self.max_position * self.d_model
+        return n
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced config of the same family for CPU smoke tests."""
+        kw = dict(
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2),
+            d_model=128,
+            vocab=512,
+            d_ff=256 if self.d_ff else 0,
+            max_position=4096,
+            enc_layers=min(self.enc_layers, 2),
+            n_img_tokens=16,
+            enc_len_cap=64,
+            remat="none",
+        )
+        if self.n_heads:
+            kw.update(n_heads=4, n_kv_heads=max(1, 4 * self.n_kv_heads
+                                                // max(self.n_heads, 1)),
+                      head_dim=32)
+        if self.mla is not None:
+            kw["mla"] = MLADims(d_model=128, n_heads=4, q_lora_rank=64,
+                                kv_lora_rank=32, qk_nope_dim=32,
+                                qk_rope_dim=16, v_head_dim=32)
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=8, top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64, n_shared=min(self.moe.n_shared, 1),
+                first_k_dense=min(self.moe.first_k_dense, 1))
+        if self.ssm is not None:
+            kw["ssm"] = SSMDims(d_model=128, d_state=16, head_dim=32,
+                                expand=2, n_groups=1, d_conv=4, chunk=16)
+        if self.shared_attn_every:
+            kw["n_layers"] = 4
+            kw["shared_attn_every"] = 2
+        if self.cross_attn_every:
+            kw["n_layers"] = 4
+            kw["cross_attn_every"] = 2
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,169 @@
+"""Encoder–decoder backbone (whisper-base).
+
+Per the brief the audio frontend is a STUB: ``batch["enc_input"]`` carries
+precomputed frame embeddings (B, S_enc, D) — the conv1d feature extractor
+is outside scope.  The encoder adds a sinusoidal position table (trace-time
+constant) and runs non-causal self-attention; the decoder uses learned
+positions, causal self-attention and per-layer cross-attention.
+
+Serving: prefill computes cross K/V once per layer (cached); decode scans
+self-cache + cross-cache alongside the stacked decoder params.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import (gqa_apply, gqa_cache_spec, gqa_init,
+                            gqa_project_kv)
+from ..nn.blocks import (dense_block_apply, dense_block_init, mlp_apply,
+                         mlp_init, norm_apply, norm_init, scan_apply,
+                         stack_init)
+from ..nn.context import DEFAULT_CTX, QuantContext
+from ..nn.embedding import embed, embedding_init, unembed
+from .common import cross_entropy, sinusoidal_table
+from .config import ModelConfig
+
+__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+
+
+def _dec_block_init(rng, cfg: ModelConfig, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": norm_init(cfg), "ln_x": norm_init(cfg), "ln2": norm_init(cfg),
+        "self": gqa_init(ks[0], cfg.attn_dims(causal=True), dtype=dtype),
+        "cross": gqa_init(ks[1], cfg.attn_dims(causal=False), dtype=dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated,
+                        dtype=dtype),
+    }
+
+
+def _dec_block_apply(p, x, enc, cfg: ModelConfig, ctx, *, cache=None,
+                     cache_pos=None, cross_kv=None):
+    a, new_c = gqa_apply(p["self"], norm_apply(cfg, p["ln1"], x),
+                         cfg.attn_dims(causal=True), ctx, cache=cache,
+                         cache_pos=cache_pos, path="dec/self")
+    x = x + a
+    c, _ = gqa_apply(p["cross"], norm_apply(cfg, p["ln_x"], x),
+                     cfg.attn_dims(causal=False), ctx,
+                     kv_input=enc if cross_kv is None else None,
+                     cached_kv=cross_kv, path="dec/cross")
+    x = x + c
+    m = mlp_apply(p["mlp"], norm_apply(cfg, p["ln2"], x), cfg.mlp_act, ctx,
+                  path="dec/mlp")
+    return x + m, new_c
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    return {
+        "embed": embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dtype),
+        "pos": (jax.random.normal(ks[1], (cfg.max_position, cfg.d_model),
+                                  jnp.float32) * 0.01).astype(dtype),
+        "encoder": stack_init(ks[2], cfg.enc_layers,
+                              lambda k: dense_block_init(k, cfg, causal=False,
+                                                         dtype=dtype)),
+        "enc_norm": norm_init(cfg),
+        "decoder": stack_init(ks[3], cfg.n_layers,
+                              lambda k: _dec_block_init(k, cfg, dtype)),
+        "dec_norm": norm_init(cfg),
+    }
+
+
+def encode(params, enc_input: jnp.ndarray, cfg: ModelConfig,
+           ctx: QuantContext = DEFAULT_CTX):
+    s = enc_input.shape[1]
+    pos = jnp.asarray(sinusoidal_table(s, cfg.d_model))
+    x = enc_input.astype(ctx.compute_dtype) + pos.astype(ctx.compute_dtype)
+
+    def body(p_l, x, _):
+        x2, _ = dense_block_apply(p_l, x, cfg, ctx, causal=False)
+        return x2, jnp.zeros(()), jnp.zeros(())
+
+    x, _, _ = scan_apply(params["encoder"], x, body, remat=cfg.remat,
+                         unroll=ctx.scan_unroll)
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def _decode(params, tokens, enc, cfg, ctx, *, cache=None, cache_pos=None,
+            cross_kv=None):
+    b, s = tokens.shape
+    start = cache_pos if cache_pos is not None else jnp.zeros((b,), jnp.int32)
+    pos_ids = start[:, None] + jnp.arange(s)[None, :]
+    x = embed(params["embed"], tokens, ctx)
+    x = x + jnp.take(params["pos"].astype(x.dtype),
+                     jnp.minimum(pos_ids, cfg.max_position - 1), axis=0)
+
+    def body(p_l, x, extras):
+        cache_l, ckv_l = extras
+        x2, new_c = _dec_block_apply(p_l, x, enc, cfg, ctx, cache=cache_l,
+                                     cache_pos=cache_pos, cross_kv=ckv_l)
+        return x2, new_c, jnp.zeros(())
+
+    per_layer = (cache, cross_kv)
+    x, new_cache, _ = scan_apply(params["decoder"], x, body,
+                                 remat=cfg.remat if cache is None else "none",
+                                 unroll=ctx.scan_unroll, per_layer=per_layer)
+    x = norm_apply(cfg, params["dec_norm"], x)
+    from ..dist.constrain import constrain
+    logits = constrain(unembed(params["embed"], x, ctx), "dp", None, "tp")
+    return logits, new_cache
+
+
+def forward(params, batch, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    enc = encode(params, batch["enc_input"], cfg, ctx)
+    logits, _ = _decode(params, batch["tokens"], enc, cfg, ctx)
+    return logits
+
+
+def loss(params, batch, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    logits = forward(params, batch, cfg, ctx)
+    ce, metrics = cross_entropy(logits, batch["labels"])
+    metrics["loss"] = ce
+    return ce, metrics
+
+
+# -- serving -------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    dims = cfg.attn_dims()
+    enc_len = min(cfg.enc_len_cap, max_len)
+
+    def one(_):
+        return {"self": gqa_cache_spec(dims, batch, max_len, dtype),
+                "cross_kv": (jnp.zeros((batch, dims.n_kv_heads, enc_len,
+                                        dims.head_dim), dtype),) * 2}
+
+    c = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    return {"layers": {"self": c["self"]},
+            "cross_kv": c["cross_kv"]}
+
+
+def prefill(params, batch, cache, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX):
+    enc = encode(params, batch["enc_input"], cfg, ctx)
+    dims = cfg.attn_dims(causal=False)
+
+    def proj(p_l):
+        return gqa_project_kv(p_l["cross"], enc, dims, ctx)
+
+    kv = jax.vmap(proj)(params["decoder"])              # (L, B, Hkv, Se, Dh)
+    kv = tuple(t.astype(cache["cross_kv"][0].dtype) for t in kv)
+    b = batch["tokens"].shape[0]
+    logits, new_self = _decode(params, batch["tokens"], None, cfg, ctx,
+                               cache=cache["layers"]["self"],
+                               cache_pos=jnp.zeros((b,), jnp.int32),
+                               cross_kv=kv)
+    return logits[:, -1:], {"layers": {"self": new_self}, "cross_kv": kv}
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
+                ctx: QuantContext = DEFAULT_CTX):
+    logits, new_self = _decode(params, tokens, None, cfg, ctx,
+                               cache=cache["layers"]["self"], cache_pos=pos,
+                               cross_kv=cache["cross_kv"])
+    return logits, {"layers": {"self": new_self},
+                    "cross_kv": cache["cross_kv"]}

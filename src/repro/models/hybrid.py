@@ -1,0 +1,142 @@
+"""Hybrid SSM + shared-attention model (zamba2-1.2b).
+
+Zamba2's signature: a *single* shared transformer block (attention + MLP)
+whose parameters are re-applied every ``shared_attn_every`` Mamba-2 layers.
+The stack is therefore grouped: ``G`` groups of (scan over k mamba layers →
+shared block), plus trailing mamba layers.  Each shared-block *application
+point* gets its own KV cache during decode (weights shared, state not).
+
+Deviation from upstream (documented DESIGN.md): zamba2 concatenates the
+original embedding to the shared-block input and uses per-application LoRA
+deltas; we use a plain residual stream and exact weight sharing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import gqa_cache_spec
+from ..nn.blocks import (dense_block_apply, dense_block_init,
+                         mamba_block_apply, mamba_block_init, norm_apply,
+                         norm_init, scan_apply, stack_init)
+from ..nn.context import DEFAULT_CTX, QuantContext
+from ..nn.embedding import embed, embedding_init, unembed
+from ..nn.ssm import mamba2_state_spec
+from .common import cross_entropy
+from .config import ModelConfig
+
+__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+
+
+def _group_structure(cfg: ModelConfig):
+    """(n_groups, group_size, n_tail) over the mamba layers."""
+    k = cfg.shared_attn_every
+    n_groups = cfg.n_layers // k
+    return n_groups, k, cfg.n_layers - n_groups * k
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    n_groups, k, tail = _group_structure(cfg)
+    params = {
+        "embed": embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dtype),
+        "groups": stack_init(
+            ks[1], n_groups,
+            lambda kk: stack_init(kk, k,
+                                  lambda k2: mamba_block_init(k2, cfg,
+                                                              dtype=dtype))),
+        "shared": dense_block_init(ks[2], cfg, dtype=dtype),
+        "final_norm": norm_init(cfg),
+    }
+    if tail:
+        params["tail"] = stack_init(
+            ks[3], tail, lambda kk: mamba_block_init(kk, cfg, dtype=dtype))
+    return params
+
+
+def _mamba_body(cfg, ctx, decode):
+    def body(p_l, x, state_l):
+        x2, new_s = mamba_block_apply(p_l, x, cfg, ctx, state=state_l,
+                                      decode=decode)
+        return x2, new_s, jnp.zeros(())
+    return body
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX,
+            *, cache=None, cache_pos=None, decode: bool = False):
+    """cache = {"ssm": {"groups": (G,k,...), "tail": ...},
+    "attn": stacked (G, ...) KV caches for the shared-block applications}."""
+    n_groups, k, tail = _group_structure(cfg)
+    x = embed(params["embed"], tokens, ctx)
+    remat = cfg.remat if not decode else "none"
+    body = _mamba_body(cfg, ctx, decode)
+
+    new_ssm_groups, new_attn = [], []
+    for g in range(n_groups):
+        p_g = jax.tree_util.tree_map(lambda t: t[g], params["groups"])
+        s_g = (jax.tree_util.tree_map(lambda t: t[g], cache["ssm"]["groups"])
+               if cache is not None else None)
+        x, ns, _ = scan_apply(p_g, x, body, remat=remat,
+                              unroll=ctx.scan_unroll, per_layer=s_g)
+        new_ssm_groups.append(ns)
+        c_g = (jax.tree_util.tree_map(lambda t: t[g], cache["attn"])
+               if cache is not None else None)
+        x, nc = dense_block_apply(params["shared"], x, cfg, ctx, cache=c_g,
+                                  cache_pos=cache_pos)
+        new_attn.append(nc)
+    new_tail = None
+    if tail:
+        s_t = cache["ssm"]["tail"] if cache is not None else None
+        x, new_tail, _ = scan_apply(params["tail"], x, body, remat=remat,
+                                    unroll=ctx.scan_unroll, per_layer=s_t)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    from ..dist.constrain import constrain
+    logits = constrain(unembed(params["embed"], x, ctx), "dp", None, "tp")
+    new_cache = None
+    if cache is not None:
+        stack = lambda ts: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *ts)
+        new_cache = {"ssm": {"groups": stack(new_ssm_groups),
+                             "tail": new_tail},
+                     "attn": stack(new_attn)}
+    return logits, new_cache
+
+
+def loss(params, batch, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    logits, _ = forward(params, batch["tokens"], cfg, ctx)
+    ce, metrics = cross_entropy(logits, batch["labels"])
+    metrics["loss"] = ce
+    return ce, metrics
+
+
+# -- serving -------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    n_groups, k, tail = _group_structure(cfg)
+    one_ssm = lambda _: mamba2_state_spec(cfg.ssm, batch, jnp.float32)
+    groups = jax.vmap(lambda _: jax.vmap(one_ssm)(jnp.arange(k)))(
+        jnp.arange(n_groups))
+    attn = jax.vmap(lambda _: gqa_cache_spec(cfg.attn_dims(), batch, max_len,
+                                             dtype))(jnp.arange(n_groups))
+    return {"ssm": {"groups": groups,
+                    "tail": (jax.vmap(one_ssm)(jnp.arange(tail))
+                             if tail else None)},
+            "attn": attn}
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX):
+    b = tokens.shape[0]
+    logits, new_cache = forward(params, tokens, cfg, ctx, cache=cache,
+                                cache_pos=jnp.zeros((b,), jnp.int32),
+                                decode=False)
+    return logits[:, -1:], new_cache
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
+                ctx: QuantContext = DEFAULT_CTX):
+    logits, new_cache = forward(params, tokens, cfg, ctx, cache=cache,
+                                cache_pos=pos, decode=True)
+    return logits, new_cache

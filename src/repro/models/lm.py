@@ -1,0 +1,151 @@
+"""Decoder-only language models: dense (yi/gemma/glm4/command-r) and MoE
+(deepseek-v2 with MLA + shared experts, olmoe).
+
+The layer stack is organised as (optional) leading dense layers followed by
+the homogeneous body — each run of identical blocks is one ``lax.scan``
+over stacked params, so the HLO is depth-independent.  Decode maintains a
+per-layer KV cache scanned alongside the params (MLA uses the latent cache;
+GQA the standard (B, Hkv, S, Dh) pair).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import gqa_cache_spec, mla_cache_spec
+from ..nn.blocks import (dense_block_apply, dense_block_init, moe_block_apply,
+                         moe_block_init, norm_apply, norm_init, scan_apply,
+                         stack_init)
+from ..nn.context import DEFAULT_CTX, QuantContext
+from ..nn.embedding import embed, embedding_init, unembed
+from ..nn.linear import linear, linear_init
+from .common import cross_entropy
+from .config import ModelConfig
+
+__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+
+
+def _split_layers(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_dense, n_moe) leading-dense split."""
+    if cfg.moe is None:
+        return cfg.n_layers, 0
+    k = cfg.moe.first_k_dense
+    return k, cfg.n_layers - k
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    n_dense, n_moe = _split_layers(cfg)
+    params = {"embed": embedding_init(ks[0], cfg.vocab, cfg.d_model,
+                                      dtype=dtype),
+              "final_norm": norm_init(cfg)}
+    if not cfg.tie_embeddings:
+        params["head"] = linear_init(ks[3], cfg.d_model, cfg.vocab,
+                                     dtype=dtype)
+    if n_dense:
+        params["dense"] = stack_init(
+            ks[1], n_dense, lambda k: dense_block_init(k, cfg, dtype=dtype))
+    if n_moe:
+        params["moe"] = stack_init(
+            ks[2], n_moe, lambda k: moe_block_init(k, cfg, dtype=dtype))
+    return params
+
+
+def _dense_body(cfg, ctx, cache_pos):
+    def body(p_l, x, cache_l):
+        x2, new_c = dense_block_apply(p_l, x, cfg, ctx, cache=cache_l,
+                                      cache_pos=cache_pos)
+        return x2, new_c, jnp.zeros((), jnp.float32)
+    return body
+
+
+def _moe_body(cfg, ctx, cache_pos):
+    def body(p_l, x, cache_l):
+        x2, new_c, aux = moe_block_apply(p_l, x, cfg, ctx, cache=cache_l,
+                                         cache_pos=cache_pos)
+        return x2, new_c, aux
+    return body
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX, *, cache=None,
+            cache_pos: Optional[jnp.ndarray] = None):
+    """tokens (B, S) → (logits (B, S, V), new_cache, aux_loss)."""
+    x = embed(params["embed"], tokens, ctx, scale_by_dim=cfg.embed_scale)
+    n_dense, n_moe = _split_layers(cfg)
+    remat = cfg.remat if cache is None else "none"
+    unroll = ctx.scan_unroll
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+
+    if n_dense:
+        c = cache.get("dense") if cache else None
+        x, nc, a = scan_apply(params["dense"], x,
+                              _dense_body(cfg, ctx, cache_pos), remat=remat,
+                              unroll=unroll, per_layer=c)
+        new_cache["dense"], aux = nc, aux + a
+    if n_moe:
+        c = cache.get("moe") if cache else None
+        x, nc, a = scan_apply(params["moe"], x,
+                              _moe_body(cfg, ctx, cache_pos), remat=remat,
+                              unroll=unroll, per_layer=c)
+        new_cache["moe"], aux = nc, aux + a
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, ctx)
+    else:
+        logits = linear(params["head"], x, ctx, path="head")
+    from ..dist.constrain import constrain
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, (new_cache if cache is not None else None), aux
+
+
+def loss(params, batch, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    logits, _, aux = forward(params, batch["tokens"], cfg, ctx)
+    ce, metrics = cross_entropy(logits, batch["labels"])
+    total = ce
+    if cfg.moe is not None:
+        total = total + cfg.moe.aux_loss_weight * aux
+        metrics["moe_aux"] = aux
+    metrics["loss"] = total
+    return total, metrics
+
+
+# -- serving ------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    n_dense, n_moe = _split_layers(cfg)
+
+    def one(_):
+        if cfg.attn_kind == "mla":
+            return mla_cache_spec(cfg.mla, batch, max_len, dtype)
+        return gqa_cache_spec(cfg.attn_dims(), batch, max_len, dtype)
+
+    cache = {}
+    if n_dense:
+        cache["dense"] = jax.vmap(one)(jnp.arange(n_dense))
+    if n_moe:
+        cache["moe"] = jax.vmap(one)(jnp.arange(n_moe))
+    return cache
+
+
+def prefill(params, tokens: jnp.ndarray, cache, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX):
+    """Run the prompt through the model, filling the cache from position 0."""
+    b = tokens.shape[0]
+    zero = jnp.zeros((b,), jnp.int32)
+    logits, new_cache, _ = forward(params, tokens, cfg, ctx, cache=cache,
+                                   cache_pos=zero)
+    return logits[:, -1:], new_cache
+
+
+def decode_step(params, tokens: jnp.ndarray, cache, pos: jnp.ndarray,
+                cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    """One decode step.  tokens (B, 1); pos (B,) current cache length."""
+    logits, new_cache, _ = forward(params, tokens, cfg, ctx, cache=cache,
+                                   cache_pos=pos)
+    return logits, new_cache

@@ -1,0 +1,53 @@
+"""The paper's canonical workload: hls4ml's 3-hidden-layer jet-tagging MLP
+(16 → 64 → 32 → 32 → 5, ReLU + softmax).
+
+This is the model the quantization-accuracy and LUT-softmax benchmarks run
+on; it trains in seconds on CPU and exercises the full paper pipeline:
+train fp32 → PTQ to ``ac_fixed``/minifloat → measure accuracy delta →
+deploy with table-based softmax.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.activations import act_fn, softmax
+from ..nn.context import DEFAULT_CTX, QuantContext
+from ..nn.linear import linear, linear_init
+
+__all__ = ["init", "forward", "loss", "predict"]
+
+
+def init(rng, *, n_features: int = 16, hidden=(64, 32, 32),
+         n_classes: int = 5, dtype=jnp.float32):
+    dims = (n_features,) + tuple(hidden) + (n_classes,)
+    ks = jax.random.split(rng, len(dims) - 1)
+    return {f"fc{i}": linear_init(ks[i], dims[i], dims[i + 1], bias=True,
+                                  dtype=dtype)
+            for i in range(len(dims) - 1)}
+
+
+def forward(params, x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX):
+    """x: (B, n_features) → logits (B, n_classes)."""
+    n = len(params)
+    for i in range(n):
+        x = linear(params[f"fc{i}"], x, ctx, path=f"fc{i}")
+        if i < n - 1:
+            x = act_fn("relu", x, ctx, path=f"fc{i}/act")
+    return x
+
+
+def predict(params, x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX):
+    """Class probabilities — softmax goes through the paper's tables when
+    ``ctx.use_lut`` (including the 1024×18-bit override)."""
+    return softmax(forward(params, x, ctx), ctx, axis=-1)
+
+
+def loss(params, batch, ctx: QuantContext = DEFAULT_CTX):
+    logits = forward(params, batch["x"], ctx).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    l = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return l, {"loss": l, "accuracy": acc}

@@ -1,0 +1,82 @@
+"""Pure SSM language model (mamba2-370m): stack of Mamba-2 SSD blocks.
+
+Decode carries the O(1) recurrence state per layer — this is the family
+that runs the ``long_500k`` shape (state size independent of context).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.blocks import (mamba_block_apply, mamba_block_init, norm_apply,
+                         norm_init, scan_apply, stack_init)
+from ..nn.context import DEFAULT_CTX, QuantContext
+from ..nn.embedding import embed, embedding_init, unembed
+from ..nn.ssm import mamba2_state_spec
+from .common import cross_entropy
+from .config import ModelConfig
+
+__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 2)
+    return {
+        "embed": embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dtype),
+        "layers": stack_init(ks[1], cfg.n_layers,
+                             lambda k: mamba_block_init(k, cfg, dtype=dtype)),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX,
+            *, state=None, decode: bool = False):
+    x = embed(params["embed"], tokens, ctx)
+
+    def body(p_l, x, state_l):
+        x2, new_s = mamba_block_apply(p_l, x, cfg, ctx, state=state_l,
+                                      decode=decode)
+        return x2, new_s, jnp.zeros(())
+
+    x, new_states, _ = scan_apply(params["layers"], x, body,
+                                  remat=cfg.remat if not decode else "none",
+                                  unroll=ctx.scan_unroll, per_layer=state)
+    x = norm_apply(cfg, params["final_norm"], x)
+    from ..dist.constrain import constrain
+    logits = constrain(unembed(params["embed"], x, ctx), "dp", None, "tp")
+    return logits, new_states
+
+
+def loss(params, batch, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    logits, _ = forward(params, batch["tokens"], cfg, ctx)
+    ce, metrics = cross_entropy(logits, batch["labels"])
+    metrics["loss"] = ce
+    return ce, metrics
+
+
+# -- serving -------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    del max_len  # state is O(1) in context length
+
+    def one(_):
+        return mamba2_state_spec(cfg.ssm, batch, jnp.float32)
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def prefill(params, tokens, cache, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX):
+    """Full-sequence SSD prefill; final per-layer states seed decode."""
+    del cache  # rebuilt from the prefill pass
+    logits, states = forward(params, tokens, cfg, ctx)
+    return logits[:, -1:], states
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
+                ctx: QuantContext = DEFAULT_CTX):
+    del pos  # recurrent state is position-free
+    logits, new_state = forward(params, tokens, cfg, ctx, state=cache,
+                                decode=True)
+    return logits, new_state

@@ -1,0 +1,147 @@
+"""Vision-language backbone (llama-3.2-vision-11b): dense self-attention
+layers with gated cross-attention layers interleaved every
+``cross_attn_every`` layers, attending to stub image-patch embeddings.
+
+Per the brief the vision frontend is a STUB: ``batch["img_embed"]`` carries
+precomputed patch embeddings (B, n_img_tokens, D).  Structure: G groups of
+(scan over k-1 self layers → gated cross layer); upstream places cross
+layers at {3, 8, ..., 38} — our grouping is the same cadence shifted by
+one (DESIGN.md notes the deviation).
+
+Serving: self layers keep per-layer KV caches; cross K/V are projected
+once at prefill and reused every decode step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.attention import gqa_cache_spec, gqa_project_kv
+from ..nn.blocks import (cross_block_apply, cross_block_init,
+                         dense_block_apply, dense_block_init, norm_apply,
+                         norm_init, scan_apply, stack_init)
+from ..nn.context import DEFAULT_CTX, QuantContext
+from ..nn.embedding import embed, embedding_init, unembed
+from .common import cross_entropy
+from .config import ModelConfig
+
+__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+
+
+def _group_structure(cfg: ModelConfig):
+    k = cfg.cross_attn_every
+    n_groups = cfg.n_layers // k
+    return n_groups, k - 1  # (groups, self layers per group)
+
+
+def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    n_groups, k_self = _group_structure(cfg)
+    return {
+        "embed": embedding_init(ks[0], cfg.vocab, cfg.d_model, dtype=dtype),
+        "groups": stack_init(
+            ks[1], n_groups,
+            lambda kk: stack_init(kk, k_self,
+                                  lambda k2: dense_block_init(k2, cfg,
+                                                              dtype=dtype))),
+        "cross": stack_init(ks[2], n_groups,
+                            lambda kk: cross_block_init(kk, cfg, gated=True,
+                                                        dtype=dtype)),
+        "final_norm": norm_init(cfg),
+    }
+
+
+def forward(params, tokens, img_embed, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX, *, cache=None, cache_pos=None,
+            cross_kv=None):
+    n_groups, k_self = _group_structure(cfg)
+    x = embed(params["embed"], tokens, ctx)
+    remat = cfg.remat if cache is None else "none"
+    img = (img_embed.astype(ctx.compute_dtype)
+           if img_embed is not None else None)
+
+    def body(p_l, x, cache_l):
+        x2, nc = dense_block_apply(p_l, x, cfg, ctx, cache=cache_l,
+                                   cache_pos=cache_pos)
+        return x2, nc, jnp.zeros(())
+
+    new_self, kv_out = [], []
+    for g in range(n_groups):
+        p_g = jax.tree_util.tree_map(lambda t: t[g], params["groups"])
+        c_g = (jax.tree_util.tree_map(lambda t: t[g], cache["self"])
+               if cache is not None else None)
+        x, ns, _ = scan_apply(p_g, x, body, remat=remat,
+                              unroll=ctx.scan_unroll, per_layer=c_g)
+        new_self.append(ns)
+        p_x = jax.tree_util.tree_map(lambda t: t[g], params["cross"])
+        kv_g = (jax.tree_util.tree_map(lambda t: t[g], cross_kv)
+                if cross_kv is not None else None)
+        if kv_g is None and img is not None:
+            kv_g = gqa_project_kv(p_x["attn"], img,
+                                  cfg.attn_dims(causal=False), ctx)
+        kv_out.append(kv_g)
+        x = cross_block_apply(p_x, x, img, cfg, ctx) if kv_g is None else \
+            _cross_with_cached(p_x, x, kv_g, cfg, ctx)
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    from ..dist.constrain import constrain
+    logits = constrain(unembed(params["embed"], x, ctx), "dp", None, "tp")
+    new_cache = None
+    if cache is not None:
+        stack = lambda ts: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *ts)
+        new_cache = {"self": stack(new_self), "cross_kv": stack(kv_out)}
+    return logits, new_cache
+
+
+def _cross_with_cached(p, x, kv, cfg, ctx):
+    from ..nn.attention import gqa_apply
+    from ..nn.blocks import mlp_apply
+    a, _ = gqa_apply(p["attn"], norm_apply(cfg, p["ln1"], x),
+                     cfg.attn_dims(causal=False), ctx, cached_kv=kv,
+                     path="cross/attn")
+    a = a * jnp.tanh(p["gate_attn"]).astype(a.dtype)
+    x = x + a
+    m = mlp_apply(p["mlp"], norm_apply(cfg, p["ln2"], x), cfg.mlp_act, ctx,
+                  path="cross/mlp")
+    return x + m * jnp.tanh(p["gate_mlp"]).astype(m.dtype)
+
+
+def loss(params, batch, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX):
+    logits, _ = forward(params, batch["tokens"], batch["img_embed"], cfg, ctx)
+    ce, metrics = cross_entropy(logits, batch["labels"])
+    metrics["loss"] = ce
+    return ce, metrics
+
+
+# -- serving -------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    n_groups, k_self = _group_structure(cfg)
+    dims = cfg.attn_dims()
+    self_c = jax.vmap(lambda _: jax.vmap(
+        lambda __: gqa_cache_spec(dims, batch, max_len, dtype))(
+            jnp.arange(k_self)))(jnp.arange(n_groups))
+    kv = jnp.zeros((n_groups, batch, dims.n_kv_heads, cfg.n_img_tokens,
+                    dims.head_dim), dtype)
+    return {"self": self_c, "cross_kv": (kv, kv)}
+
+
+def prefill(params, batch, cache, cfg: ModelConfig,
+            ctx: QuantContext = DEFAULT_CTX):
+    b = batch["tokens"].shape[0]
+    logits, new_cache = forward(params, batch["tokens"], batch["img_embed"],
+                                cfg, ctx, cache=cache,
+                                cache_pos=jnp.zeros((b,), jnp.int32))
+    new_cache["cross_kv"] = tuple(
+        t.astype(cache["cross_kv"][0].dtype) for t in new_cache["cross_kv"])
+    return logits[:, -1:], new_cache
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig,
+                ctx: QuantContext = DEFAULT_CTX):
+    logits, new_cache = forward(params, tokens, None, cfg, ctx,
+                                cache=cache, cache_pos=pos,
+                                cross_kv=cache["cross_kv"])
+    return logits, new_cache

@@ -1,0 +1,5 @@
+"""Pure-JAX model substrate: functional layers over pytree params."""
+
+from .context import DEFAULT_CTX, QuantContext
+
+__all__ = ["DEFAULT_CTX", "QuantContext"]

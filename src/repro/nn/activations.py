@@ -1,0 +1,60 @@
+"""Activation dispatch: exact transcendentals or the paper's LUT path."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tables import TableSpec, softmax_table_policy, table_softmax
+from .context import DEFAULT_CTX, QuantContext
+
+__all__ = ["act_fn", "softmax"]
+
+_EXACT = {
+    "relu": jax.nn.relu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "softplus": jax.nn.softplus,
+}
+
+_LUT_DOMAIN = {"gelu": (-8.0, 8.0), "silu": (-10.0, 10.0),
+               "tanh": (-6.0, 6.0), "sigmoid": (-10.0, 10.0),
+               "softplus": (-16.0, 16.0), "relu": (-8.0, 8.0)}
+
+
+def act_fn(name: str, x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX, *,
+           path: str = "") -> jnp.ndarray:
+    """Apply activation ``name`` under the context (exact or table-based)."""
+    if not ctx.use_lut or name == "relu":
+        return _EXACT[name](x)
+    from ..kernels.ops import lut_activation as lut_op  # backend-dispatched
+
+    prec = ctx.policy.resolve(path)
+    n = prec.table_n or ctx.table_n
+    qt = prec.table_qtype
+    lo, hi = _LUT_DOMAIN[name]
+    if name in ("gelu", "silu"):
+        gate = "gelu_gate" if name == "gelu" else "silu_gate"
+        spec = TableSpec(gate, n, lo, hi, qt, ctx.table_indexing)
+        return (x * lut_op(x, spec, backend=ctx.backend)).astype(x.dtype)
+    if name == "softplus":
+        spec = TableSpec(name, n, lo, hi, qt, ctx.table_indexing)
+        y = lut_op(x, spec, backend=ctx.backend)
+        return jnp.where(x >= hi, x, y).astype(x.dtype)
+    spec = TableSpec(name, n, lo, hi, qt, ctx.table_indexing)
+    return lut_op(x, spec, backend=ctx.backend).astype(x.dtype)
+
+
+def softmax(x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX,
+            axis: int = -1) -> jnp.ndarray:
+    """Softmax — exact, or through the paper's exp/invert constant tables."""
+    if not ctx.use_lut:
+        return jax.nn.softmax(x, axis=axis)
+    pol = softmax_table_policy(ctx.act_qtype,
+                               respect_user_type=ctx.respect_user_type,
+                               n=ctx.table_n,
+                               exact_divide=ctx.softmax_exact_divide,
+                               indexing=ctx.table_indexing)
+    return table_softmax(x, axis=axis, policy=pol)

@@ -1,0 +1,249 @@
+"""Transformer / SSM block assemblies and the layer-scan machinery.
+
+Blocks are init/apply function pairs over plain pytrees.  Stacks of
+identical blocks are built with ``vmap(init)`` (stacked params, leading L
+axis) and executed with ``lax.scan`` — this keeps the HLO size O(1) in
+depth (critical for 512-device compiles) and is where the paper's
+``reuse_factor`` meets the graph: ``ctx.scan_unroll`` controls how many
+layers unroll per scan step.  Activation rematerialization wraps the block
+body per the config (none / dots / full).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from .activations import act_fn
+from .attention import (AttnDims, gqa_apply, gqa_cache_spec, gqa_init,
+                        mla_apply, mla_cache_spec, mla_init)
+from .context import DEFAULT_CTX, QuantContext
+from .linear import linear, linear_init
+from .moe import MoEDims, moe_apply, moe_init
+from .norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from .ssm import SSMDims, mamba2_apply, mamba2_decode_step, mamba2_init
+
+__all__ = ["mlp_init", "mlp_apply", "dense_block_init", "dense_block_apply",
+           "moe_block_init", "moe_block_apply", "cross_block_init",
+           "cross_block_apply", "mamba_block_init", "mamba_block_apply",
+           "stack_init", "scan_apply", "norm_init", "norm_apply",
+           "moe_dims_of"]
+
+
+# -- norms dispatched on config --------------------------------------------
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    return (rmsnorm_init(d) if cfg.norm_type == "rmsnorm"
+            else layernorm_init(d))
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm_type == "rmsnorm":
+        return rmsnorm(p, x, eps=cfg.norm_eps, plus_one=cfg.norm_plus_one)
+    return layernorm(p, x, eps=cfg.norm_eps)
+
+
+# -- MLP ---------------------------------------------------------------------
+def mlp_init(rng, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    p = {"up": linear_init(ks[0], d_model, d_ff, dtype=dtype),
+         "down": linear_init(ks[1], d_ff, d_model, dtype=dtype)}
+    if gated:
+        p["gate"] = linear_init(ks[2], d_model, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str, ctx: QuantContext = DEFAULT_CTX, *,
+              path: str = "mlp"):
+    up = linear(p["up"], x, ctx, path=f"{path}/up")
+    if "gate" in p:
+        g = act_fn(act, linear(p["gate"], x, ctx, path=f"{path}/gate"),
+                   ctx, path=f"{path}/act")
+        h = g * up
+    else:
+        h = act_fn(act, up, ctx, path=f"{path}/act")
+    return linear(p["down"], h, ctx, path=f"{path}/down")
+
+
+# -- dense transformer block -------------------------------------------------
+def dense_block_init(rng, cfg: ModelConfig, *, causal: bool = True,
+                     dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    dims = cfg.attn_dims(causal=causal)
+    p = {"ln1": norm_init(cfg), "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                                gated=cfg.mlp_gated,
+                                                dtype=dtype)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla_init(ks[0], cfg.mla, dtype=dtype)
+    else:
+        p["attn"] = gqa_init(ks[0], dims, dtype=dtype)
+    if not cfg.parallel_block:
+        p["ln2"] = norm_init(cfg)
+    return p
+
+
+def dense_block_apply(p, x, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX,
+                      *, causal: bool = True, positions=None, cache=None,
+                      cache_pos=None, path: str = "block"):
+    dims = cfg.attn_dims(causal=causal)
+    h = norm_apply(cfg, p["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a, new_cache = mla_apply(p["attn"], h, cfg.mla, ctx,
+                                 positions=positions, cache=cache,
+                                 cache_pos=cache_pos, path=f"{path}/attn")
+    else:
+        a, new_cache = gqa_apply(p["attn"], h, dims, ctx,
+                                 positions=positions, cache=cache,
+                                 cache_pos=cache_pos, path=f"{path}/attn")
+    if cfg.parallel_block:  # command-r: attn and MLP share the same norm
+        m = mlp_apply(p["mlp"], h, cfg.mlp_act, ctx, path=f"{path}/mlp")
+        return x + a + m, new_cache
+    x = x + a
+    m = mlp_apply(p["mlp"], norm_apply(cfg, p["ln2"], x), cfg.mlp_act, ctx,
+                  path=f"{path}/mlp")
+    return x + m, new_cache
+
+
+# -- MoE block ----------------------------------------------------------------
+def moe_dims_of(cfg: ModelConfig) -> MoEDims:
+    m = cfg.moe
+    return MoEDims(d_model=cfg.d_model, d_ff=m.d_ff_expert,
+                   n_experts=m.n_experts, top_k=m.top_k,
+                   capacity_factor=m.capacity_factor,
+                   renormalize=m.renormalize, act=cfg.mlp_act,
+                   routed_scale=m.routed_scale)
+
+
+def moe_block_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    p = {"ln1": norm_init(cfg), "ln2": norm_init(cfg),
+         "moe": moe_init(ks[1], moe_dims_of(cfg), dtype=dtype)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla_init(ks[0], cfg.mla, dtype=dtype)
+    else:
+        p["attn"] = gqa_init(ks[0], cfg.attn_dims(), dtype=dtype)
+    if cfg.moe.n_shared:
+        p["shared"] = mlp_init(ks[2], cfg.d_model,
+                               cfg.moe.n_shared * cfg.moe.d_ff_expert,
+                               gated=True, dtype=dtype)
+    return p
+
+
+def moe_block_apply(p, x, cfg: ModelConfig, ctx: QuantContext = DEFAULT_CTX,
+                    *, positions=None, cache=None, cache_pos=None,
+                    path: str = "moe_block"):
+    h = norm_apply(cfg, p["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a, new_cache = mla_apply(p["attn"], h, cfg.mla, ctx,
+                                 positions=positions, cache=cache,
+                                 cache_pos=cache_pos, path=f"{path}/attn")
+    else:
+        a, new_cache = gqa_apply(p["attn"], h, cfg.attn_dims(), ctx,
+                                 positions=positions, cache=cache,
+                                 cache_pos=cache_pos, path=f"{path}/attn")
+    x = x + a
+    h2 = norm_apply(cfg, p["ln2"], x)
+    y, aux = moe_apply(p["moe"], h2, moe_dims_of(cfg), ctx,
+                       path=f"{path}/moe", dropless=cache is not None)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], h2, cfg.mlp_act, ctx,
+                          path=f"{path}/shared")
+    return x + y, new_cache, aux
+
+
+# -- cross-attention block (vlm / encdec decoder) ------------------------------
+def cross_block_init(rng, cfg: ModelConfig, *, gated: bool = False,
+                     dtype=jnp.float32):
+    """Self-attn-free cross block (llama-vision style when ``gated``)."""
+    ks = jax.random.split(rng, 3)
+    p = {"ln1": norm_init(cfg),
+         "attn": gqa_init(ks[0], cfg.attn_dims(causal=False), dtype=dtype),
+         "ln2": norm_init(cfg),
+         "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated,
+                         dtype=dtype)}
+    if gated:
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def cross_block_apply(p, x, kv, cfg: ModelConfig,
+                      ctx: QuantContext = DEFAULT_CTX, *,
+                      path: str = "cross"):
+    a, _ = gqa_apply(p["attn"], norm_apply(cfg, p["ln1"], x),
+                     cfg.attn_dims(causal=False), ctx, kv_input=kv,
+                     path=f"{path}/attn")
+    if "gate_attn" in p:
+        a = a * jnp.tanh(p["gate_attn"]).astype(a.dtype)
+    x = x + a
+    m = mlp_apply(p["mlp"], norm_apply(cfg, p["ln2"], x), cfg.mlp_act, ctx,
+                  path=f"{path}/mlp")
+    if "gate_mlp" in p:
+        m = m * jnp.tanh(p["gate_mlp"]).astype(m.dtype)
+    return x + m
+
+
+# -- mamba block ----------------------------------------------------------------
+def mamba_block_init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
+    return {"ln": norm_init(cfg),
+            "ssm": mamba2_init(rng, cfg.ssm, dtype=dtype)}
+
+
+def mamba_block_apply(p, x, cfg: ModelConfig,
+                      ctx: QuantContext = DEFAULT_CTX, *, state=None,
+                      decode: bool = False, path: str = "mamba"):
+    h = norm_apply(cfg, p["ln"], x)
+    if decode:
+        y, new_state = mamba2_decode_step(p["ssm"], h, state, cfg.ssm, ctx,
+                                          path=f"{path}/ssm")
+    else:
+        y, new_state = mamba2_apply(p["ssm"], h, cfg.ssm, ctx,
+                                    path=f"{path}/ssm")
+    return x + y, new_state
+
+
+# -- stacks: vmapped init + scanned apply ---------------------------------------
+def stack_init(rng, n: int, init_fn: Callable):
+    """Stacked params for ``n`` identical blocks (leading L axis)."""
+    keys = jax.random.split(rng, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _remat_wrap(fn: Callable, remat: str) -> Callable:
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def scan_apply(stacked, x, body: Callable, *, remat: str = "full",
+               unroll: int = 1, carry_aux: bool = False,
+               per_layer=None):
+    """Run ``body(params_l, x, per_layer_l) -> (x', y_l)`` over the stack.
+
+    ``per_layer``: optional pytree with leading L axis scanned alongside
+    params (e.g. a KV cache).  Returns (x_final, stacked_ys, aux_sum).
+    """
+    from ..dist.constrain import constrain
+    body_r = _remat_wrap(body, remat)
+
+    def step(carry, layer):
+        x, aux = carry
+        params_l, extra_l = layer
+        if x.ndim == 3:  # pin the residual stream's batch sharding
+            x = constrain(x, "dp", None, None)
+        x2, y, a = body_r(params_l, x, extra_l)
+        if x2.ndim == 3:
+            x2 = constrain(x2, "dp", None, None)
+        return (x2, aux + a), y
+
+    init = (x, jnp.zeros((), jnp.float32))
+    (xf, aux), ys = jax.lax.scan(step, init, (stacked, per_layer),
+                                 unroll=unroll)
+    return xf, ys, aux

@@ -1,0 +1,74 @@
+"""Execution context threading the paper's knobs through the model stack.
+
+:class:`QuantContext` is how the de-specialized library reaches every
+layer: which numeric mode the matmuls run in, whether activations go
+through constant tables, which backend lowers the hot ops, and the
+``reuse_factor``.  It is a frozen dataclass (hashable) so jitted step
+functions can close over it as static configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core.precision import PrecisionPolicy
+from ..core.qtypes import FixedPointType
+
+__all__ = ["QuantContext", "DEFAULT_CTX"]
+
+_MODES = ("none", "fake", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantContext:
+    """Numeric execution configuration for one forward/backward pass.
+
+    mode:
+      * ``none`` — matmuls in ``compute_dtype`` (paper-faithful float path).
+      * ``fake`` — straight-through fake quantization of weights (+
+        activations if the policy says so): QAT / PTQ-accuracy simulation.
+      * ``int8`` — dynamic-range integer execution on the MXU path via the
+        ``qmatmul`` kernel (weights pre-quantized or quantized on the fly).
+    use_lut:
+      route non-trivial activations (gelu/silu/softplus/softmax-exp)
+      through trace-time constant tables instead of transcendentals.
+    reuse_factor:
+      the paper's parallelism/resource knob.  1 = fully parallel.  Higher
+      values serialize: layer-scan stays rolled (unroll = max(8 //
+      reuse_factor, 1)) and kernel block K is divided accordingly.
+    backend:
+      kernel backend override (None = registry default; "ref" | "pallas").
+    """
+
+    mode: str = "none"
+    policy: PrecisionPolicy = PrecisionPolicy()
+    act_qtype: Optional[FixedPointType] = None
+    use_lut: bool = False
+    table_n: int = 1024
+    table_indexing: str = "interp"
+    reuse_factor: int = 1
+    backend: Optional[str] = None
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    param_dtype: jnp.dtype = jnp.float32
+    softmax_exact_divide: bool = True
+    respect_user_type: bool = False   # de-specialized softmax-table fix
+    #: 8 → int8 KV cache with per-(token, head) scales (paper's
+    #: quantization aimed at the dominant decode memory term); None = the
+    #: cache dtype passed to init_cache (bf16 default).
+    kv_cache_bits: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}")
+        if self.reuse_factor < 1:
+            raise ValueError("reuse_factor >= 1")
+
+    @property
+    def scan_unroll(self) -> int:
+        return max(8 // self.reuse_factor, 1)
+
+
+DEFAULT_CTX = QuantContext()

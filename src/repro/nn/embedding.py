@@ -1,0 +1,31 @@
+"""Token embedding + (optionally tied) LM head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .context import DEFAULT_CTX, QuantContext
+
+__all__ = ["embedding_init", "embed", "unembed"]
+
+
+def embedding_init(rng, vocab: int, d: int, *, dtype=jnp.float32):
+    tbl = jax.random.normal(rng, (vocab, d), jnp.float32) * (d ** -0.5)
+    return {"table": tbl.astype(dtype)}
+
+
+def embed(p, tokens: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX, *,
+          scale_by_dim: bool = False) -> jnp.ndarray:
+    """tokens (B, S) int32 → (B, S, D).  ``scale_by_dim``: gemma's √d."""
+    tbl = p["table"].astype(ctx.compute_dtype)
+    y = jnp.take(tbl, tokens, axis=0)
+    if scale_by_dim:
+        y = y * jnp.asarray(tbl.shape[-1] ** 0.5, y.dtype)
+    return y
+
+
+def unembed(p, x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX) -> jnp.ndarray:
+    """(B, S, D) → logits (B, S, V) against the (tied) embedding table."""
+    tbl = p["table"].astype(ctx.compute_dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(ctx.compute_dtype), tbl)

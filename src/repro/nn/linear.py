@@ -1,0 +1,78 @@
+"""Linear layers with pluggable numerics (the heart of the quantized path).
+
+``linear()`` consults the :class:`~repro.nn.context.QuantContext`:
+
+* ``none``  — einsum in ``compute_dtype`` (bf16 MXU path).
+* ``fake``  — straight-through fake-quant of weights (and activations if a
+  type is set): numerically simulates the paper's ``ac_fixed``/minifloat
+  deployment while staying in float storage (QAT & accuracy studies).
+* ``int8``  — dynamic-range integer execution: per-row activation scales,
+  per-column weight scales, int8×int8→int32 on the MXU via the
+  ``qmatmul`` Pallas kernel (HBM traffic halves vs bf16 — the deployment
+  path).
+
+Per-layer heterogeneity comes from ``ctx.policy.resolve(path)`` — the
+hls4ml per-layer config dict, de-specialized.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import LayerPrecision
+from ..core.quantize import calibrate_scale, fake_quant
+from ..core.qtypes import FixedPointType, MiniFloatType
+from .context import DEFAULT_CTX, QuantContext
+
+__all__ = ["linear_init", "linear"]
+
+
+def linear_init(rng, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None):
+    std = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(rng, (d_in, d_out), jnp.float32) * std
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def _int8_matmul(x2: jnp.ndarray, w: jnp.ndarray, qt: FixedPointType,
+                 ctx: QuantContext) -> jnp.ndarray:
+    """(T, K) @ (K, N) through the int8 MXU path."""
+    from ..kernels.ops import qmatmul  # local: kernels import nn-free core
+
+    sx = calibrate_scale(x2, qt, channel_axes=(0,))          # (T, 1)
+    xq = jnp.clip(jnp.round(x2 / sx), qt.int_min, qt.int_max).astype(qt.dtype)
+    sw = calibrate_scale(w, qt, channel_axes=(1,))           # (1, N)
+    wq = jnp.clip(jnp.round(w / sw), qt.int_min, qt.int_max).astype(qt.dtype)
+    return qmatmul(xq, wq, sx, sw, out_dtype=ctx.compute_dtype,
+                   backend=ctx.backend)
+
+
+def linear(p, x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX, *,
+           path: str = "") -> jnp.ndarray:
+    """Apply ``x @ w (+ b)`` under the context's numeric mode."""
+    w = p["w"]
+    prec: LayerPrecision = ctx.policy.resolve(path)
+    mode = ctx.mode if (prec.weights is not None or ctx.mode == "none") else "none"
+
+    if mode == "int8" and isinstance(prec.weights, FixedPointType) \
+            and prec.weights.width <= 8:
+        t_shape = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        y = _int8_matmul(x2, w.astype(jnp.float32), prec.weights, ctx)
+        y = y.reshape(*t_shape, w.shape[-1])
+    else:
+        if mode == "fake" and prec.weights is not None:
+            w = fake_quant(w.astype(jnp.float32), prec.weights)
+        if mode == "fake" and prec.activations is not None:
+            x = fake_quant(x.astype(jnp.float32), prec.activations)
+        y = jnp.einsum("...k,kn->...n", x.astype(ctx.compute_dtype),
+                       w.astype(ctx.compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing, capacity dispatch,
+expert parallelism over the ``model`` mesh axis.
+
+Cluster-scale notes (how this maps at 512 chips):
+
+* Experts are sharded over the ``model`` axis (EP): expert weights are
+  (E, D, F) with E split 16-ways; GSPMD turns the dispatch/combine
+  gathers into all-to-all-style collectives over ``model``.
+* Dispatch avoids the classic (tokens, E, C) one-hot einsum — which is
+  O(T·E·C) memory — in favour of scatter/gather against an (E·C, D)
+  capacity buffer: position-in-expert comes from a cumsum over slots,
+  overflowing tokens are *dropped* (standard capacity-factor semantics)
+  by routing them to a dummy slot.
+* The router runs in float32 regardless of the quantization context
+  (routing decisions are precision-sensitive — §Arch-applicability),
+  while expert FFNs follow the per-layer policy like any dense layer.
+
+Supports deepseek-v2 (softmax→top-k→renormalize, shared experts ride
+outside this module) and olmoe (softmax→top-k, no renorm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .activations import act_fn
+from .context import DEFAULT_CTX, QuantContext
+
+__all__ = ["MoEDims", "moe_init", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    d_ff: int               # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    renormalize: bool = True    # deepseek renormalizes top-k gate weights
+    act: str = "silu"
+    routed_scale: float = 1.0   # deepseek-v2 routed_scaling_factor
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(tokens_per_group * self.top_k * self.capacity_factor
+                / self.n_experts)
+        return max(c, self.top_k)
+
+
+def moe_init(rng, d: MoEDims, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    e, dm, f = d.n_experts, d.d_model, d.d_ff
+    s_in, s_out = dm ** -0.5, f ** -0.5
+    return {
+        "router": (jax.random.normal(ks[0], (dm, e), jnp.float32) * s_in
+                   ).astype(jnp.float32),  # router always f32
+        "w_gate": (jax.random.normal(ks[1], (e, dm, f), jnp.float32) * s_in
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, dm, f), jnp.float32) * s_in
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, dm), jnp.float32) * s_out
+                   ).astype(dtype),
+    }
+
+
+def moe_apply(p, x: jnp.ndarray, d: MoEDims,
+              ctx: QuantContext = DEFAULT_CTX, *, path: str = "moe",
+              dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) → (y, aux_loss).  Groups = batch rows (B is the
+    dispatch group axis, so capacity is per-sequence and the buffer stays
+    data-parallel-sharded).
+
+    ``dropless=True`` (serving): capacity rises to min(S, 4·S·k/E) — exact
+    droplessness whenever E ≲ 4k (all smoke/consistency regimes), 4×
+    balance headroom at scale, so chunked prefill + decode matches a
+    monolithic pass.  Training keeps capacity-factor dropping (standard).
+    """
+    b, s, dm = x.shape
+    e, k = d.n_experts, d.top_k
+    if dropless:
+        cap = min(s, max(k, -(-4 * s * k // e)))
+    else:
+        cap = d.capacity(s)
+
+    # ---- routing (f32) ----------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)              # (B, S, k)
+    if d.renormalize:
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    gates = gates * d.routed_scale
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                               # (E,)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx, e), axis=2), axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    # ---- position-in-expert via cumsum over flattened slots ---------------
+    idx_f = idx.reshape(b, s * k)                                    # slots
+    onehot = jax.nn.one_hot(idx_f, e, dtype=jnp.int32)               # (B,T,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                             # (B,T,E)
+    pos_in_e = jnp.take_along_axis(pos, idx_f[..., None], axis=2)[..., 0]
+    keep = pos_in_e < cap
+    # dropped tokens go to a dummy trailing slot
+    slot = jnp.where(keep, idx_f * cap + pos_in_e, e * cap)          # (B,T)
+
+    # ---- dispatch: tokens into the (E*C, D) capacity buffer ---------------
+    from ..dist.constrain import constrain
+    from ..dist.options import flags
+    tok = jnp.repeat(jnp.arange(s), k)                               # (T,)
+    x_slot = jnp.take(x, tok, axis=1)                                # (B,T,D)
+    n_slots = e * cap + 1                      # trailing slot = dropped
+    onehot = None
+    if flags().moe_einsum:
+        # §Perf H5: one-hot einsum dispatch — partitions over (dp, slots)
+        # with zero collectives; the scatter form makes GSPMD replicate
+        # the global capacity buffer and all-reduce it every layer.
+        cd = ctx.compute_dtype
+        onehot = jax.nn.one_hot(slot, n_slots, dtype=cd)             # (B,T,S)
+        onehot = constrain(onehot, "dp", None, "tp")
+        buf = jnp.einsum("bts,btd->bsd", onehot, x_slot.astype(cd),
+                         preferred_element_type=jnp.float32
+                         ).astype(x.dtype)
+    else:
+        buf = jnp.zeros((b, n_slots, dm), x.dtype)
+        bidx = jnp.arange(b)[:, None]
+        buf = buf.at[bidx, slot].add(x_slot, mode="drop")
+        if flags().moe_local:
+            # §Perf H5b: the scatter's indices are batch-local — pin the
+            # buffer (dp, replicated) so GSPMD keeps it local instead of
+            # replicating + all-reducing the global buffer
+            buf = constrain(buf, "dp", None, None)
+    xe = buf[:, :-1].reshape(b, e, cap, dm)                          # (B,E,C,D)
+    if flags().moe_local:
+        xe = constrain(xe, "dp", None, None, None)   # sliced per EP shard
+    else:
+        xe = constrain(xe, "dp", "tp", None, None)   # EP: experts on `model`
+
+    # ---- expert FFN (SwiGLU), experts sharded over `model` ----------------
+    cd = ctx.compute_dtype
+    h_g = jnp.einsum("becd,edf->becf", xe.astype(cd),
+                     p["w_gate"].astype(cd))
+    h_u = jnp.einsum("becd,edf->becf", xe.astype(cd), p["w_up"].astype(cd))
+    h = act_fn(d.act, h_g, ctx, path=f"{path}/act") * h_u
+    ye = jnp.einsum("becf,efd->becd", h.astype(cd), p["w_down"].astype(cd))
+    ye = constrain(ye, "dp", "tp", None, None)
+
+    # ---- combine: slots back to tokens, weighted by the gate --------------
+    yb = ye.reshape(b, e * cap, dm)
+    if flags().moe_local:
+        # §Perf H5b: one explicit EP all-gather of expert outputs
+        yb = constrain(yb, "dp", None, None)
+    yb = jnp.concatenate([yb, jnp.zeros((b, 1, dm), yb.dtype)], axis=1)
+    if onehot is not None:  # §Perf H5: einsum combine (transpose of dispatch)
+        yb = constrain(yb, "dp", "tp", None)
+        y_slot = jnp.einsum("bts,bsd->btd", onehot,
+                            yb.astype(onehot.dtype),
+                            preferred_element_type=jnp.float32)
+    else:
+        y_slot = jnp.take_along_axis(yb, slot[..., None], axis=1)    # (B,T,D)
+    y_slot = y_slot * (gates.reshape(b, s * k, 1).astype(y_slot.dtype)
+                       * keep[..., None].astype(y_slot.dtype))
+    y = jnp.sum(y_slot.reshape(b, s, k, dm), axis=2)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,48 @@
+"""Rotary position embeddings (full / partial rotary, configurable theta).
+
+Frequencies are computed at trace time (NumPy) — the same "constexpr"
+discipline as the activation tables: the inv-freq vector is an HLO
+constant, never a traced computation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rope_frequencies", "apply_rope"]
+
+
+@functools.lru_cache(maxsize=64)
+def rope_frequencies(rot_dim: int, theta: float) -> np.ndarray:
+    """inv_freq (rot_dim // 2,) as a trace-time constant."""
+    return (1.0 / (theta ** (np.arange(0, rot_dim, 2, dtype=np.float64)
+                             / rot_dim))).astype(np.float32)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *,
+               theta: float = 10000.0, fraction: float = 1.0) -> jnp.ndarray:
+    """Rotate the leading ``fraction`` of the head dim of ``x``.
+
+    x: (..., S, D) — rotation pairs split as [even, odd] halves (the
+    llama/neox convention).  positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    inv_freq = jnp.asarray(rope_frequencies(rot, theta))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], axis=-1)
+    if rot < d:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out

@@ -1,0 +1,236 @@
+"""Mamba-2 (SSD — state-space duality) blocks: chunked train/prefill path
+and O(1)-state decode path.
+
+The chunked SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence
+into chunks of ``Q`` tokens: within a chunk the recurrence is expanded into
+an attention-like quadratic form (MXU-friendly batched einsums); across
+chunks a low-rank state (P heads × N state × hd head-dim) is carried by an
+associative scan — O(S·Q) work instead of O(S²), and the cross-chunk scan
+is log-depth.
+
+Sharding: heads ``P`` shard over the ``model`` axis (all einsums below are
+contraction-free over P), batch over ``data``/``pod``.  The recurrence
+state is the *decode cache*: (B, P, N, hd) per layer, independent of
+context length — which is why ``long_500k`` runs for SSM/hybrid archs while
+pure-attention archs skip it (DESIGN.md §Arch-applicability).
+
+Numerics: the state recurrence runs in float32 regardless of the
+quantization context (documented §Arch-applicability caveat); in/out
+projections and the conv are ordinary quantizable linears; ``dt`` goes
+through the LUT softplus when ``ctx.use_lut``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .activations import act_fn
+from .context import DEFAULT_CTX, QuantContext
+from .linear import linear, linear_init
+from .norms import rmsnorm
+
+__all__ = ["SSMDims", "mamba2_init", "mamba2_apply", "mamba2_decode_step",
+           "mamba2_state_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMDims:
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # hd
+    expand: int = 2
+    n_groups: int = 1           # G (B/C parameter groups)
+    d_conv: int = 4
+    chunk: int = 256            # Q — SSD chunk length
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_init(rng, d: SSMDims, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    di, p_heads = d.d_inner, d.n_heads
+    in_dim = 2 * di + 2 * d.n_groups * d.d_state + p_heads
+    return {
+        "in_proj": linear_init(ks[0], d.d_model, in_dim, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d.d_conv, d.conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d.conv_dim,), dtype),
+        "A_log": jnp.zeros((p_heads,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones((p_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((p_heads,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": linear_init(ks[3], di, d.d_model, dtype=dtype),
+    }
+
+
+def mamba2_state_spec(d: SSMDims, batch: int, dtype=jnp.float32):
+    """Decode cache: depthwise-conv window + SSM recurrence state."""
+    return {
+        "conv": jnp.zeros((batch, d.d_conv - 1, d.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, d.n_heads, d.d_state, d.head_dim), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, w: jnp.ndarray,
+                           b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C); w: (K, C) depthwise causal conv along S."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4): unrolled taps, no conv primitive
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def _split_zxbcdt(zxbcdt, d: SSMDims):
+    di, gn = d.d_inner, d.n_groups * d.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def mamba2_apply(p, x: jnp.ndarray, d: SSMDims,
+                 ctx: QuantContext = DEFAULT_CTX, *, path: str = "ssm",
+                 initial_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence SSD. x: (B, S, Dm) with S % chunk == 0.
+
+    Returns (y, final_ssm_state) — the state seeds chunked prefill→decode.
+    """
+    bsz, s, _ = x.shape
+    q = min(d.chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    ph, hd, n, g = d.n_heads, d.head_dim, d.d_state, d.n_groups
+
+    zxbcdt = linear(p["in_proj"], x, ctx, path=f"{path}/in_proj")
+    z, xbc_raw, dt = _split_zxbcdt(zxbcdt, d)
+    conv_tail = xbc_raw[:, -(d.d_conv - 1):]   # decode conv window seed
+    xbc = act_fn("silu", _causal_depthwise_conv(
+        xbc_raw.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+        p["conv_b"].astype(jnp.float32)), ctx, path=f"{path}/conv_act")
+
+    from ..dist.constrain import constrain
+    xh = xbc[..., :d.d_inner].reshape(bsz, s, ph, hd).astype(jnp.float32)
+    b_ = xbc[..., d.d_inner:d.d_inner + g * n].reshape(bsz, s, g, n)
+    c_ = xbc[..., d.d_inner + g * n:].reshape(bsz, s, g, n)
+    # heads per group (G=1 ⇒ broadcast over all heads)
+    b_ = jnp.repeat(b_, ph // g, axis=2).astype(jnp.float32)  # (B,S,P,N)
+    c_ = jnp.repeat(c_, ph // g, axis=2).astype(jnp.float32)
+    # TP over SSD heads: every einsum below is elementwise in P
+    xh = constrain(xh, "dp", None, "tp", None)
+    b_ = constrain(b_, "dp", None, "tp", None)
+    c_ = constrain(c_, "dp", None, "tp", None)
+
+    dt = act_fn("softplus", dt.astype(jnp.float32) + p["dt_bias"], ctx,
+                path=f"{path}/dt")                             # (B,S,P)
+    a = -jnp.exp(p["A_log"])                                   # (P,)
+    da = dt * a                                                # (B,S,P)
+
+    # ---- chunk ------------------------------------------------------------
+    def ch(t):  # (B, S, ...) -> (B, nc, Q, ...)
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+    xh_c, b_c, c_c, dt_c, da_c = map(ch, (xh, b_, c_, dt, da))
+    ca = jnp.cumsum(da_c, axis=2)                              # (B,nc,Q,P)
+
+    # ---- intra-chunk (attention-like quadratic form) -----------------------
+    # att[i, j] = (C_i · B_j) * exp(ca_i - ca_j) * dt_j   for i >= j
+    scores = jnp.einsum("bcipn,bcjpn->bcijp", c_c, b_c)
+    decay = jnp.exp(ca[:, :, :, None, :] - ca[:, :, None, :, :])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = jnp.where(mask[None, None, :, :, None], scores * decay, 0.0)
+    y_intra = jnp.einsum("bcijp,bcjp,bcjph->bciph", att, dt_c, xh_c)
+
+    # ---- chunk states ------------------------------------------------------
+    decay_out = jnp.exp(ca[:, :, -1:, :] - ca)                 # (B,nc,Q,P)
+    s_c = jnp.einsum("bcjpn,bcjp,bcjph->bcpnh", b_c, dt_c * decay_out, xh_c)
+
+    # ---- inter-chunk associative recurrence: h_c = g_c·h_{c-1} + s_c -------
+    g_c = jnp.exp(ca[:, :, -1, :])[..., None, None]            # (B,nc,P,1,1)
+    if initial_state is not None:
+        s_c = s_c.at[:, 0].add(g_c[:, 0] * initial_state.astype(jnp.float32))
+
+    def combine(l, r):
+        gl, sl = l
+        gr, sr = r
+        return gl * gr, gr * sl + sr
+
+    g_all, h_all = jax.lax.associative_scan(combine, (g_c, s_c), axis=1)
+    h_prev = jnp.concatenate(
+        [jnp.zeros_like(h_all[:, :1]), h_all[:, :-1]], axis=1)
+    if initial_state is not None:
+        # h_all already includes the seed via s_c[0]; h_prev[0] is the seed
+        h_prev = h_prev.at[:, 0].set(initial_state.astype(jnp.float32))
+
+    y_inter = jnp.einsum("bcipn,bcpnh,bcip->bciph", c_c, h_prev, jnp.exp(ca))
+
+    y = (y_intra + y_inter).reshape(bsz, s, ph, hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d.d_inner)
+
+    # gated RMSNorm, then output projection
+    y = rmsnorm(p["norm"], y * act_fn("silu", z.astype(jnp.float32), ctx,
+                                      path=f"{path}/gate"))
+    out = linear(p["out_proj"], y.astype(x.dtype), ctx,
+                 path=f"{path}/out_proj")
+    final_state = {"conv": conv_tail.astype(jnp.float32),
+                   "ssm": h_all[:, -1]}
+    return out, final_state
+
+
+def mamba2_decode_step(p, x: jnp.ndarray, state, d: SSMDims,
+                       ctx: QuantContext = DEFAULT_CTX, *,
+                       path: str = "ssm"):
+    """One-token step. x: (B, 1, Dm); state from :func:`mamba2_state_spec`.
+
+    Returns (y (B, 1, Dm), new_state).  O(1) in context length.
+    """
+    bsz = x.shape[0]
+    ph, hd, n, g = d.n_heads, d.head_dim, d.d_state, d.n_groups
+
+    zxbcdt = linear(p["in_proj"], x, ctx, path=f"{path}/in_proj")
+    z, xbc, dt = _split_zxbcdt(zxbcdt[:, 0], d)                # (B, ...)
+
+    window = jnp.concatenate(
+        [state["conv"], xbc[:, None].astype(state["conv"].dtype)], axis=1)
+    conv_out = (jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                           p["conv_w"].astype(jnp.float32))
+                + p["conv_b"].astype(jnp.float32))
+    xbc_t = act_fn("silu", conv_out, ctx, path=f"{path}/conv_act")
+    new_conv = window[:, 1:]
+
+    xh = xbc_t[..., :d.d_inner].reshape(bsz, ph, hd).astype(jnp.float32)
+    b_ = xbc_t[..., d.d_inner:d.d_inner + g * n].reshape(bsz, g, n)
+    c_ = xbc_t[..., d.d_inner + g * n:].reshape(bsz, g, n)
+    b_ = jnp.repeat(b_, ph // g, axis=1).astype(jnp.float32)   # (B,P,N)
+    c_ = jnp.repeat(c_, ph // g, axis=1).astype(jnp.float32)
+
+    dt = act_fn("softplus", dt.astype(jnp.float32) + p["dt_bias"], ctx,
+                path=f"{path}/dt")                             # (B,P)
+    ga = jnp.exp(dt * -jnp.exp(p["A_log"]))[..., None, None]   # (B,P,1,1)
+    upd = jnp.einsum("bp,bpn,bph->bpnh", dt, b_, xh)
+    h = ga * state["ssm"].astype(jnp.float32) + upd            # (B,P,N,hd)
+
+    y = jnp.einsum("bpn,bpnh->bph", c_, h)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, d.d_inner)
+    y = rmsnorm(p["norm"], y * act_fn("silu", z.astype(jnp.float32), ctx,
+                                      path=f"{path}/gate"))
+    out = linear(p["out_proj"], y[:, None].astype(x.dtype), ctx,
+                 path=f"{path}/out_proj")
+    return out, {"conv": new_conv, "ssm": h.astype(state["ssm"].dtype)}

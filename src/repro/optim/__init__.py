@@ -1,0 +1,6 @@
+"""Optimizers and schedules (pure JAX, pytree states, fully shardable)."""
+
+from .adamw import adamw_init, adamw_update, OptConfig
+from .schedule import cosine_warmup
+
+__all__ = ["adamw_init", "adamw_update", "OptConfig", "cosine_warmup"]

@@ -1,0 +1,79 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+States (m, v) mirror the parameter pytree, so the parameter sharding specs
+apply verbatim to the optimizer state — the ZeRO-style sharded-optimizer
+property falls out of FSDP×TP parameter sharding for free.
+
+``dtype`` lets the second moment be carried in bf16 at scale (a §Perf
+memory lever recorded in EXPERIMENTS.md); default keeps both in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: Optional[jnp.dtype] = None      # None = param dtype
+    v_dtype: Optional[jnp.dtype] = None
+
+
+def adamw_init(params, cfg: OptConfig = OptConfig()):
+    def zeros_like(p, dt):
+        return jnp.zeros(p.shape, dt or p.dtype)
+
+    return {
+        "m": jax.tree_util.tree_map(lambda p: zeros_like(p, cfg.m_dtype),
+                                    params),
+        "v": jax.tree_util.tree_map(lambda p: zeros_like(p, cfg.v_dtype),
+                                    params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, lr, cfg: OptConfig = OptConfig()):
+    """Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** count)
+        vhat = v2 / (1 - cfg.b2 ** count)
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        return (p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype))
+
+    out = jax.tree_util.tree_map(upd, grads, opt_state["m"],
+                                 opt_state["v"], params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,7 @@
+"""Training runtime: step builders, microbatching, state management."""
+
+from .step import (build_prefill_step, build_serve_step, build_train_step,
+                   init_state)
+
+__all__ = ["build_prefill_step", "build_serve_step", "build_train_step",
+           "init_state"]

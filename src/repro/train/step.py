@@ -1,0 +1,135 @@
+"""Train/serve step builders: microbatched gradient accumulation, remat,
+optimizer fusion, optional compressed cross-pod gradient reduction.
+
+``build_train_step`` returns a pure function ``(state, batch) -> (state,
+metrics)`` ready for ``jax.jit`` with the sharding pytrees from
+``repro.dist.sharding``.  Gradient accumulation is a ``lax.scan`` over
+microbatch slices — the standard memory lever for the big train shapes
+(live activations scale with B/microbatches, while the scan keeps HLO size
+constant); XLA overlaps each microbatch's backward collectives with the
+next microbatch's compute (latency hiding — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qtypes import FixedPointType
+from ..models.api import loss_fn
+from ..models.config import ModelConfig
+from ..nn.context import QuantContext
+from ..optim import OptConfig, adamw_init, adamw_update
+
+__all__ = ["init_state", "build_train_step", "build_serve_step",
+           "build_prefill_step"]
+
+
+def init_state(rng, cfg: ModelConfig, *, dtype=jnp.float32,
+               opt_cfg: OptConfig = OptConfig()):
+    from ..models.api import get_family
+    params = get_family(cfg).init(rng, cfg, dtype=dtype)
+    return {"params": params, "opt": adamw_init(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def _tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda t: t * s, a)
+
+
+def build_train_step(cfg: ModelConfig, ctx: QuantContext, *,
+                     lr_fn: Callable, opt_cfg: OptConfig = OptConfig(),
+                     microbatches: int = 1,
+                     grad_specs=None) -> Callable:
+    """(state, batch) -> (state, metrics).
+
+    ``batch`` leaves have leading dim B; with ``microbatches`` > 1 they are
+    reshaped to (M, B/M, …) and scanned, accumulating f32 gradients.
+
+    ``grad_specs``: optional PartitionSpec pytree matching the params.
+    Under the ``grad_specs`` perf flag (§Perf H1), per-microbatch gradients
+    and the accumulator are constrained to the parameter sharding, so the
+    cross-data reduction lowers as a reduce-scatter into sharded
+    accumulators instead of a full-gradient all-reduce every microbatch.
+    """
+    grad_of = jax.value_and_grad(lambda p, mb: loss_fn(p, mb, cfg, ctx),
+                                 has_aux=True)
+
+    def _pin(grads):
+        from ..dist.constrain import current_mesh
+        from ..dist.options import flags
+        mesh = current_mesh()
+        if grad_specs is None or mesh is None or not flags().grad_specs:
+            return grads
+        from jax.sharding import NamedSharding
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, s)), grads, grad_specs)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+            return _pin(grads), metrics
+
+        def split(t):
+            return t.reshape(microbatches, t.shape[0] // microbatches,
+                             *t.shape[1:])
+
+        mbatch = jax.tree_util.tree_map(split, batch)
+        g0 = _pin(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        m0 = {"loss": jnp.zeros((), jnp.float32),
+              "accuracy": jnp.zeros((), jnp.float32)}
+
+        def body(carry, mb):
+            gacc, macc = carry
+            (loss, metrics), grads = grad_of(params, mb)
+            gacc = _pin(_tree_add(gacc, _pin(jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads))))
+            macc = {"loss": macc["loss"] + metrics["loss"],
+                    "accuracy": macc["accuracy"] + metrics["accuracy"]}
+            return (gacc, macc), None
+
+        (gsum, msum), _ = jax.lax.scan(body, (g0, m0), mbatch)
+        inv = 1.0 / microbatches
+        return _tree_scale(gsum, inv), _tree_scale(msum, inv)
+
+    def train_step(state, batch):
+        grads, metrics = compute_grads(state["params"], batch)
+        lr = lr_fn(state["step"])
+        new_params, new_opt, om = adamw_update(grads, state["opt"],
+                                               state["params"], lr, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def build_serve_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
+    """(params, cache, tokens (B,1), pos (B,)) -> (logits, new_cache)."""
+    from ..models.api import decode_fn
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_fn(params, tokens, cache, pos, cfg, ctx)
+
+    return serve_step
+
+
+def build_prefill_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
+    """(params, batch, cache) -> (last_logits, cache)."""
+    from ..models.api import prefill_fn
+
+    def prefill_step(params, batch, cache):
+        return prefill_fn(params, batch, cache, cfg, ctx)
+
+    return prefill_step

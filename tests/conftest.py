@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any user XLA_FLAGS but never the host-device override.
+flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" in flags:
+    parts = [f for f in flags.split() if "host_platform_device_count" not in f]
+    os.environ["XLA_FLAGS"] = " ".join(parts)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

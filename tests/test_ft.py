@@ -1,0 +1,96 @@
+"""Fault tolerance: injected failures, restore-and-replay, stragglers."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.ft import FaultInjector, ResilientLoop, StragglerMonitor
+
+
+def quad_step(state, batch):
+    """Tiny quadratic-descent 'training' step with deterministic data."""
+    w = state["params"]
+    g = 2 * (w - batch["target"])
+    w2 = w - 0.1 * g
+    loss = jnp.sum((w2 - batch["target"]) ** 2)
+    return ({"params": w2, "step": state["step"] + 1},
+            {"loss": loss})
+
+
+def batch_fn(step):
+    return {"target": jnp.asarray(float(step % 3), jnp.float32)}
+
+
+class TestResilientLoop:
+    def test_fault_recovery_resumes_from_checkpoint(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        loop = ResilientLoop(quad_step, batch_fn, mgr, checkpoint_every=5,
+                             fault_injector=FaultInjector(fail_at=[12, 23]))
+        state = {"params": jnp.asarray(10.0), "step": jnp.asarray(0)}
+        out = loop.run(state, num_steps=30)
+        assert out["restores"] == 2
+        assert int(out["step"]) == 30
+        assert np.isfinite(float(out["metrics"]["loss"]))
+
+    def test_no_checkpoint_to_restore_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        loop = ResilientLoop(quad_step, batch_fn, mgr, checkpoint_every=100,
+                             fault_injector=FaultInjector(fail_at=[0]))
+        state = {"params": jnp.asarray(1.0), "step": jnp.asarray(0)}
+        with pytest.raises(RuntimeError):
+            loop.run(state, num_steps=5)
+
+    def test_max_restores_enforced(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+
+        def nan_step(state, batch):
+            return state, {"loss": jnp.asarray(float("nan"))}
+
+        loop = ResilientLoop(nan_step, batch_fn, mgr, checkpoint_every=1,
+                             max_restores=3)
+        state = {"params": jnp.asarray(1.0), "step": jnp.asarray(0)}
+        # first step checkpoints? no — nan raises before any checkpoint;
+        # seed one checkpoint manually so restores can proceed
+        mgr.save(state, 0, blocking=True)
+        with pytest.raises(FloatingPointError):
+            loop.run(state, num_steps=10)
+
+    def test_deterministic_replay(self, tmp_path):
+        """Restored run produces the same final state as an unfailed run
+        (data pipeline is a pure function of step)."""
+        mgr1 = CheckpointManager(str(tmp_path / "a"))
+        clean = ResilientLoop(quad_step, batch_fn, mgr1,
+                              checkpoint_every=4)
+        s0 = {"params": jnp.asarray(5.0), "step": jnp.asarray(0)}
+        out_clean = clean.run(dict(s0), num_steps=20)
+
+        mgr2 = CheckpointManager(str(tmp_path / "b"))
+        faulty = ResilientLoop(quad_step, batch_fn, mgr2,
+                               checkpoint_every=4,
+                               fault_injector=FaultInjector(fail_at=[9, 17]))
+        out_faulty = faulty.run(dict(s0), num_steps=20)
+        np.testing.assert_allclose(
+            float(out_clean["state"]["params"]),
+            float(out_faulty["state"]["params"]), rtol=1e-6)
+
+
+class TestStraggler:
+    def test_detects_persistent_straggler(self):
+        fired = []
+        mon = StragglerMonitor(ratio=1.5, patience=2,
+                               on_straggler=lambda s, d: fired.append(s))
+        for i in range(16):
+            mon.record(i, 0.1)
+        for i in range(16, 20):
+            mon.record(i, 0.5)
+        assert fired, "straggler not detected"
+
+    def test_tolerates_single_blip(self):
+        mon = StragglerMonitor(ratio=1.5, patience=3)
+        for i in range(16):
+            mon.record(i, 0.1)
+        assert not mon.record(16, 0.9)   # one slow step: no mitigation
+        for i in range(17, 30):
+            assert not mon.record(i, 0.1)
+        assert mon.events == []

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tables import TableSpec
+from repro.kernels import attention, lut_activation, qmatmul
+from repro.kernels.ref import (flash_attention_ref, lut_activation_ref,
+                               qmatmul_ref)
+
+RNG = np.random.RandomState(0)
+
+
+class TestLutActivationKernel:
+    @pytest.mark.parametrize("shape", [(7,), (3, 5), (2, 130, 3), (1024,),
+                                       (256, 128)])
+    @pytest.mark.parametrize("indexing", ["trunc", "nearest", "interp"])
+    def test_matches_ref(self, shape, indexing):
+        spec = TableSpec("sigmoid", 512, -8.0, 8.0, None, indexing)
+        x = jnp.asarray(RNG.randn(*shape).astype(np.float32) * 4)
+        ref = lut_activation_ref(x, spec)
+        pal = lut_activation(x, spec, backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        spec = TableSpec("tanh", 256, -4.0, 4.0)
+        x = jnp.asarray(RNG.randn(64).astype(np.float32)).astype(dtype)
+        ref = lut_activation_ref(x, spec).astype(jnp.float32)
+        pal = lut_activation(x, spec, backend="pallas").astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=1e-2)
+
+    def test_quantized_table(self):
+        from repro.core.qtypes import AC_FIXED_18_8
+        spec = TableSpec("exp", 1024, -16.0, 0.0, AC_FIXED_18_8)
+        x = jnp.asarray(-RNG.rand(200).astype(np.float32) * 16)
+        np.testing.assert_allclose(
+            np.asarray(lut_activation(x, spec, backend="pallas")),
+            np.asarray(lut_activation_ref(x, spec)), atol=1e-6)
+
+
+class TestQMatmulKernel:
+    @pytest.mark.parametrize("mkn", [(4, 8, 4), (128, 128, 128),
+                                     (130, 300, 70), (256, 512, 384),
+                                     (1, 1024, 1)])
+    def test_matches_ref(self, mkn):
+        m, k, n = mkn
+        a = RNG.randint(-127, 128, (m, k)).astype(np.int8)
+        b = RNG.randint(-127, 128, (k, n)).astype(np.int8)
+        sa = (RNG.rand(m, 1).astype(np.float32) + 0.1) * 0.01
+        sb = (RNG.rand(1, n).astype(np.float32) + 0.1) * 0.01
+        ref = qmatmul_ref(a, b, sa, sb)
+        pal = qmatmul(a, b, sa, sb, backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_scalar_scales(self):
+        a = RNG.randint(-127, 128, (32, 64)).astype(np.int8)
+        b = RNG.randint(-127, 128, (64, 16)).astype(np.int8)
+        ref = qmatmul_ref(a, b, 0.5, 2.0)
+        pal = qmatmul(a, b, 0.5, 2.0, backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref))
+
+    def test_int32_accumulation_exact(self):
+        """int8×int8 at K=1024 can reach ±16.6M — must not saturate."""
+        a = np.full((8, 1024), 127, np.int8)
+        b = np.full((1024, 8), 127, np.int8)
+        out = qmatmul(a, b, 1.0, 1.0, backend="pallas")
+        assert float(out[0, 0]) == 127.0 * 127.0 * 1024
+
+    @pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 512)])
+    def test_block_shapes(self, blocks):
+        bm, bn, bk = blocks
+        a = RNG.randint(-8, 8, (300, 200)).astype(np.int8)
+        b = RNG.randint(-8, 8, (200, 100)).astype(np.int8)
+        ref = qmatmul_ref(a, b, 1.0, 1.0)
+        pal = qmatmul(a, b, 1.0, 1.0, backend="pallas", bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref))
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("dims", [
+        (1, 4, 4, 64, 64, 32),     # MHA
+        (2, 8, 2, 100, 100, 64),   # GQA, unaligned seq
+        (1, 8, 1, 128, 256, 64),   # MQA, tail queries (Sq < Skv)
+        (2, 4, 4, 17, 40, 16),     # tiny ragged
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, dims, causal):
+        b, hq, hkv, sq, skv, d = dims
+        q = jnp.asarray(RNG.randn(b, hq, sq, d).astype(np.float32))
+        k = jnp.asarray(RNG.randn(b, hkv, skv, d).astype(np.float32))
+        v = jnp.asarray(RNG.randn(b, hkv, skv, d).astype(np.float32))
+        ref = flash_attention_ref(q, k, v, causal=causal)
+        pal = attention(q, k, v, causal=causal, backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+
+    def test_bf16(self):
+        q = jnp.asarray(RNG.randn(1, 2, 64, 32), jnp.bfloat16)
+        k = jnp.asarray(RNG.randn(1, 2, 64, 32), jnp.bfloat16)
+        v = jnp.asarray(RNG.randn(1, 2, 64, 32), jnp.bfloat16)
+        ref = flash_attention_ref(q, k, v, causal=True).astype(jnp.float32)
+        pal = attention(q, k, v, causal=True,
+                        backend="pallas").astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=3e-2)
+
+    def test_softmax_scale(self):
+        q = jnp.asarray(RNG.randn(1, 2, 32, 16).astype(np.float32))
+        k = jnp.asarray(RNG.randn(1, 2, 32, 16).astype(np.float32))
+        v = jnp.asarray(RNG.randn(1, 2, 32, 16).astype(np.float32))
+        ref = flash_attention_ref(q, k, v, causal=True, softmax_scale=0.5)
+        pal = attention(q, k, v, causal=True, softmax_scale=0.5,
+                        backend="pallas")
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                                   atol=2e-5, rtol=1e-4)
+
+
+class TestBackendRegistry:
+    def test_fallback_and_contexts(self):
+        from repro.core.registry import get_impl, list_ops, use_backend
+        assert "lut_activation" in list_ops()
+        with use_backend("pallas"):
+            f = get_impl("attention")
+            assert f is not None
+        # unknown backend falls back to ref
+        f = get_impl("attention", "verilog", allow_fallback=True)
+        assert f is flash_attention_ref

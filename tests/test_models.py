@@ -1,0 +1,191 @@
+"""Per-arch smoke tests (reduced configs, per the brief) + quantization
+context variants + serving consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.core.precision import PrecisionPolicy
+from repro.core.qtypes import AC_FIXED_16_6, E4M3, FixedPointType
+from repro.models.api import get_family, loss_fn
+from repro.nn.context import QuantContext
+
+CTX = QuantContext(compute_dtype=jnp.float32)
+ARCHS = [a for a in list_archs() if a != "jet-mlp"]
+
+
+def make_smoke_batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.RandomState(seed)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.randint(0, cfg.vocab, (b, s)),
+                                   jnp.int32)}
+    if cfg.family == "encdec":
+        batch["enc_input"] = jnp.asarray(
+            rng.randn(b, 32, cfg.d_model).astype(np.float32) * 0.1)
+    if cfg.family == "vlm":
+        batch["img_embed"] = jnp.asarray(
+            rng.randn(b, cfg.n_img_tokens, cfg.d_model
+                      ).astype(np.float32) * 0.1)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    """One forward/train step per assigned architecture: output shapes
+    correct, loss finite, gradients finite and non-trivial."""
+    cfg = get_config(arch).smoke()
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    batch = make_smoke_batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg, CTX), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert float(metrics["accuracy"]) >= 0.0
+    gleaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves)
+    assert any(float(jnp.abs(g).max()) > 0 for g in gleaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_logits_shape(arch):
+    cfg = get_config(arch).smoke()
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    batch = make_smoke_batch(cfg, b=2, s=16)
+    if cfg.family == "lm":
+        logits, _, _ = fam.forward(params, batch["tokens"], cfg, CTX)
+    elif cfg.family == "encdec":
+        logits = fam.forward(params, batch, cfg, CTX)
+    elif cfg.family == "vlm":
+        logits, _ = fam.forward(params, batch["tokens"],
+                                batch["img_embed"], cfg, CTX)
+    else:
+        logits, _ = fam.forward(params, batch["tokens"], cfg, CTX)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("mode,policy", [
+    ("fake", PrecisionPolicy.uniform(AC_FIXED_16_6)),
+    ("fake", PrecisionPolicy.uniform(E4M3)),
+    ("int8", PrecisionPolicy.uniform(FixedPointType(8, 1))),
+])
+def test_quantized_context_variants(mode, policy):
+    """The paper's quantization modes run end-to-end on a dense LM."""
+    cfg = get_config("yi-6b").smoke()
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext(mode=mode, policy=policy,
+                       compute_dtype=jnp.float32)
+    batch = make_smoke_batch(cfg, s=16)
+    loss, _ = loss_fn(params, batch, cfg, ctx)
+    assert np.isfinite(float(loss))
+    # quantized loss differs from the fp loss but stays in the same range
+    loss_fp, _ = loss_fn(params, batch, cfg, CTX)
+    assert abs(float(loss) - float(loss_fp)) < 2.0
+
+
+def test_lut_context_end_to_end():
+    """LUT activations + LUT softmax through a full model."""
+    cfg = get_config("gemma-2b").smoke()   # GeGLU: gelu tables on the path
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    ctx = QuantContext(use_lut=True, table_n=2048,
+                       compute_dtype=jnp.float32)
+    batch = make_smoke_batch(cfg, s=16)
+    loss_lut, _ = loss_fn(params, batch, cfg, ctx)
+    loss_fp, _ = loss_fn(params, batch, cfg, CTX)
+    assert np.isfinite(float(loss_lut))
+    assert abs(float(loss_lut) - float(loss_fp)) < 0.1
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v2-236b",
+                                  "olmoe-1b-7b", "mamba2-370m",
+                                  "zamba2-1.2b", "whisper-base",
+                                  "llama-3.2-vision-11b"])
+def test_serving_chunked_vs_monolithic(arch):
+    """prefill(S)+decode(k) must equal prefill(S+k) — cache correctness
+    across every cache type (KV, MLA latent, SSM state, cross-KV)."""
+    cfg = get_config(arch).smoke()
+    fam = get_family(cfg)
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    B, S, DEC = 2, 8, 3
+    rng = np.random.RandomState(1)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (B, S + DEC)), jnp.int32)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["enc_input"] = jnp.asarray(
+            rng.randn(B, 16, cfg.d_model).astype(np.float32) * 0.1)
+    if cfg.family == "vlm":
+        extras["img_embed"] = jnp.asarray(
+            rng.randn(B, cfg.n_img_tokens, cfg.d_model
+                      ).astype(np.float32) * 0.1)
+
+    def run_prefill(upto):
+        cache = fam.init_cache(cfg, B, S + DEC, jnp.float32)
+        if cfg.family in ("encdec", "vlm"):
+            return fam.prefill(params, {"tokens": toks[:, :upto], **extras},
+                               cache, cfg, CTX)
+        return fam.prefill(params, toks[:, :upto], cache, cfg, CTX)
+
+    ref_last, _ = run_prefill(S + DEC)
+    lg, cache = run_prefill(S)
+    pos = jnp.full((B,), S, jnp.int32)
+    for t in range(DEC):
+        lg, cache = fam.decode_step(params, toks[:, S + t:S + t + 1],
+                                    cache, pos + t, cfg, CTX)
+    err = float(jnp.abs(lg[:, 0] - ref_last[:, 0]).max())
+    assert err < 1e-3, err
+
+
+def test_ssd_chunked_equals_stepwise():
+    """Mamba-2 SSD chunked scan == naive recurrence (both states)."""
+    from repro.nn.ssm import (SSMDims, mamba2_apply, mamba2_decode_step,
+                              mamba2_init, mamba2_state_spec)
+    d = SSMDims(d_model=32, d_state=8, head_dim=16, expand=2, chunk=4)
+    p = mamba2_init(jax.random.PRNGKey(0), d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    y_chunk, fin = mamba2_apply(p, x, d, CTX)
+    state = mamba2_state_spec(d, 2)
+    ys = []
+    for t in range(16):
+        yt, state = mamba2_decode_step(p, x[:, t:t + 1], state, d, CTX)
+        ys.append(yt)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fin["ssm"]),
+                               np.asarray(state["ssm"]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(fin["conv"]),
+                               np.asarray(state["conv"]), atol=1e-6)
+
+
+def test_moe_balance_and_capacity():
+    """MoE routes every token somewhere (dropless) and respects capacity."""
+    from repro.nn.moe import MoEDims, moe_apply, moe_init
+    d = MoEDims(d_model=16, d_ff=32, n_experts=4, top_k=2)
+    p = moe_init(jax.random.PRNGKey(0), d)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, aux = moe_apply(p, x, d, CTX, dropless=True)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0  # Switch aux loss lower bound is 1 at balance
+    # output actually depends on routing (not all-zero)
+    assert float(jnp.abs(y).max()) > 0
+
+
+def test_n_params_analytic_vs_actual():
+    """ModelConfig.n_params must match the real parameter count (it feeds
+    the roofline's MODEL_FLOPS)."""
+    for arch in ["yi-6b", "gemma-2b", "olmoe-1b-7b", "mamba2-370m"]:
+        cfg = get_config(arch).smoke()
+        fam = get_family(cfg)
+        shapes = jax.eval_shape(
+            lambda: fam.init(jax.random.PRNGKey(0), cfg))
+        actual = sum(np.prod(l.shape) for l in
+                     jax.tree_util.tree_leaves(shapes))
+        predicted = cfg.n_params()
+        assert abs(actual - predicted) / actual < 0.02, \
+            (arch, actual, predicted)

@@ -1,0 +1,123 @@
+"""Property + unit tests for the parametric numeric formats (paper §IV)."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qtypes import (AC_FIXED_16_6, AC_FIXED_18_8, E4M3, E5M2,
+                               FixedPointType, MiniFloatType, storage_dtype)
+
+fixed_types = st.builds(
+    FixedPointType,
+    width=st.integers(2, 18),
+    int_bits=st.integers(1, 10),
+    signed=st.just(True),
+    rounding=st.sampled_from(["rnd_even", "rnd", "trn"]),
+    overflow=st.sampled_from(["sat", "wrap"]),
+).filter(lambda t: t.int_bits <= t.width)
+
+
+class TestFixedPoint:
+    def test_classic_hls4ml_types(self):
+        # ac_fixed<16,6>: lsb 2^-10, range [-32, 32)
+        assert AC_FIXED_16_6.lsb == 2.0 ** -10
+        assert AC_FIXED_16_6.min_value == -32.0
+        assert AC_FIXED_16_6.max_value == 32.0 - 2.0 ** -10
+        # the paper's softmax table type, sized for an 18k BRAM
+        assert AC_FIXED_18_8.width == 18
+
+    def test_storage_dtype(self):
+        assert storage_dtype(8) == jnp.int8
+        assert storage_dtype(9) == jnp.int16
+        assert storage_dtype(18) == jnp.int32
+        with pytest.raises(ValueError):
+            storage_dtype(40)
+
+    @settings(max_examples=50, deadline=None)
+    @given(fixed_types, st.lists(st.floats(-1000, 1000, allow_nan=False),
+                                 min_size=1, max_size=16))
+    def test_quantize_properties(self, t, xs):
+        x = jnp.asarray(np.asarray(xs, np.float32))
+        q = np.asarray(t.quantize(x))
+        # closure: quantization is idempotent
+        q2 = np.asarray(t.quantize(jnp.asarray(q)))
+        assert np.array_equal(q, q2)
+        # representable: q is an exact multiple of the lsb
+        assert np.allclose(np.round(q / t.lsb), q / t.lsb, atol=1e-3)
+        if t.overflow == "sat":
+            assert q.min() >= t.min_value - 1e-9
+            assert q.max() <= t.max_value + 1e-9
+            # quantization error bounded inside the range: half an lsb
+            # for round modes, a full lsb for truncation
+            bound = t.lsb * (1.0 if t.rounding == "trn" else 0.5) + 1e-6
+            inside = (np.asarray(xs) >= t.min_value) & \
+                     (np.asarray(xs) <= t.max_value)
+            assert np.all(np.abs(q[inside] - np.asarray(xs)[inside])
+                          <= bound)
+
+    @settings(max_examples=30, deadline=None)
+    @given(fixed_types)
+    def test_numpy_twin_matches_jax(self, t):
+        x = np.linspace(t.min_value * 1.5, t.max_value * 1.5, 257,
+                        dtype=np.float32)
+        a = np.asarray(t.quantize(jnp.asarray(x)))
+        b = t.np_quantize(x)
+        assert np.allclose(a, b, atol=t.lsb * 0.51), (t,)
+
+    def test_monotone_sat(self):
+        t = FixedPointType(8, 3)
+        x = jnp.linspace(-10, 10, 1001)
+        q = np.asarray(t.quantize(x))
+        assert np.all(np.diff(q) >= -1e-9)
+
+
+class TestMiniFloat:
+    def test_e4m3_matches_ml_dtypes(self):
+        rng = np.random.RandomState(0)
+        xs = np.concatenate([
+            rng.randn(5000).astype(np.float32) * 100,
+            np.asarray([0.0, -0.0, 448.0, 464.0, 1e-9, 2**-9, -2**-10],
+                       np.float32)])
+        ours = np.asarray(E4M3.quantize(jnp.asarray(xs)))
+        ref = np.clip(xs, -448, 448).astype(ml_dtypes.float8_e4m3fn
+                                            ).astype(np.float32)
+        assert np.array_equal(ours, ref)
+
+    def test_e5m2_matches_ml_dtypes(self):
+        rng = np.random.RandomState(1)
+        xs = rng.randn(5000).astype(np.float32) * 3000
+        ours = np.asarray(E5M2.quantize(jnp.asarray(xs)))
+        ref = np.clip(xs, -57344, 57344).astype(ml_dtypes.float8_e5m2
+                                                ).astype(np.float32)
+        assert np.array_equal(ours, ref)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(2, 6), st.integers(1, 5),
+           st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=1,
+                    max_size=16))
+    def test_minifloat_properties(self, e, m, xs):
+        t = MiniFloatType(e, m)
+        x = jnp.asarray(np.asarray(xs, np.float32))
+        q = np.asarray(t.quantize(x))
+        # idempotent
+        assert np.array_equal(np.asarray(t.quantize(jnp.asarray(q))), q)
+        # bounded by max finite
+        assert np.all(np.abs(q) <= t.max_value + 1e-9)
+        # relative error bounded for in-range normal values
+        xa = np.abs(np.asarray(xs, np.float32))
+        normal = (xa >= 2.0 ** t.min_normal_exp) & (xa <= t.max_value)
+        rel = np.abs(q - np.asarray(xs, np.float32))[normal] / xa[normal]
+        assert np.all(rel <= 2.0 ** (-t.man_bits - 1) + 1e-7)
+
+    def test_bf16_is_a_minifloat(self):
+        t = MiniFloatType(8, 7)
+        xs = np.random.RandomState(2).randn(2000).astype(np.float32) * 50
+        ours = np.asarray(t.quantize(jnp.asarray(xs)))
+        ref = xs.astype(ml_dtypes.bfloat16).astype(np.float32)
+        # f32 emulation arithmetic can land one ulp off exactly at
+        # round-to-even ties; require exactness on >= 99.9%
+        exact = np.mean(ours == ref)
+        assert exact > 0.999, exact
+        np.testing.assert_allclose(ours, ref, rtol=2.0 ** -8)

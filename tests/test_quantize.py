@@ -1,0 +1,99 @@
+"""Quantizer tests: STE gradients, dynamic-range int8, whole-tree PTQ."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.precision import LayerPrecision, PrecisionPolicy
+from repro.core.qtypes import E4M3, FixedPointType, QTensor
+from repro.core.quantize import (calibrate_scale, dequantize_params,
+                                 fake_quant, ptq_params, quantize_dynamic)
+
+
+class TestSTE:
+    def test_identity_gradient_in_range(self):
+        t = FixedPointType(8, 3)
+        g = jax.grad(lambda x: jnp.sum(fake_quant(x, t)))(
+            jnp.asarray([0.5, -2.0, 3.9]))
+        np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 1.0])
+
+    def test_zero_gradient_out_of_range(self):
+        t = FixedPointType(8, 3)  # range ±8
+        g = jax.grad(lambda x: jnp.sum(fake_quant(x, t)))(
+            jnp.asarray([100.0, -50.0, 1.0]))
+        np.testing.assert_array_equal(np.asarray(g), [0.0, 0.0, 1.0])
+
+    def test_minifloat_ste(self):
+        g = jax.grad(lambda x: jnp.sum(fake_quant(x, E4M3)))(
+            jnp.asarray([1.0, 1000.0]))
+        np.testing.assert_array_equal(np.asarray(g), [1.0, 0.0])
+
+    def test_qat_reduces_loss(self):
+        """Fake-quant training actually optimizes (STE works end-to-end)."""
+        t = FixedPointType(8, 2)
+        w = jnp.asarray(np.random.RandomState(0).randn(8, 8), jnp.float32)
+        x = jnp.asarray(np.random.RandomState(1).randn(32, 8), jnp.float32)
+        y = x @ jnp.asarray(np.random.RandomState(2).randn(8, 8),
+                            jnp.float32)
+
+        def loss(w):
+            return jnp.mean((x @ fake_quant(w, t) - y) ** 2)
+
+        l0 = float(loss(w))
+        for _ in range(60):
+            w = w - 0.05 * jax.grad(loss)(w)
+        assert float(loss(w)) < 0.5 * l0
+
+
+class TestDynamicQuant:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 8), st.integers(1, 6))
+    def test_roundtrip_error_bound(self, rows, cols):
+        t = FixedPointType(8, 1)
+        x = jnp.asarray(np.random.RandomState(rows * 7 + cols)
+                        .randn(rows, cols).astype(np.float32))
+        q = quantize_dynamic(x, t, channel_axes=(1,))
+        err = np.abs(np.asarray(q.dequantize()) - np.asarray(x))
+        # per-channel scale: error ≤ scale/2 per column
+        bound = np.asarray(q.scale)[0] * 0.5 + 1e-7
+        assert np.all(err <= bound + 1e-6)
+
+    def test_scale_shapes(self):
+        x = jnp.ones((4, 8, 16))
+        t = FixedPointType(8, 1)
+        assert calibrate_scale(x, t).shape == (1, 1, 1)
+        assert calibrate_scale(x, t, channel_axes=(2,)).shape == (1, 1, 16)
+        assert calibrate_scale(x, t, channel_axes=(-1,)).shape == (1, 1, 16)
+
+
+class TestPTQ:
+    def test_ptq_tree_roundtrip(self):
+        params = {"layer": {"w": jnp.asarray(np.random.RandomState(0)
+                                             .randn(16, 8), jnp.float32),
+                            "b": jnp.zeros((8,))},
+                  "norm": {"scale": jnp.ones((16,))}}
+        qp = ptq_params(params, FixedPointType(8, 1))
+        assert isinstance(qp["layer"]["w"], QTensor)
+        assert qp["layer"]["b"] is params["layer"]["b"]       # untouched
+        assert qp["norm"]["scale"] is params["norm"]["scale"]
+        deq = dequantize_params(qp)
+        err = np.abs(np.asarray(deq["layer"]["w"])
+                     - np.asarray(params["layer"]["w"]))
+        assert err.max() < 0.05
+
+    def test_ptq_per_layer_policy(self):
+        pol = PrecisionPolicy(
+            default=LayerPrecision(weights=FixedPointType(8, 1)),
+            overrides=(("*critical*", LayerPrecision(weights=None)),))
+        params = {"critical_proj": {"w": jnp.ones((4, 4))},
+                  "normal": {"w": jnp.ones((4, 4))}}
+        qp = ptq_params(params, pol)
+        assert not isinstance(qp["critical_proj"]["w"], QTensor)
+        assert isinstance(qp["normal"]["w"], QTensor)
+
+    def test_policy_resolution_order(self):
+        a, b = LayerPrecision(), LayerPrecision(weights=E4M3)
+        pol = PrecisionPolicy(overrides=(("*", a), ("*attn*", b)))
+        assert pol.resolve("block/attn/wq").weights is E4M3
+        assert pol.resolve("block/mlp/up").weights is None

@@ -1,0 +1,118 @@
+"""End-to-end behaviour tests: the paper's full pipeline on its canonical
+workload (train fp32 → PTQ → accuracy claim → LUT deployment), plus the
+integrated train/serve drivers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision import PrecisionPolicy
+from repro.core.qtypes import AC_FIXED_16_6, E4M3, FixedPointType
+from repro.models import mlp
+from repro.nn.context import QuantContext
+
+
+def jet_data(n, seed=0):
+    """Synthetic jet-tagging-like task: 16 features → 5 classes.  Class
+    centers are FIXED (task identity); ``seed`` draws fresh noise/labels
+    (train/test splits share the task)."""
+    rng_task = np.random.RandomState(0)
+    centers = rng_task.randn(5, 16) * 2.0
+    rng = np.random.RandomState(seed + 1)
+    y = rng.randint(0, 5, n)
+    x = centers[y] + rng.randn(n, 16) * 1.0
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def trained_mlp():
+    x, y = jet_data(2048)
+    params = mlp.init(jax.random.PRNGKey(0))
+    ctx = QuantContext(compute_dtype=jnp.float32)
+
+    @jax.jit
+    def step(params, lr):
+        (l, m), g = jax.value_and_grad(mlp.loss, has_aux=True)(
+            params, {"x": x, "y": y}, ctx)
+        return jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params,
+                                      g), m
+
+    for i in range(300):
+        params, m = step(params, 0.05)
+    assert float(m["accuracy"]) > 0.85, float(m["accuracy"])
+    return params, float(m["accuracy"])
+
+
+class TestPaperPipeline:
+    def test_fp32_baseline_trains(self, trained_mlp):
+        _, acc = trained_mlp
+        assert acc > 0.85
+
+    def test_ptq_ac_fixed_16_6_small_accuracy_loss(self, trained_mlp):
+        """The paper's core claim (inherited from hls4ml): ac_fixed<16,6>
+        post-training quantization costs ~no accuracy."""
+        params, acc_fp = trained_mlp
+        x, y = jet_data(2048, seed=1)
+        ctx_q = QuantContext(mode="fake",
+                             policy=PrecisionPolicy.uniform(AC_FIXED_16_6),
+                             compute_dtype=jnp.float32)
+        pred = mlp.forward(params, x, ctx_q)
+        acc_q = float(jnp.mean((jnp.argmax(pred, -1) == y)))
+        assert acc_q > acc_fp - 0.02, (acc_q, acc_fp)
+
+    def test_minifloat_between_fixed8_and_fp32(self, trained_mlp):
+        """Paper §IV-B: custom floats open a design space — E4M3 should
+        not be materially worse than fp32 here."""
+        params, acc_fp = trained_mlp
+        x, y = jet_data(2048, seed=2)
+
+        def acc_with(qt):
+            ctx = QuantContext(mode="fake",
+                               policy=PrecisionPolicy.uniform(qt),
+                               compute_dtype=jnp.float32)
+            p = mlp.forward(params, x, ctx)
+            return float(jnp.mean((jnp.argmax(p, -1) == y)))
+
+        acc_e4m3 = acc_with(E4M3)
+        assert acc_e4m3 > acc_fp - 0.05
+
+    def test_lut_softmax_deployment(self, trained_mlp):
+        """Deployed predict() with the 1024×18-bit table softmax matches
+        exact probabilities to table precision."""
+        params, _ = trained_mlp
+        x, _ = jet_data(256, seed=3)
+        ctx_lut = QuantContext(use_lut=True, compute_dtype=jnp.float32)
+        ctx_fp = QuantContext(compute_dtype=jnp.float32)
+        p_lut = mlp.predict(params, x, ctx_lut)
+        p_fp = mlp.predict(params, x, ctx_fp)
+        assert float(jnp.abs(p_lut - p_fp).max()) < 2e-2
+        agree = jnp.mean((jnp.argmax(p_lut, -1) == jnp.argmax(p_fp, -1)))
+        assert float(agree) > 0.99
+
+
+class TestDrivers:
+    def test_train_driver_smoke(self, tmp_path):
+        from repro.launch.train import main
+        out = main(["--arch", "olmoe-1b-7b", "--smoke", "--steps", "6",
+                    "--batch", "4", "--seq", "32", "--microbatches", "2",
+                    "--ckpt-dir", str(tmp_path), "--ckpt-every", "3",
+                    "--log-every", "0"])
+        assert int(out["step"]) == 6
+
+    def test_train_driver_fault_injection(self, tmp_path):
+        from repro.launch.train import main
+        out = main(["--arch", "yi-6b", "--smoke", "--steps", "8",
+                    "--batch", "2", "--seq", "16",
+                    "--ckpt-dir", str(tmp_path), "--ckpt-every", "2",
+                    "--fail-at", "5", "--log-every", "0"])
+        assert out["restores"] == 1
+        assert int(out["step"]) == 8
+
+    def test_serve_driver_quantized(self):
+        from repro.launch.serve import main
+        done = main(["--arch", "gemma-2b", "--smoke", "--requests", "3",
+                     "--batch", "2", "--prompt-len", "4", "--gen-len", "4",
+                     "--quant", "fake", "--lut"])
+        assert len(done) == 3
+        assert all(len(seq) >= 4 for seq in done)

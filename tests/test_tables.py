@@ -1,0 +1,120 @@
+"""Tests for the trace-time constant tables (the paper's constexpr claim)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qtypes import AC_FIXED_18_8, FixedPointType
+from repro.core.tables import (COMPUTE_FNS, SoftmaxTablePolicy, TableSpec,
+                               get_table, lut_activation, register_compute,
+                               softmax_table_policy, table_lookup,
+                               table_softmax)
+
+
+class TestConstexprTables:
+    def test_exact_at_knots(self):
+        """The constant table holds exactly f(lo + i·step) — the paper's
+        equivalence between constexpr evaluation and runtime math."""
+        spec = TableSpec("sigmoid", 256, -6.0, 6.0)
+        t = get_table(spec)
+        knots = spec.lo + spec.step * np.arange(spec.n)
+        np.testing.assert_array_equal(
+            t.np_values, COMPUTE_FNS["sigmoid"](knots).astype(np.float32))
+
+    def test_values_are_trace_time_constants(self):
+        """Building a table never traces jax — it is pure NumPy."""
+        spec = TableSpec("exp", 64, -4.0, 0.0)
+        t = get_table(spec)
+        assert isinstance(t.np_values, np.ndarray)
+        assert not t.np_values.flags.writeable  # immutable constant
+
+    def test_cache_identity(self):
+        a = get_table(TableSpec("tanh", 128, -4.0, 4.0))
+        b = get_table(TableSpec("tanh", 128, -4.0, 4.0))
+        assert a is b
+
+    def test_quantized_table_values_representable(self):
+        qt = FixedPointType(10, 2)
+        t = get_table(TableSpec("sigmoid", 128, -8.0, 8.0, qt))
+        lsb = qt.lsb
+        assert np.allclose(np.round(t.np_values / lsb) * lsb, t.np_values)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from(["sigmoid", "tanh", "silu_gate", "gelu_gate"]),
+           st.integers(64, 2048))
+    def test_interp_error_shrinks_with_n(self, fn, n):
+        """Linear interpolation error is O(step²) for smooth activations."""
+        spec = TableSpec(fn, n, -8.0, 8.0, indexing="interp")
+        x = jnp.linspace(-7.9, 7.9, 511)
+        y = table_lookup(x, jnp.asarray(get_table(spec).np_values),
+                         spec.lo, spec.hi, "interp")
+        ref = COMPUTE_FNS[fn](np.asarray(x, np.float64))
+        err = np.max(np.abs(np.asarray(y) - ref))
+        assert err <= 4.0 * (16.0 / n) ** 2  # |f''| ≤ ~1 for these gates
+
+    def test_trunc_matches_hls4ml_indexing(self):
+        spec = TableSpec("sigmoid", 16, 0.0, 16.0, indexing="trunc")
+        t = get_table(spec)
+        y = table_lookup(jnp.asarray([3.99]), jnp.asarray(t.np_values),
+                         0.0, 16.0, "trunc")
+        assert float(y[0]) == t.np_values[3]  # floor, not round
+
+    def test_gated_form_asymptotics(self):
+        """gated silu/gelu stay exact for |x| >> table domain — the
+        de-specialized improvement over tabulating f directly."""
+        x = jnp.asarray([50.0, 100.0, -100.0])
+        y = lut_activation(x, "gelu", gated=True)
+        np.testing.assert_allclose(np.asarray(y), [50.0, 100.0, 0.0],
+                                   atol=1e-3)
+        # faithful direct tabulation saturates (documented hls4ml behavior)
+        y2 = lut_activation(x, "gelu", gated=False)
+        assert float(y2[1]) < 9.0
+
+
+class TestSoftmax:
+    def test_softmax_table_override(self):
+        """Paper §III: softmax silently overrides the user type with
+        1024×18-bit tables; respect_user_type disables the override."""
+        user = FixedPointType(8, 3)
+        p = softmax_table_policy(user)
+        assert p.qtype == AC_FIXED_18_8 and p.n == 1024
+        p2 = softmax_table_policy(user, respect_user_type=True)
+        assert p2.qtype == user
+
+    def test_lut_softmax_close_to_exact(self):
+        x = jnp.asarray(np.random.RandomState(0).randn(8, 64) * 3)
+        # default policy: the paper's 1024-entry 18-bit fixed-point table
+        y = table_softmax(x, policy=SoftmaxTablePolicy(indexing="interp"))
+        ref = jax.nn.softmax(x, axis=-1)
+        assert float(jnp.abs(y - ref).max()) < 5e-3
+        # float-valued table + interpolation is comparable (the residual
+        # error is the max-shifted exp-table discretization, not the
+        # 18-bit value quantization — measured in bench_lut_tables)
+        y2 = table_softmax(x, policy=SoftmaxTablePolicy(qtype=None,
+                                                        indexing="interp"))
+        assert float(jnp.abs(y2 - ref).max()) < 5e-3
+        np.testing.assert_allclose(np.asarray(jnp.sum(y, -1)), 1.0,
+                                   rtol=1e-5)
+
+    def test_faithful_invert_table_softmax_degrades_on_long_rows(self):
+        """The hls4ml invert table saturates at inv_hi — quantifying the
+        drawback the paper's §III analysis identifies."""
+        x = jnp.zeros((1, 512))  # row sum of exps = 512 > inv_hi (64)
+        y_faithful = table_softmax(
+            x, policy=SoftmaxTablePolicy(exact_divide=False))
+        y_fixed = table_softmax(
+            x, policy=SoftmaxTablePolicy(exact_divide=True))
+        err_f = float(jnp.abs(jnp.sum(y_faithful, -1) - 1.0).max())
+        err_x = float(jnp.abs(jnp.sum(y_fixed, -1) - 1.0).max())
+        assert err_f > 0.5           # saturated invert table: badly off
+        assert err_x < 1e-3          # exact divide: fine
+
+    def test_custom_compute_registration(self):
+        @register_compute("_test_square")
+        def _sq(x):
+            return x * x
+
+        t = get_table(TableSpec("_test_square", 32, 0.0, 4.0))
+        assert t.np_values[8] == pytest.approx(1.0)  # f(0 + 8*0.125) = 1
