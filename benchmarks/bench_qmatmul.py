@@ -3,7 +3,12 @@ DSP-slice MACs on FPGA, int8 MXU with int32 accumulation on TPU.
 
 Compares int8 qmatmul vs bf16/f32 matmul on compiled-HLO flops/bytes (the
 HBM-traffic halving is the structural win) and CPU wall time of the
-interpret-mode kernel vs its oracle (numerical parity is in tests/)."""
+interpret-mode kernel vs its oracle (numerical parity is in tests/).
+
+Also measures the **fused epilogue** (hls4ml's dense→activation dataflow
+fusion, ported): linear+bias+LUT as ONE ``pallas_call`` vs the three-launch
+composition — kernel-launch counts straight from the jaxpr, intermediate
+HBM traffic eliminated, and ref-backend wall time."""
 
 import time
 
@@ -11,13 +16,67 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tables import TableSpec
+from repro.kernels.ops import lut_activation, qmatmul
 from repro.kernels.ref import qmatmul_ref
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, count_jaxpr_primitive
 
 
 def _cost(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
     return analyze_hlo(c.as_text(), 1)
+
+
+def run_fused_epilogue(m=512, k=512, n=512, iters=5):
+    """Fused qmatmul+bias+LUT (1 launch) vs the unfused composition (3)."""
+    rows = []
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randint(-127, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.randint(-127, 128, (k, n)), jnp.int8)
+    sa = jnp.asarray(rng.rand(m, 1) * 0.01 + 1e-3, jnp.float32)
+    sb = jnp.asarray(rng.rand(1, n) * 0.01 + 1e-3, jnp.float32)
+    bias = jnp.asarray(rng.randn(n), jnp.float32)
+    spec = TableSpec("silu_gate", 1024, -10.0, 10.0, None, "interp")
+
+    def fused():
+        return qmatmul(a, b, sa, sb, bias=bias, act_spec=spec,
+                       act_gated=True, backend="pallas")
+
+    def unfused():
+        y = qmatmul(a, b, sa, sb, backend="pallas") + bias.reshape(1, -1)
+        return y * lut_activation(y, spec, backend="pallas")
+
+    launches = {name: count_jaxpr_primitive(jax.make_jaxpr(f)().jaxpr,
+                                            "pallas_call")
+                for name, f in [("fused", fused), ("unfused", unfused)]}
+    # intermediate (M, N) f32 HBM round trips the fusion removes: the
+    # matmul result is written+read for the bias add and again for the LUT
+    saved_bytes = 2 * 2 * m * n * 4
+
+    # CPU walltime of the ref-backend composition (relative only; the
+    # interpret-mode pallas kernel measures Python, not the TPU)
+    def fused_ref():
+        return qmatmul(a, b, sa, sb, bias=bias, act_spec=spec,
+                       act_gated=True, backend="ref")
+
+    def unfused_ref():
+        y = qmatmul(a, b, sa, sb, backend="ref") + bias.reshape(1, -1)
+        return y * lut_activation(y, spec, backend="ref")
+
+    for name, f, nl in [("fused", fused_ref, launches["fused"]),
+                        ("unfused", unfused_ref, launches["unfused"])]:
+        jf = jax.jit(f)
+        jf().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jf().block_until_ready()
+        rows.append({"bench": "qmatmul_epilogue", "name": name,
+                     "pallas_calls": nl,
+                     "us_per_call": (time.perf_counter() - t0) / iters * 1e6,
+                     "intermediate_hbm_bytes": 0 if name == "fused"
+                     else saved_bytes})
+    assert launches["fused"] == 1 and launches["unfused"] >= 2, launches
+    return rows
 
 
 def run():
@@ -55,6 +114,7 @@ def run():
             fn().block_until_ready()
         rows.append({"bench": "qmatmul", "name": f"walltime/{name}",
                      "us_per_call": (time.perf_counter() - t0) / 5 * 1e6})
+    rows.extend(run_fused_epilogue())
     return rows
 
 

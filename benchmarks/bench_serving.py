@@ -3,7 +3,11 @@
 Serves the smoke gemma model through the continuous-batching engine under
 each numeric mode and reports tokens/s (CPU walltime — relative between
 modes) plus greedy-token agreement vs the fp32 reference (accuracy
-counterpart of the throughput numbers)."""
+counterpart of the throughput numbers).
+
+``run_prefill`` measures prompt ingestion: batched chunked prefill
+(O(prompt_len / chunk) full-batch model calls for the whole group) vs the
+legacy per-token decode loop (O(prompt_len) calls per slot)."""
 
 import time
 
@@ -34,6 +38,61 @@ def _greedy(cfg, fam, params, ctx, prompts, gen=8):
             tok = jnp.argmax(lg[:, -1], -1)[:, None].astype(jnp.int32)
         outs.append(toks)
     return outs
+
+
+def run_prefill(prompt_len=48, batch=4, chunk=8, iters=3):
+    """Prompt-ingestion throughput: batched chunked prefill vs the
+    per-token decode loop (model calls + prompt tokens/s)."""
+    from repro.dist.constrain import use_mesh
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.serve import Engine
+
+    cfg = get_config("gemma-2b").smoke()
+    ctx = QuantContext(compute_dtype=jnp.float32)
+    fam = get_family(cfg)
+    mesh = make_local_mesh()
+    params = fam.init(jax.random.PRNGKey(0), cfg)
+    src = SyntheticLM(cfg.vocab, seed=0)
+    prompts = {s: src.tokens(s, 1, prompt_len + 1)[0, :-1]
+               for s in range(batch)}
+    n_tok = batch * prompt_len
+    rows = []
+    with use_mesh(mesh):
+        for name, chunked in [("chunked_prefill", True),
+                              ("per_token_loop", False)]:
+            # ONE engine per variant: iteration 0 pays the jit compiles
+            # (warmup, untimed); later rounds re-admit the same prompts
+            # into recycled slots, measuring steady-state ingestion.
+            eng = Engine(cfg, ctx, params, mesh, batch=batch,
+                         max_len=prompt_len + 8, prefill_chunk=chunk)
+            eng.chunked = eng.chunked and chunked
+            calls = {"n": 0}
+
+            def count(f):
+                def g(*a, **k):
+                    calls["n"] += 1
+                    return f(*a, **k)
+                return g
+
+            eng.prefill = count(eng.prefill)
+            eng.decode = count(eng.decode)
+            times = []
+            for it in range(iters + 1):
+                for s in range(batch):
+                    if eng.live[s]:
+                        eng.finish(s)
+                calls["n"] = 0
+                t0 = time.perf_counter()
+                eng.add_requests(prompts)
+                jax.tree_util.tree_leaves(eng.cache)[0].block_until_ready()
+                if it > 0:
+                    times.append(time.perf_counter() - t0)
+            rows.append({"bench": "serving_prefill", "name": name,
+                         "model_calls": calls["n"],
+                         "prompt_tok_per_s": n_tok / (sum(times)
+                                                      / len(times)),
+                         "ms_total": sum(times) / len(times) * 1e3})
+    return rows
 
 
 def run():
@@ -68,6 +127,7 @@ def run():
                              for a, b in zip(ref, outs)])
             row["greedy_agreement_vs_fp32"] = float(agree)
         rows.append(row)
+    rows.extend(run_prefill())
     return rows
 
 

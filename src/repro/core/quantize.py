@@ -100,14 +100,36 @@ def quantize_dynamic(x: jnp.ndarray, qtype: FixedPointType,
 # --------------------------------------------------------------------------
 # Whole-pytree PTQ (the hls4ml "convert a trained model" flow).
 # --------------------------------------------------------------------------
+#: leaf keys that feed matmul consumers (nn.linear / nn.moe) and can
+#: therefore carry a QTensor.  Everything else — embedding tables
+#: (gathered, not matmul'd), routers (precision-sensitive, §Arch),
+#: depthwise conv filters, norms, biases — stays a dense float array.
+_MATMUL_WEIGHT_KEYS = frozenset({"w", "w_gate", "w_up", "w_down"})
+
+
 def _is_weight(path: Tuple, leaf) -> bool:
     if not hasattr(leaf, "ndim") or leaf.ndim < 2:
         return False  # biases / scales / norms stay high precision
+    joined = "/".join(str(p) for p in path).lower()
+    if "embed" in joined or "router" in joined:
+        return False
     name = str(path[-1]) if path else ""
-    return "embed" not in name.lower()
+    return name in _MATMUL_WEIGHT_KEYS
 
 
-def ptq_params(params, policy, *, channel_axes: Sequence[int] = (-1,),
+def _weight_channel_axes(ndim: int) -> Tuple[int, ...]:
+    """Keep every axis except the contraction axis (-2).
+
+    A weight is (..., d_in, d_out): per-out-channel scales with all
+    leading (layer-stack / expert) axes kept, so stacked QTensor params
+    slice cleanly under ``lax.scan`` (data and scale share the leading
+    L axis).
+    """
+    return tuple(a for a in range(ndim) if a != ndim - 2)
+
+
+def ptq_params(params, policy, *,
+               channel_axes: Optional[Sequence[int]] = None,
                predicate=_is_weight):
     """Post-training-quantize a parameter pytree.
 
@@ -115,7 +137,12 @@ def ptq_params(params, policy, *, channel_axes: Sequence[int] = (-1,),
     single qtype applied uniformly).  Weight matrices become
     :class:`QTensor`; everything else passes through.  Mirrors hls4ml's
     model conversion: the trained float model in, a quantized deployable
-    artifact out.
+    artifact out.  The result feeds :func:`repro.nn.linear.linear`
+    directly — serving quantizes weights ONCE here, never per forward.
+
+    ``channel_axes`` (axes *kept* by the scale) defaults to "all but the
+    contraction axis": per-out-channel scales that also keep any leading
+    layer-stack / expert axes, so stacked params remain scannable.
     """
     from .precision import PrecisionPolicy  # local import to avoid a cycle
 
@@ -130,7 +157,9 @@ def ptq_params(params, policy, *, channel_axes: Sequence[int] = (-1,),
             return leaf
         if isinstance(qt, MiniFloatType):
             return qt.quantize(leaf)
-        return quantize_dynamic(leaf, qt, channel_axes=channel_axes)
+        axes = (channel_axes if channel_axes is not None
+                else _weight_channel_axes(leaf.ndim))
+        return quantize_dynamic(leaf, qt, channel_axes=axes)
 
     return jax.tree_util.tree_map_with_path(
         lambda p, l: quant_leaf(tuple(_path_key(k) for k in p), l), params)

@@ -1,0 +1,18 @@
+"""Distribution layer: mesh context, sharding rules, perf flags,
+compressed collectives.
+
+Single-host degradation is a first-class requirement: every entry point
+is a no-op (or replicated) when no mesh is active, so the same model code
+runs on a laptop CPU and a 512-chip pod without branches at call sites.
+"""
+
+from .constrain import constrain, current_mesh, use_mesh
+from .options import PerfFlags, flags, set_flags
+from .sharding import (batch_specs, cache_specs, guard_spec, named,
+                       param_specs)
+
+__all__ = [
+    "constrain", "current_mesh", "use_mesh",
+    "PerfFlags", "flags", "set_flags",
+    "batch_specs", "cache_specs", "guard_spec", "named", "param_specs",
+]

@@ -1,0 +1,88 @@
+"""Compressed cross-pod gradient reduction (quantized psum ± error
+feedback).
+
+The paper's narrow-operand thesis applied to the interconnect: the
+cross-pod gradient all-reduce moves int8 payloads instead of f32.  Here
+the compression is *numerics-faithful emulation* — each shard round-trips
+its contribution through the quantized format before the reduction, so
+accuracy results transfer even though XLA still moves floats on CPU
+hosts.
+
+``quantized_psum_ef`` adds error feedback: the local quantization
+residual is carried to the next step, which removes the constant bias of
+plain quantization (the running mean of reduced values converges to the
+exact reduction).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.5 re-exports at top level
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+from ..core.qtypes import FixedPointType
+
+__all__ = ["quantized_psum", "quantized_psum_ef",
+           "make_pod_sharded_grad_fn", "shard_map"]
+
+
+def _round_trip(x: jnp.ndarray, qtype: FixedPointType) -> jnp.ndarray:
+    """Round-trip ``x`` through ``qtype`` with a dynamic per-tensor scale."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / qtype.int_max
+    q = jnp.clip(jnp.round(x / scale), qtype.int_min, qtype.int_max)
+    return q * scale
+
+
+def quantized_psum(x: jnp.ndarray, axis_name: str,
+                   qtype: FixedPointType) -> jnp.ndarray:
+    """psum where every shard's contribution is quantized to ``qtype``."""
+    return jax.lax.psum(_round_trip(x, qtype), axis_name)
+
+
+def quantized_psum_ef(x: jnp.ndarray, residual: jnp.ndarray,
+                      axis_name: str, qtype: FixedPointType
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback variant: returns (psum, new_residual)."""
+    t = x + residual
+    q = _round_trip(t, qtype)
+    return jax.lax.psum(q, axis_name), t - q
+
+
+def make_pod_sharded_grad_fn(grad_fn: Callable, mesh, *,
+                             in_specs, out_specs,
+                             qtype: FixedPointType = None) -> Callable:
+    """Wrap ``grad_fn(params, batch) -> (grads, metrics)`` in a shard_map
+    that is manual over the ``pod`` axis: each pod computes grads on its
+    batch shard, then the cross-pod mean runs through the quantized psum.
+    Remaining mesh axes stay automatic (GSPMD partitions inside the pod).
+    """
+    npod = mesh.shape["pod"]
+    auto = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def inner(params, batch):
+        grads, metrics = grad_fn(params, batch)
+        inv = 1.0 / npod
+
+        def reduce_leaf(g):
+            if qtype is None:
+                return jax.lax.psum(g, "pod") * inv
+            return quantized_psum(g, "pod", qtype) * inv
+
+        grads = jax.tree_util.tree_map(reduce_leaf, grads)
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.psum(m, "pod") * inv, metrics)
+        return grads, metrics
+
+    try:
+        return shard_map(inner, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False, auto=auto)
+    except TypeError:  # newer shard_map: auto axes are implicit
+        return shard_map(inner, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)

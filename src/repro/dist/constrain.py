@@ -1,0 +1,82 @@
+"""Mesh context + logical-axis sharding constraints.
+
+Model code never names mesh axes directly: it pins tensors with the
+*logical* labels ``"dp"`` (data parallel) and ``"tp"`` (tensor/model
+parallel), which resolve against whatever mesh is ambiently active —
+``("pod", "data")`` and ``"model"`` on a multi-pod mesh, ``("data",)``
+and ``"model"`` on a single-pod mesh, and to nothing at all when no mesh
+is active (single-host tests), in which case :func:`constrain` is the
+identity.  This is the de-specialized version of hard-coding a layout:
+the same forward function lowers correctly under every mesh shape.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh", "current_mesh", "constrain"]
+
+_state = threading.local()
+
+#: logical label -> candidate mesh axis names, in precedence order.
+_LOGICAL_AXES = {
+    "dp": ("pod", "data"),
+    "tp": ("model",),
+}
+
+
+def current_mesh() -> Optional[jax.sharding.Mesh]:
+    """The ambiently active mesh, or None (single-host / no context)."""
+    stack = getattr(_state, "meshes", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Activate ``mesh`` for every :func:`constrain` call in scope."""
+    stack = getattr(_state, "meshes", None)
+    if stack is None:
+        stack = _state.meshes = []
+    stack.append(mesh)
+    try:
+        yield mesh
+    finally:
+        stack.pop()
+
+
+def _resolve_axis(label, mesh):
+    """Map a logical label to the mesh axes it spans (possibly a tuple)."""
+    if label is None:
+        return None
+    if label in _LOGICAL_AXES:
+        axes = tuple(a for a in _LOGICAL_AXES[label]
+                     if a in mesh.axis_names)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    return label if label in mesh.axis_names else None
+
+
+def constrain(t: jax.Array, *labels) -> jax.Array:
+    """Pin ``t`` to the sharding described by per-axis logical ``labels``.
+
+    ``labels`` align with ``t``'s leading axes (missing trailing labels =
+    replicated).  Axes whose size does not divide the resolved mesh-axis
+    size are silently dropped to replicated (the divisibility guard), so
+    smoke-scale shapes never fail to lower.  Identity when no mesh is
+    active.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return t
+    from .sharding import guard_spec
+    resolved = [_resolve_axis(lb, mesh) for lb in labels[:t.ndim]]
+    spec = guard_spec(P(*resolved), t.shape, mesh)
+    if all(a is None for a in spec):
+        return t
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))

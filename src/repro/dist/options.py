@@ -1,0 +1,44 @@
+"""Global performance flags (the §Perf hypothesis switches).
+
+Each flag gates one measured optimization; the dry-run driver flips them
+via ``--opt`` and records the active set in every artifact so perf
+results are attributable.  Defaults are all-off (the baseline lowering).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["PerfFlags", "flags", "set_flags"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    #: pin per-microbatch grads + accumulator to the param sharding
+    #: (reduce-scatter instead of full all-reduce) — §Perf H1
+    grad_specs: bool = False
+    #: sequence-parallel attention when heads don't divide TP — §Perf H2
+    sp_attn: bool = False
+    #: sequence-sharded KV cache for small-Hkv decode — §Perf H3
+    seq_kv: bool = False
+    #: one-hot einsum MoE dispatch/combine instead of scatter — §Perf H5
+    moe_einsum: bool = False
+    #: batch-local MoE capacity buffer (no global replication) — §Perf H5b
+    moe_local: bool = False
+
+    @classmethod
+    def all_on(cls) -> "PerfFlags":
+        return cls(**{f.name: True for f in dataclasses.fields(cls)})
+
+
+_FLAGS = PerfFlags()
+
+
+def flags() -> PerfFlags:
+    """The currently active flag set."""
+    return _FLAGS
+
+
+def set_flags(f: PerfFlags) -> None:
+    global _FLAGS
+    _FLAGS = f

@@ -1,0 +1,154 @@
+"""Sharding rules: rank/path heuristics → guarded PartitionSpecs.
+
+The rules are deliberately structural (rank + path keywords), not
+per-model: every family's parameter tree flows through the same few
+cases, and :func:`guard_spec` drops any assignment whose dimension does
+not divide the mesh-axis size — so smoke-scale shapes lower on any mesh
+and production shapes get the full FSDP×TP layout.
+
+Layout summary (mesh axes ``data`` / ``model``, plus optional ``pod``):
+
+* 2-D weights ``(d_in, d_out)`` — FSDP on ``d_in`` (data), TP on
+  ``d_out`` (model).
+* stacked 3-D ``(L, d_in, d_out)`` — leading layer axis replicated
+  (it is scanned), then as 2-D.
+* 4-D MoE banks ``(L, E, D, F)`` — expert parallelism: ``E`` on model.
+* embedding tables ``(V, D)`` — vocab on model (matches the logits
+  constrain), feature on data.
+* batches — leading batch axis on the data axes.
+* caches — leading axis is the stacked layer axis (replicated), batch
+  on data.
+
+:class:`~repro.core.qtypes.QTensor` leaves (pre-quantized weights) get
+the weight rule on their payload and a separately-guarded spec for the
+scale (whose size-1 reduced axes must stay unsharded) — emitted as a
+QTensor *of specs*, so the spec tree mirrors the parameter tree and
+``named``/``device_put`` shard payload and scale independently.  The
+payload keeps full FSDP×TP sharding; only the scale's broadcast axes
+replicate.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.qtypes import QTensor
+
+__all__ = ["guard_spec", "param_specs", "batch_specs", "cache_specs",
+           "named"]
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def guard_spec(spec: P, dims: Sequence[int], mesh) -> P:
+    """Drop spec axes whose mesh-axis size does not divide the dim."""
+    out = []
+    for i, d in enumerate(dims):
+        axis = spec[i] if i < len(spec) else None
+        if axis is not None and int(d) % _axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def _dp(mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _tp(mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _is_spec_leaf(x) -> bool:
+    return isinstance(x, QTensor)
+
+
+def _param_rule(path: Sequence[str], shape, mesh) -> P:
+    ndim = len(shape)
+    dp, tp = _dp(mesh), _tp(mesh)
+    joined = "/".join(path).lower()
+    if ndim <= 1:
+        return P()
+    if "embed" in joined or path[-1:] == ("table",):
+        # (V, D): vocab on model (logits shard the same way), D on data
+        return guard_spec(P(*([None] * (ndim - 2) + [tp, dp])), shape, mesh)
+    if ndim == 2:
+        return guard_spec(P(dp, tp), shape, mesh)
+    if ndim == 3:           # stacked (L, d_in, d_out)
+        return guard_spec(P(None, dp, tp), shape, mesh)
+    # 4-D+ stacked expert banks (L, E, D, F): expert parallelism
+    return guard_spec(P(*([None, tp] + [None] * (ndim - 2))), shape, mesh)
+
+
+def param_specs(params, mesh):
+    """PartitionSpec pytree matching ``params``.
+
+    QTensor leaves become a QTensor of specs (payload spec + scale
+    spec), preserving the tree structure ``device_put`` expects while
+    keeping the payload fully sharded and only the scale's size-1
+    broadcast axes replicated.
+    """
+    def rule(path, leaf):
+        keys = tuple(_key_str(k) for k in path)
+        if isinstance(leaf, QTensor):
+            spec = _param_rule(keys, leaf.data.shape, mesh)
+            return QTensor(spec, guard_spec(spec, leaf.scale.shape, mesh),
+                           leaf.qtype)
+        return _param_rule(keys, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params,
+                                            is_leaf=_is_spec_leaf)
+
+
+def batch_specs(batch, mesh):
+    """Shard the leading (batch) axis of every leaf over the data axes."""
+    dp = _dp(mesh)
+
+    def rule(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return P()
+        return guard_spec(P(*([dp] + [None] * (len(leaf.shape) - 1))),
+                          leaf.shape, mesh)
+
+    return jax.tree_util.tree_map(rule, batch)
+
+
+def cache_specs(cache, mesh):
+    """Cache leaves are stacked (L, B, ...): L replicated, B on data."""
+    dp = _dp(mesh)
+
+    def rule(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) < 2:
+            return P()
+        return guard_spec(
+            P(*([None, dp] + [None] * (len(leaf.shape) - 2))),
+            leaf.shape, mesh)
+
+    return jax.tree_util.tree_map(rule, cache)
+
+
+def named(specs, mesh):
+    """PartitionSpec pytree → NamedSharding pytree for ``device_put``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_str(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)

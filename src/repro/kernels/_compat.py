@@ -1,0 +1,15 @@
+"""Small jax-version compatibility shims for the Pallas kernels.
+
+The kernels target the current Pallas API names; older pinned jax
+releases (e.g. 0.4.x, where ``pltpu.CompilerParams`` is still
+``TPUCompilerParams``) are mapped here so the kernel code stays clean.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

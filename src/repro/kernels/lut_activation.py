@@ -24,33 +24,50 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
 from ..core.tables import TableSpec, get_table
 
-__all__ = ["lut_activation_pallas"]
+__all__ = ["lut_activation_pallas", "apply_table"]
 
 LANES = 128
 
 
-def _kernel(x_ref, t_ref, o_ref, *, lo: float, step_inv: float, n: int,
-            indexing: str):
-    x = x_ref[...].astype(jnp.float32)
-    t = t_ref[...]
-    pos = (x - lo) * step_inv
+def apply_table(y: jnp.ndarray, t: jnp.ndarray, *, lo: float,
+                step_inv: float, n: int, indexing: str,
+                gated: bool = False) -> jnp.ndarray:
+    """In-kernel LUT gather on a VMEM-resident tile (``jnp.take`` form of
+    :func:`repro.core.tables.table_lookup`, which Mosaic can lower).
+
+    Shared by this kernel and the fused qmatmul epilogue so the
+    interp/nearest/trunc numerics have exactly one in-kernel
+    implementation.  ``gated=True`` returns ``y * table(y)`` (the exact
+    gated silu/gelu form).
+    """
+    pos = (y - lo) * step_inv
     if indexing == "interp":
         pos = jnp.clip(pos, 0.0, n - 1.0)
         i0f = jnp.floor(pos)
         frac = pos - i0f
         i0 = i0f.astype(jnp.int32)
         i1 = jnp.minimum(i0 + 1, n - 1)
-        y0 = jnp.take(t, i0.reshape(-1), axis=0).reshape(x.shape)
-        y1 = jnp.take(t, i1.reshape(-1), axis=0).reshape(x.shape)
-        o_ref[...] = y0 * (1.0 - frac) + y1 * frac
+        y0 = jnp.take(t, i0.reshape(-1), axis=0).reshape(y.shape)
+        y1 = jnp.take(t, i1.reshape(-1), axis=0).reshape(y.shape)
+        z = y0 * (1.0 - frac) + y1 * frac
     else:
         if indexing == "nearest":
             idx = jnp.clip(jnp.round(pos), 0, n - 1).astype(jnp.int32)
-        else:  # trunc
+        else:  # trunc — hls4ml-faithful
             idx = jnp.clip(jnp.floor(pos), 0, n - 1).astype(jnp.int32)
-        o_ref[...] = jnp.take(t, idx.reshape(-1), axis=0).reshape(x.shape)
+        z = jnp.take(t, idx.reshape(-1), axis=0).reshape(y.shape)
+    return y * z if gated else z
+
+
+def _kernel(x_ref, t_ref, o_ref, *, lo: float, step_inv: float, n: int,
+            indexing: str):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = apply_table(x, t_ref[...], lo=lo, step_inv=step_inv, n=n,
+                             indexing=indexing)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "block_rows", "interpret"))
@@ -82,7 +99,7 @@ def lut_activation_pallas(x: jnp.ndarray, spec: TableSpec, *,
         ],
         out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x2, table)

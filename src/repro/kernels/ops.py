@@ -42,8 +42,8 @@ register_op("qmatmul", "ref")(_ref.qmatmul_ref)
 
 
 @register_op("qmatmul", "pallas")
-def _qmatmul_pallas(a, b, sa, sb, out_dtype=jnp.float32, **kw):
-    return qmatmul_pallas(a, b, sa, sb, out_dtype=out_dtype,
+def _qmatmul_pallas(a, b, sa, sb, bias=None, out_dtype=jnp.float32, **kw):
+    return qmatmul_pallas(a, b, sa, sb, bias, out_dtype=out_dtype,
                           interpret=_interpret(), **kw)
 
 
@@ -63,8 +63,21 @@ def lut_activation(x: jnp.ndarray, spec: TableSpec, *,
     return get_impl("lut_activation", backend)(x, spec, **kw)
 
 
-def qmatmul(a_data, b_data, a_scale, b_scale, *, out_dtype=jnp.float32,
-            backend: Optional[str] = None, **kw) -> jnp.ndarray:
+def qmatmul(a_data, b_data, a_scale, b_scale, *, bias=None,
+            act_spec: Optional[TableSpec] = None, act_gated: bool = False,
+            out_dtype=jnp.float32, backend: Optional[str] = None,
+            **kw) -> jnp.ndarray:
+    """Quantized matmul with optional fused epilogue (bias + LUT act).
+
+    With ``bias``/``act_spec`` set, linear + bias + activation execute as
+    ONE kernel launch (one HBM pass) instead of three — the Pallas
+    analogue of hls4ml's dense→activation dataflow fusion.
+    """
+    kw = dict(kw)
+    if bias is not None:
+        kw["bias"] = bias
+    if act_spec is not None:
+        kw.update(act_spec=act_spec, act_gated=act_gated)
     return get_impl("qmatmul", backend)(a_data, b_data, a_scale, b_scale,
                                         out_dtype=out_dtype, **kw)
 

@@ -1,5 +1,5 @@
 """Pallas TPU kernel: int8 × int8 → int32 quantized matmul with fused
-requantization.
+requantization and an optional fused epilogue (bias + LUT activation).
 
 The MXU adaptation of the paper's fixed-point datapath: on FPGA the
 ``ac_fixed`` multiply-accumulates map to DSP slices; on TPU the analogous
@@ -11,9 +11,28 @@ per-column scales) into the final K step — so the narrow int8 operands are
 what moves through HBM→VMEM, which is the entire bandwidth win of
 quantization.
 
+**Fused epilogue** (the hls4ml dense→activation dataflow fusion, ported):
+hls4ml's win is that dense output never round-trips through memory before
+the activation LUT — the fixed-point result streams straight into the
+BRAM table.  Here the same fusion happens in the final K step: while the
+(bm, bn) accumulator tile is still VMEM-resident, the kernel optionally
+
+* adds a per-column ``bias`` row, and
+* applies a LUT activation (a :class:`~repro.core.tables.TableSpec`
+  constant table riding in VMEM, gathered on the VPU; ``act_gated=True``
+  computes ``y * table(y)`` — the exact gated silu/gelu form).
+
+One ``pallas_call`` therefore replaces three kernel launches (matmul →
+bias add → LUT activation) and two (M, N) HBM round trips of the f32
+intermediate.  The pre-quantized serving path
+(:func:`repro.core.quantize.ptq_params` → QTensor weights →
+:func:`repro.nn.linear.linear`) lands here with zero per-forward weight
+quantization work.
+
 VMEM working set per grid step: bm*bk + bk*bn (int8) + bm*bn*4 (acc)
-+ bm*bn*out bytes.  Defaults (256, 256, 256) → ~0.5 MiB, comfortably
-inside the ~16 MiB v5e VMEM with double-buffering headroom.
++ bm*bn*out bytes (+ bn*4 bias + 4*n table when fused).  Defaults
+(256, 256, 256) → ~0.5 MiB, comfortably inside the ~16 MiB v5e VMEM with
+double-buffering headroom; a 1024-entry table adds 4 KiB.
 
 The ``reuse_factor`` knob from the paper maps here: larger ``bk`` = more
 MACs per loaded block (lower "reuse", more parallel resource/VMEM), smaller
@@ -23,16 +42,28 @@ MACs per loaded block (lower "reuse", more parallel resource/VMEM), smaller
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams
+
+from ..core.tables import TableSpec, get_table
+from .lut_activation import apply_table
+
 __all__ = ["qmatmul_pallas"]
 
 
-def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *, k_steps: int):
+def _kernel(*refs, k_steps: int, has_bias: bool, act_spec, act_gated: bool):
+    a_ref, b_ref, sa_ref, sb_ref = refs[:4]
+    rest = list(refs[4:])
+    bias_ref = rest.pop(0) if has_bias else None
+    t_ref = rest.pop(0) if act_spec is not None else None
+    o_ref, acc_ref = rest
+
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -48,8 +79,14 @@ def _kernel(a_ref, b_ref, sa_ref, sb_ref, o_ref, acc_ref, *, k_steps: int):
     def _finish():
         sa = sa_ref[...]            # (bm, 1) f32
         sb = sb_ref[...]            # (1, bn) f32
-        o_ref[...] = (acc_ref[...].astype(jnp.float32) * sa * sb
-                      ).astype(o_ref.dtype)
+        y = acc_ref[...].astype(jnp.float32) * sa * sb
+        if has_bias:
+            y = y + bias_ref[...]   # (1, bn) f32
+        if act_spec is not None:    # LUT epilogue on the VMEM-resident tile
+            y = apply_table(y, t_ref[...], lo=act_spec.lo,
+                            step_inv=1.0 / act_spec.step, n=act_spec.n,
+                            indexing=act_spec.indexing, gated=act_gated)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 def _pad_to(x, axis, mult):
@@ -62,15 +99,24 @@ def _pad_to(x, axis, mult):
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "bm", "bn", "bk",
+                                             "act_spec", "act_gated",
                                              "interpret"))
 def qmatmul_pallas(a_data: jnp.ndarray, b_data: jnp.ndarray,
                    a_scale: jnp.ndarray, b_scale: jnp.ndarray,
-                   *, out_dtype=jnp.float32, bm: int = 256, bn: int = 256,
+                   bias: Optional[jnp.ndarray] = None,
+                   *, out_dtype=jnp.float32,
+                   act_spec: Optional[TableSpec] = None,
+                   act_gated: bool = False,
+                   bm: int = 256, bn: int = 256,
                    bk: int = 256, interpret: bool = False) -> jnp.ndarray:
     """(M,K)int8 @ (K,N)int8 with per-row/per-col scales → (M,N) float.
 
     ``a_scale`` broadcasts as (M, 1) or scalar; ``b_scale`` as (1, N) or
     scalar.  Shapes are padded to block multiples transparently.
+
+    ``bias``: optional (N,)/(1, N) f32 row fused into the final K step.
+    ``act_spec``: optional LUT activation applied in the same step
+    (``act_gated=True`` → ``y * table(y)``, the exact silu/gelu form).
     """
     m, k = a_data.shape
     k2, n = b_data.shape
@@ -93,21 +139,37 @@ def qmatmul_pallas(a_data: jnp.ndarray, b_data: jnp.ndarray,
     np_ = b_data.shape[1]
     grid = (mp // bm, np_ // bn, kp // bk)
 
+    operands = [a_data, b_data, a_scale, b_scale]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+    ]
+    if bias is not None:
+        brow = jnp.broadcast_to(
+            jnp.asarray(bias, jnp.float32).reshape(1, -1), (1, n))
+        brow, _ = _pad_to(brow, 1, bn)
+        operands.append(brow)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if act_spec is not None:
+        table = jnp.asarray(get_table(act_spec).np_values)
+        operands.append(table)
+        # the table is replicated into VMEM for every block
+        in_specs.append(pl.BlockSpec((act_spec.n,), lambda i, j, kk: (0,)))
+
     out = pl.pallas_call(
-        functools.partial(_kernel, k_steps=grid[2]),
+        functools.partial(_kernel, k_steps=grid[2],
+                          has_bias=bias is not None, act_spec=act_spec,
+                          act_gated=act_gated),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(a_data, b_data, a_scale, b_scale)
+    )(*operands)
 
     return out[:m, :n]

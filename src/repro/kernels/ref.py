@@ -29,17 +29,31 @@ def lut_activation_ref(x: jnp.ndarray, spec: TableSpec) -> jnp.ndarray:
 
 def qmatmul_ref(a_data: jnp.ndarray, b_data: jnp.ndarray,
                 a_scale: jnp.ndarray, b_scale: jnp.ndarray,
-                out_dtype=jnp.float32) -> jnp.ndarray:
-    """Quantized matmul oracle: int8 × int8 → int32 accumulate → rescale.
+                bias: Optional[jnp.ndarray] = None,
+                out_dtype=jnp.float32, *,
+                act_spec: Optional[TableSpec] = None,
+                act_gated: bool = False) -> jnp.ndarray:
+    """Quantized matmul oracle: int8 × int8 → int32 accumulate → rescale,
+    plus the optional fused epilogue (bias add + LUT activation) as the
+    explicit three-op composition the Pallas kernel fuses.
 
     ``a_data``: (M, K) int8, row scales ``a_scale``: (M, 1) or scalar.
     ``b_data``: (K, N) int8, col scales ``b_scale``: (1, N) or scalar.
-    Result: (M, N) in ``out_dtype`` ≈ (a_data·a_scale) @ (b_data·b_scale).
+    ``bias``: optional (N,)/(1, N) added after dequantization.
+    ``act_spec``: optional LUT activation table; ``act_gated=True``
+    computes ``y * table(y)`` (exact gated silu/gelu form).
+    Result: (M, N) in ``out_dtype`` ≈ act((a·sa) @ (b·sb) + bias).
     """
     acc = jax.lax.dot_general(
         a_data, b_data, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
-    return (acc.astype(jnp.float32) * a_scale * b_scale).astype(out_dtype)
+    y = acc.astype(jnp.float32) * a_scale * b_scale
+    if bias is not None:
+        y = y + jnp.asarray(bias, jnp.float32).reshape(1, -1)
+    if act_spec is not None:
+        z = lut_activation_ref(y, act_spec)
+        y = y * z if act_gated else z
+    return y.astype(out_dtype)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

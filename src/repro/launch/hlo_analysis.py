@@ -34,7 +34,34 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "HloCost", "per_op_breakdown"]
+__all__ = ["analyze_hlo", "HloCost", "per_op_breakdown",
+           "count_jaxpr_primitive"]
+
+
+def count_jaxpr_primitive(jaxpr, name: str) -> int:
+    """Recursively count equations with primitive ``name``, descending
+    into every sub-jaxpr carried in params (pjit/scan/cond/custom calls).
+
+    Static-graph companion to the HLO costs above — used to assert
+    kernel-launch counts (e.g. ONE ``pallas_call`` for the fused qmatmul
+    epilogue) in tests and benchmarks.
+    """
+    def sub(v):
+        if hasattr(v, "jaxpr"):          # ClosedJaxpr
+            return count_jaxpr_primitive(v.jaxpr, name)
+        if hasattr(v, "eqns"):           # raw Jaxpr
+            return count_jaxpr_primitive(v, name)
+        if isinstance(v, (list, tuple)):
+            return sum(sub(vv) for vv in v)
+        return 0
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            n += 1
+        for v in eqn.params.values():
+            n += sub(v)
+    return n
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

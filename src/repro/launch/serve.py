@@ -1,29 +1,47 @@
-"""Serving entrypoint: batched prefill + decode with continuous batching.
+"""Serving entrypoint: batched chunked prefill + decode with continuous
+batching.
 
 The paper's deployment scenario — a *quantized inference accelerator* —
-realized at framework level: PTQ'd weights (int8 / fake-quant ac_fixed /
-minifloat), LUT activations, batched requests with slot-based continuous
-batching (a finished sequence's slot is refilled by the next queued
-request without draining the batch).
+realized at framework level, as a fused quantized dense pipeline:
+
+* **Weights are quantized once, at engine construction** — ``--quant
+  int8`` runs :func:`repro.core.quantize.ptq_params` over the parameter
+  tree before it is device_put, so every serving step consumes
+  :class:`~repro.core.qtypes.QTensor` weights directly.  Zero
+  ``calibrate_scale``/``round`` ops on weights per token (the hls4ml
+  model-conversion contract; only activations are quantized per step).
+* **Fused kernel epilogue** — with ``--lut``, linear + bias + LUT
+  activation execute as one ``qmatmul`` Pallas launch (see
+  :mod:`repro.kernels.qmatmul`), one HBM pass instead of three.
+* **Batched chunked prefill** — prompt ingestion runs through
+  ``build_prefill_step``: all fresh slots advance together, one
+  full-batch model call per ``prefill_chunk`` tokens, i.e.
+  O(prompt_len / chunk) steps total instead of O(prompt_len) decode
+  steps *per slot*.  Slots mid-generation are untouched: their chunk
+  writes land in a reserved cache margin (see ``Engine``) and their
+  positions do not advance.
+* **Continuous batching** — a finished sequence's slot is refilled by
+  the next queued request without draining the batch; freed slots are
+  refilled *together* so their prompts share prefill batches too.
 
 Usage (CPU-scale)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-        --requests 16 --batch 4 --prompt-len 32 --gen-len 16 --quant fake
+        --requests 16 --batch 4 --prompt-len 32 --gen-len 16 --quant int8
 """
 
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..data.pipeline import SyntheticLM, make_batch
+from ..data.pipeline import SyntheticLM
 from ..dist.constrain import use_mesh
 from ..dist.sharding import cache_specs, named, param_specs
 from ..models.api import get_family
@@ -34,46 +52,132 @@ from .train import build_ctx
 
 
 class Engine:
-    """Slot-based continuous batching engine over prefill/decode steps."""
+    """Slot-based continuous batching engine over prefill/decode steps.
+
+    Cache layout note: the KV cache is allocated with ``prefill_chunk``
+    margin rows beyond ``max_len``.  During a mid-flight refill the
+    chunked prefill runs full-batch, so slots that are still generating
+    receive (ignored) writes at their current position; the margin
+    guarantees those writes can never clamp back into valid rows, and
+    the per-slot visibility mask (`kvpos <= qpos`) keeps them invisible
+    until decode overwrites them.
+    """
 
     def __init__(self, cfg, ctx, params, mesh, *, batch: int, max_len: int,
-                 kv_bits=None):
+                 kv_bits=None, prefill_chunk: int = 16):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
+        self.prefill_chunk = max(1, prefill_chunk)
+        # chunked prefill needs per-call cache continuation; only the
+        # attention-cache families support that (SSM state is rebuilt
+        # from the tokens of one call).
+        self.chunked = cfg.family == "lm"
         fam = get_family(cfg)
         self.params = params
         cache_dtype = jnp.int8 if kv_bits == 8 else jnp.float32
-        self.cache = fam.init_cache(cfg, batch, max_len, cache_dtype)
+        margin = self.prefill_chunk if self.chunked else 0
+        self.cache = fam.init_cache(cfg, batch, max_len + margin,
+                                    cache_dtype)
         c_sh = named(cache_specs(self.cache, mesh), mesh)
         self.cache = jax.device_put(self.cache, c_sh)
         self.decode = jax.jit(build_serve_step(cfg, ctx))
         self.prefill = jax.jit(build_prefill_step(cfg, ctx))
+        # donated so XLA updates the cache in place — invalidating a slot
+        # on finish() must not copy the whole KV cache per request
+        self._invalidate = jax.jit(
+            lambda cache, slot: jax.tree_util.tree_map(
+                lambda c: c.at[:, slot].set(0), cache),
+            donate_argnums=(0,))
         self.pos = np.zeros((batch,), np.int32)
         self.live = np.zeros((batch,), bool)
         self.tokens = np.zeros((batch, 1), np.int32)
         self.outputs: List[Optional[list]] = [None] * batch
         self.done: List[list] = []
 
+    # -- request admission --------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray):
-        """Prefill one request into ``slot`` (per-slot chunked prefill)."""
-        fam = get_family(self.cfg)
-        # single-slot prefill: run decode steps over the prompt tokens
-        # (slot-local; production would use a dedicated bucketed prefill)
-        for t in range(prompt.shape[0]):
-            tok = np.zeros((self.batch, 1), np.int32)
-            tok[slot, 0] = prompt[t]
-            logits, self.cache = self.decode(
-                self.params, self.cache, jnp.asarray(tok),
-                jnp.asarray(self.pos))
-            self.pos[slot] += 1
-        self.live[slot] = True
-        self.outputs[slot] = []
-        self.tokens[slot, 0] = int(jnp.argmax(logits[slot, -1]))
+        """Prefill one request into ``slot``."""
+        self.add_requests({slot: prompt})
 
+    def add_requests(self, requests: Dict[int, np.ndarray]):
+        """Prefill several fresh slots together (batched chunked prefill).
+
+        Prompts are ingested in full-batch chunks of ``prefill_chunk``
+        tokens — O(max_prompt_len / chunk) model calls for the whole
+        group.  An empty prompt is treated as a single pad/BOS token
+        (id 0) so the first generated token is always defined.
+        """
+        reqs = {int(s): np.asarray(p, np.int32).reshape(-1)
+                for s, p in requests.items()}
+        for s, p in reqs.items():
+            if p.size == 0:
+                reqs[s] = np.zeros((1,), np.int32)
+        if not reqs:
+            return
+        if self.chunked:
+            first = self._prefill_chunked(reqs)
+        else:
+            first = self._prefill_looped(reqs)
+        for s, p in reqs.items():
+            self.pos[s] = p.shape[0]
+            self.live[s] = True
+            self.outputs[s] = []
+            self.tokens[s, 0] = first[s]
+
+    def _prefill_chunked(self, reqs) -> Dict[int, int]:
+        chunk = self.prefill_chunk
+        plen = max(p.shape[0] for p in reqs.values())
+        padded = -(-plen // chunk) * chunk      # one compile per chunk width
+        toks = np.zeros((self.batch, padded), np.int32)
+        for s, p in reqs.items():
+            toks[s, :p.shape[0]] = p
+        fresh = np.fromiter(sorted(reqs), np.int64)
+        first: Dict[int, int] = {}
+        for c0 in range(0, padded, chunk):
+            if c0 >= plen:
+                break
+            # live slots keep their own position: their (ignored) writes
+            # land at [pos, pos+chunk) inside the margin, never clamped.
+            cur = self.pos.copy()
+            cur[fresh] = c0
+            logits, self.cache = self.prefill(
+                self.params, {"tokens": jnp.array(toks[:, c0:c0 + chunk])},
+                self.cache, jnp.array(cur))
+            logits = np.asarray(logits)
+            for s, p in reqs.items():
+                t_last = p.shape[0] - 1
+                if c0 <= t_last < c0 + chunk:
+                    first[s] = int(np.argmax(logits[s, t_last - c0]))
+        return first
+
+    def _prefill_looped(self, reqs) -> Dict[int, int]:
+        """Per-token fallback for families without chunkable prefill."""
+        first: Dict[int, int] = {}
+        for s, p in reqs.items():
+            logits = None
+            for t in range(p.shape[0]):
+                tok = np.zeros((self.batch, 1), np.int32)
+                tok[s, 0] = p[t]
+                logits, self.cache = self.decode(
+                    self.params, self.cache, jnp.array(tok),
+                    jnp.array(self.pos))
+                self.pos[s] += 1
+            first[s] = int(jnp.argmax(logits[s, -1]))
+            # keep pos at prompt length: later slots' loops must not write
+            # into this slot's freshly-filled rows (add_requests re-asserts
+            # the same value afterwards)
+        return first
+
+    # -- decode / retire -----------------------------------------------------
+    # NOTE: engine state crosses the jit boundary via ``jnp.array`` (an
+    # explicit copy), never ``jnp.asarray``: on CPU, asarray may zero-copy
+    # an aligned numpy buffer, and self.pos/self.tokens are mutated in
+    # place right after the async dispatch — an alias would race with the
+    # still-running computation.
     def step(self):
         logits, self.cache = self.decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.pos))
+            self.params, self.cache, jnp.array(self.tokens),
+            jnp.array(self.pos))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
         for s in range(self.batch):
             if self.live[s]:
@@ -86,6 +190,23 @@ class Engine:
         self.outputs[slot] = None
         self.live[slot] = False
         self.pos[slot] = 0
+        if self.chunked:
+            # invalidate the retired request's KV rows so a recycled slot
+            # can never attend to a previous occupant's cache (defense in
+            # depth on top of the visibility mask; in-place via donation).
+            self.cache = self._invalidate(self.cache,
+                                          jnp.int32(slot))
+
+
+def quantize_for_serving(params, ctx: QuantContext):
+    """PTQ the parameter tree once, at engine construction.
+
+    Weight matrices become QTensor (per-out-channel scales) per the
+    context's precision policy; ``linear()`` then consumes them with
+    zero per-forward weight-quantization work.
+    """
+    from ..core.quantize import ptq_params
+    return ptq_params(params, ctx.policy)
 
 
 def main(argv=None):
@@ -105,6 +226,8 @@ def main(argv=None):
     ap.add_argument("--reuse-factor", type=int, default=1)
     ap.add_argument("--kv-bits", type=int, default=None, choices=[8],
                     help="int8 KV cache (per-token scales)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="tokens per batched prefill step")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -117,11 +240,15 @@ def main(argv=None):
 
     with use_mesh(mesh):
         params = fam.init(jax.random.PRNGKey(args.seed), cfg)
+        if args.quant == "int8":
+            # the fused pipeline's first leg: weights quantized ONCE here
+            params = quantize_for_serving(params, ctx)
         p_sh = named(param_specs(params, mesh), mesh)
         params = jax.device_put(params, p_sh)
         max_len = args.prompt_len + args.gen_len + 1
         eng = Engine(cfg, ctx, params, mesh, batch=args.batch,
-                     max_len=max_len, kv_bits=args.kv_bits)
+                     max_len=max_len, kv_bits=args.kv_bits,
+                     prefill_chunk=args.prefill_chunk)
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
@@ -129,17 +256,21 @@ def main(argv=None):
         queue = list(range(args.requests))
         t0 = time.perf_counter()
         gen_tokens = 0
-        # continuous batching: fill all slots, refill as slots finish
-        for s in range(min(args.batch, len(queue))):
-            eng.add_request(s, prompts[queue.pop(0)])
+        # continuous batching: fill all slots at once (their prompts share
+        # prefill batches), refill freed slots together as they finish
+        eng.add_requests({s: prompts[queue.pop(0)]
+                          for s in range(min(args.batch, len(queue)))})
         while eng.live.any():
             eng.step()
             gen_tokens += int(eng.live.sum())
+            refills = {}
             for s in range(args.batch):
                 if eng.live[s] and len(eng.outputs[s]) >= args.gen_len:
                     eng.finish(s)
                     if queue:
-                        eng.add_request(s, prompts[queue.pop(0)])
+                        refills[s] = prompts[queue.pop(0)]
+            if refills:
+                eng.add_requests(refills)
         dt = time.perf_counter() - t0
         print(f"served {len(eng.done)} requests, {gen_tokens} tokens in "
               f"{dt:.2f}s ({gen_tokens / dt:.1f} tok/s), "

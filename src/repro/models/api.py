@@ -44,11 +44,23 @@ def loss_fn(params, batch, cfg: ModelConfig, ctx):
     return fam.loss(params, batch, cfg, ctx)
 
 
-def prefill_fn(params, batch, cache, cfg: ModelConfig, ctx):
+def prefill_fn(params, batch, cache, cfg: ModelConfig, ctx, *,
+               pos=None, full_logits: bool = False):
+    """Family-dispatched prefill.
+
+    ``pos``: optional (B,) start positions — the chunked-prefill regime
+    (each call ingests one prompt chunk; the KV cache continues from
+    ``pos`` instead of 0).  ``full_logits=True`` returns logits for every
+    chunk position instead of only the last one, so a serving engine can
+    read each sequence's true last-token logits when prompts end
+    mid-chunk.
+    """
     fam = get_family(cfg)
     if cfg.family in ("encdec", "vlm"):
-        return fam.prefill(params, batch, cache, cfg, ctx)
-    return fam.prefill(params, batch["tokens"], cache, cfg, ctx)
+        return fam.prefill(params, batch, cache, cfg, ctx, pos=pos,
+                           full_logits=full_logits)
+    return fam.prefill(params, batch["tokens"], cache, cfg, ctx, pos=pos,
+                       full_logits=full_logits)
 
 
 def decode_fn(params, tokens, cache, pos, cfg: ModelConfig, ctx):

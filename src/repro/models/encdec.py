@@ -143,7 +143,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, batch, cache, cfg: ModelConfig,
-            ctx: QuantContext = DEFAULT_CTX):
+            ctx: QuantContext = DEFAULT_CTX, *, pos=None,
+            full_logits: bool = False):
     enc = encode(params, batch["enc_input"], cfg, ctx)
     dims = cfg.attn_dims(causal=False)
 
@@ -153,11 +154,13 @@ def prefill(params, batch, cache, cfg: ModelConfig,
     kv = jax.vmap(proj)(params["decoder"])              # (L, B, Hkv, Se, Dh)
     kv = tuple(t.astype(cache["cross_kv"][0].dtype) for t in kv)
     b = batch["tokens"].shape[0]
+    start = jnp.zeros((b,), jnp.int32) if pos is None else pos
     logits, new_self = _decode(params, batch["tokens"], None, cfg, ctx,
                                cache=cache["layers"]["self"],
-                               cache_pos=jnp.zeros((b,), jnp.int32),
+                               cache_pos=start,
                                cross_kv=kv)
-    return logits[:, -1:], {"layers": {"self": new_self}, "cross_kv": kv}
+    out = logits if full_logits else logits[:, -1:]
+    return out, {"layers": {"self": new_self}, "cross_kv": kv}
 
 
 def decode_step(params, tokens, cache, pos, cfg: ModelConfig,

@@ -127,12 +127,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, tokens, cache, cfg: ModelConfig,
-            ctx: QuantContext = DEFAULT_CTX):
+            ctx: QuantContext = DEFAULT_CTX, *, pos=None,
+            full_logits: bool = False):
+    """NOTE: ``pos`` offsets only the attention caches; the SSM states
+    are rebuilt from this call's tokens, so hybrid prefill must ingest
+    the whole prompt in one call (no cross-call chunking)."""
     b = tokens.shape[0]
+    start = jnp.zeros((b,), jnp.int32) if pos is None else pos
     logits, new_cache = forward(params, tokens, cfg, ctx, cache=cache,
-                                cache_pos=jnp.zeros((b,), jnp.int32),
-                                decode=False)
-    return logits[:, -1:], new_cache
+                                cache_pos=start, decode=False)
+    return (logits if full_logits else logits[:, -1:]), new_cache
 
 
 def decode_step(params, tokens, cache, pos, cfg: ModelConfig,

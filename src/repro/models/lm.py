@@ -134,13 +134,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, tokens: jnp.ndarray, cache, cfg: ModelConfig,
-            ctx: QuantContext = DEFAULT_CTX):
-    """Run the prompt through the model, filling the cache from position 0."""
+            ctx: QuantContext = DEFAULT_CTX, *, pos=None,
+            full_logits: bool = False):
+    """Run prompt tokens through the model, filling the cache.
+
+    ``pos`` (B,): per-slot start positions for chunked prefill (None =
+    whole prompt from 0).  ``full_logits=True`` returns logits at every
+    position of this chunk instead of only the last.
+    """
     b = tokens.shape[0]
-    zero = jnp.zeros((b,), jnp.int32)
+    start = jnp.zeros((b,), jnp.int32) if pos is None else pos
     logits, new_cache, _ = forward(params, tokens, cfg, ctx, cache=cache,
-                                   cache_pos=zero)
-    return logits[:, -1:], new_cache
+                                   cache_pos=start)
+    return (logits if full_logits else logits[:, -1:]), new_cache
 
 
 def decode_step(params, tokens: jnp.ndarray, cache, pos: jnp.ndarray,

@@ -67,11 +67,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, tokens, cache, cfg: ModelConfig,
-            ctx: QuantContext = DEFAULT_CTX):
-    """Full-sequence SSD prefill; final per-layer states seed decode."""
-    del cache  # rebuilt from the prefill pass
+            ctx: QuantContext = DEFAULT_CTX, *, pos=None,
+            full_logits: bool = False):
+    """Full-sequence SSD prefill; final per-layer states seed decode.
+
+    The recurrent state is position-free, so ``pos`` is ignored — and
+    because the state is rebuilt from this call's tokens alone, SSM
+    prefill must ingest the whole prompt in one call."""
+    del cache, pos  # rebuilt from the prefill pass; state is position-free
     logits, states = forward(params, tokens, cfg, ctx)
-    return logits[:, -1:], states
+    return (logits if full_logits else logits[:, -1:]), states
 
 
 def decode_step(params, tokens, cache, pos, cfg: ModelConfig,

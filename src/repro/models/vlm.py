@@ -129,14 +129,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, batch, cache, cfg: ModelConfig,
-            ctx: QuantContext = DEFAULT_CTX):
+            ctx: QuantContext = DEFAULT_CTX, *, pos=None,
+            full_logits: bool = False):
     b = batch["tokens"].shape[0]
+    start = jnp.zeros((b,), jnp.int32) if pos is None else pos
     logits, new_cache = forward(params, batch["tokens"], batch["img_embed"],
-                                cfg, ctx, cache=cache,
-                                cache_pos=jnp.zeros((b,), jnp.int32))
+                                cfg, ctx, cache=cache, cache_pos=start)
     new_cache["cross_kv"] = tuple(
         t.astype(cache["cross_kv"][0].dtype) for t in new_cache["cross_kv"])
-    return logits[:, -1:], new_cache
+    return (logits if full_logits else logits[:, -1:]), new_cache
 
 
 def decode_step(params, tokens, cache, pos, cfg: ModelConfig,

@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.qtypes import QTensor
 from ..dist.constrain import constrain
 from .activations import softmax
 from .context import DEFAULT_CTX, QuantContext
@@ -405,8 +406,14 @@ def mla_apply(p, x: jnp.ndarray, d: MLADims, ctx: QuantContext = DEFAULT_CTX,
         positions = jnp.arange(s)[None, :] + (
             cache_pos[:, None] if cache_pos is not None else 0)
     q_nope, q_rope, ckv, krope = _mla_qkv(p, x, d, ctx, positions, path)
-    wkv_b = p["wkv_b"]["w"].reshape(d.kv_lora_rank, h,
-                                    d.qk_nope_dim + d.v_head_dim)
+    # wkv_b is consumed raw (reshaped into absorbed-form einsums, not via
+    # linear()); a pre-quantized QTensor from ptq_params is dequantized
+    # once here — still zero calibrate/round work per forward.
+    w_b = p["wkv_b"]["w"]
+    if isinstance(w_b, QTensor):
+        w_b = w_b.dequantize(ctx.compute_dtype)
+    wkv_b = w_b.reshape(d.kv_lora_rank, h,
+                        d.qk_nope_dim + d.v_head_dim)
     w_uk = wkv_b[..., :d.qk_nope_dim]       # (lora, H, qk_nope)
     w_uv = wkv_b[..., d.qk_nope_dim:]       # (lora, H, v_dim)
 

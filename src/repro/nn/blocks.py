@@ -59,13 +59,20 @@ def mlp_init(rng, d_model: int, d_ff: int, *, gated: bool = True,
 
 def mlp_apply(p, x, act: str, ctx: QuantContext = DEFAULT_CTX, *,
               path: str = "mlp"):
-    up = linear(p["up"], x, ctx, path=f"{path}/up")
+    """Gated (SwiGLU-style) or plain MLP.
+
+    The activation is handed to ``linear()`` so the int8+LUT path fuses
+    it (with the bias) into the qmatmul epilogue — dense→activation in
+    one kernel launch; other paths apply the identical ``act_fn``.
+    """
     if "gate" in p:
-        g = act_fn(act, linear(p["gate"], x, ctx, path=f"{path}/gate"),
-                   ctx, path=f"{path}/act")
+        up = linear(p["up"], x, ctx, path=f"{path}/up")
+        g = linear(p["gate"], x, ctx, path=f"{path}/gate", act=act,
+                   act_path=f"{path}/act")
         h = g * up
     else:
-        h = act_fn(act, up, ctx, path=f"{path}/act")
+        h = linear(p["up"], x, ctx, path=f"{path}/up", act=act,
+                   act_path=f"{path}/act")
     return linear(p["down"], h, ctx, path=f"{path}/down")
 
 

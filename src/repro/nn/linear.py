@@ -11,23 +11,44 @@
   ``qmatmul`` Pallas kernel (HBM traffic halves vs bf16 — the deployment
   path).
 
+**Pre-quantized weights**: ``p["w"]`` may be a
+:class:`~repro.core.qtypes.QTensor` produced offline by
+:func:`repro.core.quantize.ptq_params`.  Under ``int8`` the payload and
+scales feed ``qmatmul`` directly — zero ``calibrate_scale``/``round`` ops
+on the weight per forward call (only the activation is quantized
+dynamically).  Under other modes the QTensor is dequantized once into the
+compute dtype.  This is the hls4ml deployment contract: quantize at model
+conversion, not per inference.
+
+**Fused epilogue**: passing ``act=`` (with ``ctx.use_lut``) fuses the
+bias add and the LUT activation into the qmatmul kernel's final K step —
+linear + bias + activation in ONE kernel launch / HBM pass (the paper's
+dense→activation dataflow fusion).  When the fused path does not apply,
+``act`` falls back to :func:`repro.nn.activations.act_fn` with identical
+numerics.
+
 Per-layer heterogeneity comes from ``ctx.policy.resolve(path)`` — the
 hls4ml per-layer config dict, de-specialized.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.precision import LayerPrecision
 from ..core.quantize import calibrate_scale, fake_quant
-from ..core.qtypes import FixedPointType, MiniFloatType
+from ..core.qtypes import FixedPointType, MiniFloatType, QTensor
+from ..core.tables import GATED_FORMS, TableSpec
 from .context import DEFAULT_CTX, QuantContext
 
 __all__ = ["linear_init", "linear"]
+
+#: activations the fused LUT epilogue supports (relu is cheaper exact;
+#: softplus needs the piecewise-exact asymptote outside the table domain).
+_FUSABLE_ACTS = ("sigmoid", "tanh", "gelu", "silu")
 
 
 def linear_init(rng, d_in: int, d_out: int, *, bias: bool = False,
@@ -40,39 +61,99 @@ def linear_init(rng, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def _int8_matmul(x2: jnp.ndarray, w: jnp.ndarray, qt: FixedPointType,
-                 ctx: QuantContext) -> jnp.ndarray:
-    """(T, K) @ (K, N) through the int8 MXU path."""
+def _act_table(act: str, ctx: QuantContext,
+               path: str) -> Tuple[TableSpec, bool]:
+    """TableSpec + gated flag matching act_fn's LUT selection exactly."""
+    from .activations import _LUT_DOMAIN  # table domains live with act_fn
+    prec = ctx.policy.resolve(path)
+    n = prec.table_n or ctx.table_n
+    qt = prec.table_qtype
+    lo, hi = _LUT_DOMAIN[act]
+    gated = act in GATED_FORMS
+    fn = GATED_FORMS[act] if gated else act
+    return TableSpec(fn, n, lo, hi, qt, ctx.table_indexing), gated
+
+
+def _int8_matmul(x2: jnp.ndarray, wq: jnp.ndarray, sw: jnp.ndarray,
+                 qt: FixedPointType, ctx: QuantContext, *,
+                 bias=None, act_spec=None, act_gated=False) -> jnp.ndarray:
+    """(T, K) @ (K, N) through the int8 MXU path (+ fused epilogue).
+
+    The weight arrives already quantized (payload ``wq``, per-column
+    scales ``sw``); only the activation is quantized here (per-row
+    dynamic scale — it changes every call, the weight does not).
+    """
     from ..kernels.ops import qmatmul  # local: kernels import nn-free core
 
     sx = calibrate_scale(x2, qt, channel_axes=(0,))          # (T, 1)
     xq = jnp.clip(jnp.round(x2 / sx), qt.int_min, qt.int_max).astype(qt.dtype)
-    sw = calibrate_scale(w, qt, channel_axes=(1,))           # (1, N)
-    wq = jnp.clip(jnp.round(w / sw), qt.int_min, qt.int_max).astype(qt.dtype)
-    return qmatmul(xq, wq, sx, sw, out_dtype=ctx.compute_dtype,
+    return qmatmul(xq, wq, sx, sw, bias=bias, act_spec=act_spec,
+                   act_gated=act_gated, out_dtype=ctx.compute_dtype,
                    backend=ctx.backend)
 
 
+def _quantize_weight(w: jnp.ndarray, qt: FixedPointType):
+    """Dynamic per-column weight quantization (the non-PTQ fallback)."""
+    sw = calibrate_scale(w, qt, channel_axes=(1,))           # (1, N)
+    wq = jnp.clip(jnp.round(w / sw), qt.int_min, qt.int_max).astype(qt.dtype)
+    return wq, sw
+
+
 def linear(p, x: jnp.ndarray, ctx: QuantContext = DEFAULT_CTX, *,
-           path: str = "") -> jnp.ndarray:
-    """Apply ``x @ w (+ b)`` under the context's numeric mode."""
+           path: str = "", act: Optional[str] = None,
+           act_path: Optional[str] = None) -> jnp.ndarray:
+    """Apply ``act(x @ w (+ b))`` under the context's numeric mode.
+
+    ``act``: optional activation name fused into the kernel epilogue when
+    the int8 LUT path applies, applied via ``act_fn`` otherwise.
+    ``act_path``: policy-resolution path for the activation (defaults to
+    ``f"{path}/act"``), so fused and unfused paths resolve identically.
+    """
     w = p["w"]
     prec: LayerPrecision = ctx.policy.resolve(path)
-    mode = ctx.mode if (prec.weights is not None or ctx.mode == "none") else "none"
+    prequant = isinstance(w, QTensor)
+    mode = ctx.mode
+    if not prequant and prec.weights is None and mode != "none":
+        mode = "none"
 
-    if mode == "int8" and isinstance(prec.weights, FixedPointType) \
-            and prec.weights.width <= 8:
+    # which int8 weight feed applies?
+    wq = sw = qt = None
+    if mode == "int8":
+        if prequant and isinstance(w.qtype, FixedPointType) \
+                and w.qtype.width <= 8:
+            qt = w.qtype                       # PTQ artifact: ready to run
+            wq, sw = w.data, w.scale.reshape(1, -1)
+        elif not prequant and isinstance(prec.weights, FixedPointType) \
+                and prec.weights.width <= 8:
+            qt = prec.weights                  # dynamic: quantize per call
+
+    bias = p.get("b")
+    act_done = bias_done = False
+    if qt is not None:
         t_shape = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        y = _int8_matmul(x2, w.astype(jnp.float32), prec.weights, ctx)
-        y = y.reshape(*t_shape, w.shape[-1])
+        if wq is None:
+            wq, sw = _quantize_weight(w.astype(jnp.float32), qt)
+        fuse_act = act in _FUSABLE_ACTS and ctx.use_lut
+        spec, gated = (_act_table(act, ctx, act_path or f"{path}/act")
+                       if fuse_act else (None, False))
+        fb = None if bias is None else bias.astype(jnp.float32)
+        y = _int8_matmul(x2, wq, sw, qt, ctx, bias=fb, act_spec=spec,
+                         act_gated=gated)
+        y = y.reshape(*t_shape, wq.shape[-1])
+        bias_done, act_done = True, fuse_act
     else:
+        if prequant:
+            w = w.dequantize(ctx.compute_dtype)
         if mode == "fake" and prec.weights is not None:
             w = fake_quant(w.astype(jnp.float32), prec.weights)
         if mode == "fake" and prec.activations is not None:
             x = fake_quant(x.astype(jnp.float32), prec.activations)
         y = jnp.einsum("...k,kn->...n", x.astype(ctx.compute_dtype),
                        w.astype(ctx.compute_dtype))
-    if "b" in p:
-        y = y + p["b"].astype(y.dtype)
+    if bias is not None and not bias_done:
+        y = y + bias.astype(y.dtype)
+    if act is not None and not act_done:
+        from .activations import act_fn
+        y = act_fn(act, y, ctx, path=act_path or f"{path}/act")
     return y

@@ -27,6 +27,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.qtypes import QTensor
 from .activations import act_fn
 from .context import DEFAULT_CTX, QuantContext
 
@@ -140,12 +141,19 @@ def moe_apply(p, x: jnp.ndarray, d: MoEDims,
         xe = constrain(xe, "dp", "tp", None, None)   # EP: experts on `model`
 
     # ---- expert FFN (SwiGLU), experts sharded over `model` ----------------
+    # Pre-quantized (QTensor) expert banks from ptq_params are consumed
+    # without any per-forward calibrate/round: dequantize is one fused
+    # multiply against the stored per-channel scales.  (Batched per-expert
+    # int8 qmatmul dispatch is a follow-up; the dense path here already
+    # pays zero quantization work per step.)
     cd = ctx.compute_dtype
-    h_g = jnp.einsum("becd,edf->becf", xe.astype(cd),
-                     p["w_gate"].astype(cd))
-    h_u = jnp.einsum("becd,edf->becf", xe.astype(cd), p["w_up"].astype(cd))
+    w_gate, w_up, w_down = (
+        w.dequantize(cd) if isinstance(w, QTensor) else w.astype(cd)
+        for w in (p["w_gate"], p["w_up"], p["w_down"]))
+    h_g = jnp.einsum("becd,edf->becf", xe.astype(cd), w_gate)
+    h_u = jnp.einsum("becd,edf->becf", xe.astype(cd), w_up)
     h = act_fn(d.act, h_g, ctx, path=f"{path}/act") * h_u
-    ye = jnp.einsum("becf,efd->becd", h.astype(cd), p["w_down"].astype(cd))
+    ye = jnp.einsum("becf,efd->becd", h.astype(cd), w_down)
     ye = constrain(ye, "dp", "tp", None, None)
 
     # ---- combine: slots back to tokens, weighted by the gate --------------

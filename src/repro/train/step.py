@@ -126,10 +126,17 @@ def build_serve_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
 
 
 def build_prefill_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
-    """(params, batch, cache) -> (last_logits, cache)."""
+    """(params, batch, cache, pos) -> (chunk_logits, cache).
+
+    The chunked-prefill step used by the serving engine: ``pos`` gives
+    each slot's current cache position and the returned logits cover
+    every chunk position (so ragged prompt ends can be read per slot).
+    Pass ``pos=None`` for a whole-prompt prefill from position 0.
+    """
     from ..models.api import prefill_fn
 
-    def prefill_step(params, batch, cache):
-        return prefill_fn(params, batch, cache, cfg, ctx)
+    def prefill_step(params, batch, cache, pos=None):
+        return prefill_fn(params, batch, cache, cfg, ctx, pos=pos,
+                          full_logits=True)
 
     return prefill_step

@@ -1,0 +1,108 @@
+"""Minimal deterministic stand-in for `hypothesis` (not installed in the
+CI container; no new deps allowed).
+
+Implements exactly the API surface the test-suite uses — ``given``,
+``settings``, and the ``integers / floats / lists / sampled_from / just /
+builds`` strategies — as a seeded random sampler.  Each decorated test
+runs ``max_examples`` times with examples drawn from a fixed-seed RNG, so
+runs are reproducible (no shrinking, no database).  If the real
+hypothesis is ever installed, conftest prefers it and this module is
+never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: np.random.RandomState):
+        return self._sample(rng)
+
+    def filter(self, pred, _max_tries: int = 1000):
+        def sample(rng):
+            for _ in range(_max_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return _Strategy(sample)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.randint(min_value,
+                                                     max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        lo, hi = float(min_value), float(max_value)
+        return _Strategy(lambda rng: float(lo + (hi - lo) * rng.rand()))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = int(rng.randint(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(n)]
+        return _Strategy(sample)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.randint(len(seq)))])
+
+    @staticmethod
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def builds(target, **kwargs):
+        def sample(rng):
+            return target(**{k: v.sample(rng) for k, v in kwargs.items()})
+        return _Strategy(sample)
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = 20, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = [p for p in sig.parameters]
+        # strategies bind to the trailing positional params (after self)
+        n_pos = len(strats)
+        bound = (names[-n_pos:] if n_pos else []) + list(kw_strats)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            rng = np.random.RandomState(0)
+            for _ in range(n):
+                drawn = [s.sample(rng) for s in strats]
+                kw = {k: s.sample(rng) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **kw, **kwargs)
+
+        # hide strategy params from pytest's fixture resolution
+        kept = [p for name, p in sig.parameters.items() if name not in bound]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return deco

@@ -9,3 +9,12 @@ if "host_platform_device_count" in flags:
     os.environ["XLA_FLAGS"] = " ".join(parts)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# `hypothesis` is not available in the CI container; install the local
+# deterministic stub unless the real package exists.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub

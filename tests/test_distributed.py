@@ -50,7 +50,7 @@ def test_sharded_train_step_runs_and_converges():
                             out_shardings=(st_sh, rep),
                             donate_argnums=(0,))
             losses = []
-            for i in range(12):
+            for i in range(24):
                 batch = jax.device_put(make_batch(cfg, i, 8, 32), b_sh)
                 state, m = jstep(state, batch)
                 losses.append(float(m["loss"]))
@@ -65,7 +65,7 @@ def test_quantized_psum_matches_exact():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core.qtypes import FixedPointType
-        from repro.dist.compression import quantized_psum
+        from repro.dist.compression import quantized_psum, shard_map
 
         mesh = jax.make_mesh((8,), ("pod",))
         x = jnp.asarray(np.random.RandomState(0).randn(8, 64),
@@ -76,7 +76,7 @@ def test_quantized_psum_matches_exact():
             q = quantized_psum(x, "pod", FixedPointType(8, 1))
             return exact, q
 
-        exact, q = jax.shard_map(
+        exact, q = shard_map(
             f, mesh=mesh, in_specs=jax.sharding.PartitionSpec("pod"),
             out_specs=jax.sharding.PartitionSpec("pod"))(x)
         rel = float(jnp.abs(exact - q).max() /

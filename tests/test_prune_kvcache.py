@@ -123,7 +123,8 @@ class TestErrorFeedback:
             from jax.sharding import PartitionSpec as P
             from repro.core.qtypes import FixedPointType
             from repro.dist.compression import (quantized_psum,
-                                                quantized_psum_ef)
+                                                quantized_psum_ef,
+                                                shard_map)
             mesh = jax.make_mesh((4,), ("pod",))
             x = jnp.asarray(np.random.RandomState(0).randn(4, 64),
                             jnp.float32)
@@ -140,7 +141,7 @@ class TestErrorFeedback:
                     acc_q += quantized_psum(x, "pod", qt)
                 return exact, acc_ef / 24, acc_q / 24
 
-            exact, mean_ef, mean_q = jax.shard_map(
+            exact, mean_ef, mean_q = shard_map(
                 f, mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))(x)
             err_ef = float(jnp.abs(mean_ef - exact).max())
             err_q = float(jnp.abs(mean_q - exact).max())
