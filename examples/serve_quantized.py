@@ -2,12 +2,16 @@
 requests — the paper's deployment scenario (a quantized inference
 accelerator) at framework level.
 
-Continuous batching over prefill/decode steps; quantized weights +
-activations through the ``QuantContext``; LUT activations on the hot path.
-Compares fp32 vs quantized serving: throughput and greedy agreement.
+Continuous batching over batched chunked prefill and the device-resident
+fused decode loop (``--decode-block`` steps per jit call; host syncs once
+per block); quantized weights + activations through the ``QuantContext``;
+LUT activations on the hot path.  Compares fp32 vs quantized serving:
+throughput and greedy agreement — and the per-token decode baseline
+(``--decode-block 1``) vs the fused loop.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
-      (add --arch yi-6b --requests 32 ... to scale up)
+      (add --arch yi-6b --requests 32 ... to scale up; --temperature /
+       --top-k switch slots from greedy to on-device sampling)
 """
 
 import sys
@@ -17,12 +21,17 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     argv = sys.argv[1:]
     if not argv:
-        print("== fp32 serving ==")
-        main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
-              "--batch", "4", "--prompt-len", "16", "--gen-len", "16"])
-        print("\n== quantized (ac_fixed fake-quant) + LUT serving ==")
+        print("== fp32 serving, per-token decode (baseline) ==")
         main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
               "--batch", "4", "--prompt-len", "16", "--gen-len", "16",
-              "--quant", "fake", "--lut"])
+              "--decode-block", "1"])
+        print("\n== fp32 serving, fused decode loop (8 tokens/dispatch) ==")
+        main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
+              "--batch", "4", "--prompt-len", "16", "--gen-len", "16",
+              "--decode-block", "8"])
+        print("\n== quantized (ac_fixed fake-quant) + LUT + fused decode ==")
+        main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
+              "--batch", "4", "--prompt-len", "16", "--gen-len", "16",
+              "--quant", "fake", "--lut", "--decode-block", "8"])
     else:
         main(argv)

@@ -21,8 +21,9 @@ from . import ref as _ref
 from .flash_attention import flash_attention_pallas
 from .lut_activation import lut_activation_pallas
 from .qmatmul import qmatmul_pallas
+from .sampling import sample_tokens_fused
 
-__all__ = ["lut_activation", "qmatmul", "attention"]
+__all__ = ["lut_activation", "qmatmul", "attention", "sample_tokens"]
 
 
 def _interpret() -> bool:
@@ -45,6 +46,14 @@ register_op("qmatmul", "ref")(_ref.qmatmul_ref)
 def _qmatmul_pallas(a, b, sa, sb, bias=None, out_dtype=jnp.float32, **kw):
     return qmatmul_pallas(a, b, sa, sb, bias, out_dtype=out_dtype,
                           interpret=_interpret(), **kw)
+
+
+register_op("sample_tokens", "ref")(_ref.sample_tokens_ref)
+
+# the specialized lowering is an XLA fusion rather than a pallas_call:
+# sampling reads (B, V) floats once, so the win is living inside the
+# decode jit (token never leaves the device), not a custom kernel.
+register_op("sample_tokens", "pallas")(sample_tokens_fused)
 
 
 register_op("attention", "ref")(_ref.flash_attention_ref)
@@ -86,3 +95,16 @@ def attention(q, k, v, *, causal: bool = True, softmax_scale=None,
               backend: Optional[str] = None, **kw) -> jnp.ndarray:
     return get_impl("attention", backend)(q, k, v, causal=causal,
                                           softmax_scale=softmax_scale, **kw)
+
+
+def sample_tokens(logits, temperature, top_k, key=None, *,
+                  backend: Optional[str] = None) -> jnp.ndarray:
+    """Per-slot next-token draw: (B, V) logits -> (B,) int32 ids.
+
+    ``temperature`` (B,) f32 (<= 0 means greedy) and ``top_k`` (B,) i32
+    (<= 0 means unrestricted) are *per slot*, so one fused decode batch
+    can mix greedy and sampled requests.  Deterministic in ``key``
+    across jit/scan boundaries — see :mod:`repro.kernels.sampling`.
+    """
+    return get_impl("sample_tokens", backend)(logits, temperature, top_k,
+                                              key)

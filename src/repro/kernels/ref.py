@@ -17,7 +17,8 @@ import numpy as np
 
 from ..core.tables import TableSpec, get_table, table_lookup
 
-__all__ = ["lut_activation_ref", "qmatmul_ref", "flash_attention_ref"]
+__all__ = ["lut_activation_ref", "qmatmul_ref", "flash_attention_ref",
+           "sample_tokens_ref"]
 
 
 def lut_activation_ref(x: jnp.ndarray, spec: TableSpec) -> jnp.ndarray:
@@ -54,6 +55,43 @@ def qmatmul_ref(a_data: jnp.ndarray, b_data: jnp.ndarray,
         z = lut_activation_ref(y, act_spec)
         y = y * z if act_gated else z
     return y.astype(out_dtype)
+
+
+def sample_tokens_ref(logits: jnp.ndarray, temperature: jnp.ndarray,
+                      top_k: jnp.ndarray, key=None) -> jnp.ndarray:
+    """Token-sampling oracle: (B, V) logits -> (B,) int32 ids.
+
+    Matches :func:`repro.kernels.sampling.sample_tokens_fused` exactly,
+    ties included.  NOTE the limits of this oracle: exact-match testing
+    forces both lowerings to share the noise source
+    (:func:`~repro.kernels.sampling.gumbel_noise`) and the rank-based
+    tie convention (stable argsort; a value threshold would admit > k
+    candidates on tied logits), so this checks the *composition* —
+    masking, temperature scaling, greedy overrides — not the shared
+    draw itself.  The semantic properties of the draw (tokens in range,
+    inside the top-k set, greedy == argmax, spread under temperature)
+    are asserted independently in tests/test_sampling.py.
+    """
+    from .sampling import gumbel_noise
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        return greedy
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+    top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+
+    # rank 0 = the largest logit in its row; candidate iff rank < k
+    order = jnp.argsort(-logits, axis=-1)                       # (B, V)
+    ranks = jnp.argsort(order, axis=-1)                         # (B, V)
+    k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+    candidate = ranks < k_eff[:, None]
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    perturbed = jnp.where(candidate, logits / temp, -jnp.inf) \
+        + gumbel_noise(key, (b, v))
+    sampled = jnp.argmax(perturbed, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

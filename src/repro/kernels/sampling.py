@@ -1,0 +1,82 @@
+"""Fused token-sampling lowering for the device-resident decode loop.
+
+``sample_tokens`` draws one next-token id per batch slot from (B, V)
+logits, entirely on device, with *per-slot* sampling parameters:
+
+* ``temperature <= 0``  — greedy (argmax); the serving default, and the
+  mode the byte-identical acceptance comparisons run under.
+* ``temperature > 0``   — softmax sampling at that temperature via the
+  Gumbel-max trick (one argmax, no materialized CDF).
+* ``top_k > 0``         — restrict sampling to the k highest logits
+  (k is clamped to the vocab size); ``top_k <= 0`` means unrestricted.
+
+Sampling is the one step of the decode loop that is *stateful across
+steps* (the PRNG), so determinism is part of the op contract: given the
+same (logits, params, key) the draw is identical whether the op runs
+standalone, under ``jax.jit``, or inside the ``lax.scan`` of
+``build_decode_loop`` — callers derive per-step keys with
+``jax.random.fold_in`` so a block of N fused steps consumes exactly the
+keys N per-token steps would.
+
+This lowering is the registry's specialized backend for the op.  Unlike
+qmatmul / attention there is no ``pallas_call`` here on purpose: sampling
+touches (B, V) floats once — it is bandwidth-trivial next to the matmuls
+it follows — and the win is *fusing it into the decode jit* so the
+sampled token never leaves the device.  The ``ref`` backend in
+:mod:`repro.kernels.ref` re-derives the composition (masking,
+temperature, greedy overrides) from the same noise source and tie
+convention — see its docstring for what that does and does not verify.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_tokens_fused", "gumbel_noise"]
+
+
+def gumbel_noise(key, shape) -> jnp.ndarray:
+    """Shared Gumbel(0, 1) noise: both lowerings must perturb logits with
+    bit-identical noise so the fused/ref argmaxes agree exactly."""
+    return jax.random.gumbel(key, shape, dtype=jnp.float32)
+
+
+def sample_tokens_fused(logits: jnp.ndarray, temperature: jnp.ndarray,
+                        top_k: jnp.ndarray, key: Optional[jax.Array] = None,
+                        ) -> jnp.ndarray:
+    """(B, V) logits -> (B,) int32 token ids.
+
+    ``temperature``: (B,) f32; ``top_k``: (B,) int32.  ``key`` may be
+    None only if every slot is greedy (no randomness consumed).
+    """
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        return greedy
+
+    temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+    top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+
+    # per-slot candidate set: the k highest logits, k <= 0 disables the
+    # restriction.  Candidacy is RANK-based (stable argsort), not a
+    # value threshold: tied logits at the k-th place — routine under
+    # int8-dequantized heads — must resolve to exactly k candidates the
+    # same way in every lowering, or backends sample different tokens
+    # from the same (logits, key).  O(V log V) on (B, V), negligible
+    # next to the decode matmuls.
+    order = jnp.argsort(-logits, axis=-1)                         # (B, V)
+    ranks = jnp.argsort(order, axis=-1)
+    k_eff = jnp.clip(top_k, 1, v)
+    restricted = jnp.where(top_k[:, None] > 0,
+                           ranks < k_eff[:, None],
+                           jnp.ones((b, v), bool))
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    perturbed = jnp.where(restricted, logits / temp, -jnp.inf) \
+        + gumbel_noise(key, (b, v))
+    sampled = jnp.argmax(perturbed, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

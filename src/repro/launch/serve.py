@@ -1,5 +1,5 @@
-"""Serving entrypoint: batched chunked prefill + decode with continuous
-batching.
+"""Serving entrypoint: batched chunked prefill + device-resident decode
+with continuous batching.
 
 The paper's deployment scenario — a *quantized inference accelerator* —
 realized at framework level, as a fused quantized dense pipeline:
@@ -20,6 +20,14 @@ realized at framework level, as a fused quantized dense pipeline:
   steps *per slot*.  Slots mid-generation are untouched: their chunk
   writes land in a reserved cache margin (see ``Engine``) and their
   positions do not advance.
+* **Device-resident decode loop** — generation runs through
+  ``build_decode_loop``: ``step_many(n)`` executes n decode steps inside
+  ONE ``lax.scan`` jit call — model step, per-slot sampling (greedy /
+  temperature / top-k, see :mod:`repro.kernels.sampling`), per-slot
+  position advance, and EOS/length stopping all stay on device.  The
+  host syncs once per n-token block (to retire finished slots and refill
+  them) instead of once per token: 1/n jit dispatches and host round
+  trips per generated token vs ``step()``.
 * **Continuous batching** — a finished sequence's slot is refilled by
   the next queued request without draining the batch; freed slots are
   refilled *together* so their prompts share prefill batches too.
@@ -27,7 +35,8 @@ realized at framework level, as a fused quantized dense pipeline:
 Usage (CPU-scale)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-        --requests 16 --batch 4 --prompt-len 32 --gen-len 16 --quant int8
+        --requests 16 --batch 4 --prompt-len 32 --gen-len 16 \
+        --quant int8 --decode-block 8
 """
 
 from __future__ import annotations
@@ -44,15 +53,39 @@ from ..configs import get_config
 from ..data.pipeline import SyntheticLM
 from ..dist.constrain import use_mesh
 from ..dist.sharding import cache_specs, named, param_specs
-from ..models.api import get_family
+from ..models.api import (get_family, invalidate_fn, merge_slot_fn,
+                          supports_chunked_prefill)
 from ..nn.context import QuantContext
-from ..train.step import build_prefill_step, build_serve_step
+from ..train.step import (build_decode_loop, build_prefill_step,
+                          build_serve_step)
 from .mesh import make_local_mesh
 from .train import build_ctx
 
 
+def _snap(a: np.ndarray) -> jnp.ndarray:
+    """Host→device snapshot of engine-mutable numpy state.
+
+    The engine mutates ``pos``/``tokens``/``live`` in place right after
+    dispatching a step.  Handing the numpy buffer itself to jax races
+    the *asynchronous* host copy — ``jnp.array``'s copy=True is not a
+    synchronous defensive copy on the CPU backend, so under load the
+    transfer can read the buffer AFTER the host mutated it (observed:
+    the per-token prefill loop nondeterministically produced garbage
+    first tokens).  A fresh ``.copy()`` that nothing ever mutates is
+    safe regardless of whether jax aliases or copies it.
+    """
+    return jnp.asarray(a.copy())
+
+
 class Engine:
     """Slot-based continuous batching engine over prefill/decode steps.
+
+    Decoding is device-resident: ``step_many(n)`` runs n fused decode
+    steps (one jit call, one host sync); ``step()`` is the n=1 special
+    case, kept as the per-token baseline.  Per-slot sampling parameters
+    (``temperature``/``top_k``), generation budgets (``stop_pos``) and
+    the EOS id live in the engine and are threaded through the loop, so
+    greedy and sampled requests share one batch.
 
     Cache layout note: the KV cache is allocated with ``prefill_chunk``
     margin rows beyond ``max_len``.  During a mid-flight refill the
@@ -64,14 +97,15 @@ class Engine:
     """
 
     def __init__(self, cfg, ctx, params, mesh, *, batch: int, max_len: int,
-                 kv_bits=None, prefill_chunk: int = 16):
+                 kv_bits=None, prefill_chunk: int = 16, eos_id: int = -1,
+                 seed: int = 0):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
         self.prefill_chunk = max(1, prefill_chunk)
         # chunked prefill needs per-call cache continuation; only the
         # attention-cache families support that (SSM state is rebuilt
         # from the tokens of one call).
-        self.chunked = cfg.family == "lm"
+        self.chunked = supports_chunked_prefill(cfg)
         fam = get_family(cfg)
         self.params = params
         cache_dtype = jnp.int8 if kv_bits == 8 else jnp.float32
@@ -82,30 +116,60 @@ class Engine:
         self.cache = jax.device_put(self.cache, c_sh)
         self.decode = jax.jit(build_serve_step(cfg, ctx))
         self.prefill = jax.jit(build_prefill_step(cfg, ctx))
+        #: per-block-size cache of jitted fused decode loops
+        self._loops: Dict[int, callable] = {}
         # donated so XLA updates the cache in place — invalidating a slot
         # on finish() must not copy the whole KV cache per request
         self._invalidate = jax.jit(
-            lambda cache, slot: jax.tree_util.tree_map(
-                lambda c: c.at[:, slot].set(0), cache),
+            lambda cache, slot: invalidate_fn(cache, slot, cfg),
             donate_argnums=(0,))
+        # old cache donated: the merge result is old with one lane
+        # replaced, so XLA updates it in place
+        self._merge = jax.jit(
+            lambda new, old, slot: merge_slot_fn(new, old, slot, cfg),
+            donate_argnums=(1,))
         self.pos = np.zeros((batch,), np.int32)
         self.live = np.zeros((batch,), bool)
         self.tokens = np.zeros((batch, 1), np.int32)
+        #: lanes known zeroed since the last decode touched them — a
+        #: fresh engine starts all-clean, finish() re-cleans its slot,
+        #: any decode block dirties every lane (decode advances dead
+        #: lanes' recurrent state too); admission only invalidates
+        #: lanes that are actually dirty (deferred refills), not ones
+        #: finish() just zeroed.
+        self._clean = np.ones((batch,), bool)
+        #: per-slot sampling params; temperature <= 0 = greedy,
+        #: top_k <= 0 = unrestricted (see repro.kernels.sampling)
+        self.temperature = np.zeros((batch,), np.float32)
+        self.top_k = np.zeros((batch,), np.int32)
+        #: per-slot position bound: live drops when pos reaches it
+        self.stop_pos = np.full((batch,), max_len, np.int32)
+        self.eos_id = int(eos_id)
+        self._key = jax.random.PRNGKey(seed)
+        self._gen_step = 0          # global decode-step counter (PRNG)
         self.outputs: List[Optional[list]] = [None] * batch
         self.done: List[list] = []
 
     # -- request admission --------------------------------------------------
-    def add_request(self, slot: int, prompt: np.ndarray):
+    def add_request(self, slot: int, prompt: np.ndarray, **kw):
         """Prefill one request into ``slot``."""
-        self.add_requests({slot: prompt})
+        self.add_requests({slot: prompt}, **kw)
 
-    def add_requests(self, requests: Dict[int, np.ndarray]):
+    def add_requests(self, requests: Dict[int, np.ndarray], *,
+                     gen_len: Optional[int] = None,
+                     temperature=None, top_k=None):
         """Prefill several fresh slots together (batched chunked prefill).
 
         Prompts are ingested in full-batch chunks of ``prefill_chunk``
         tokens — O(max_prompt_len / chunk) model calls for the whole
         group.  An empty prompt is treated as a single pad/BOS token
         (id 0) so the first generated token is always defined.
+
+        ``gen_len`` bounds generation per admitted request (``stop_pos =
+        prompt_len + gen_len``; None = run to the cache bound).
+        ``temperature``/``top_k`` set the admitted slots' sampling
+        params: a scalar applies to all of them, a ``{slot: value}``
+        dict sets them per request.
         """
         reqs = {int(s): np.asarray(p, np.int32).reshape(-1)
                 for s, p in requests.items()}
@@ -114,6 +178,23 @@ class Engine:
                 reqs[s] = np.zeros((1,), np.int32)
         if not reqs:
             return
+
+        def per_slot(v, s, default):
+            if v is None:
+                return default
+            return v.get(s, default) if isinstance(v, dict) else v
+
+        # a recycled slot may have idled for whole blocks since
+        # finish(): decode advances dead lanes too (the held pad token
+        # drives recurrent state forward), so zero each such lane NOW —
+        # prefill must start from clean state, not from whatever
+        # accumulated while the slot sat empty.  (Chunked-prefill
+        # garbage writes into a clean lane don't dirty it: the
+        # visibility mask + decode's write-before-attend keep those
+        # rows unobservable, the same invariant as the cache margin.)
+        for s in reqs:
+            if not self._clean[s]:
+                self.cache = self._invalidate(self.cache, jnp.int32(s))
         if self.chunked:
             first = self._prefill_chunked(reqs)
         else:
@@ -123,6 +204,14 @@ class Engine:
             self.live[s] = True
             self.outputs[s] = []
             self.tokens[s, 0] = first[s]
+            self._clean[s] = False          # lane now holds the prompt
+            self.temperature[s] = per_slot(temperature, s, 0.0)
+            self.top_k[s] = per_slot(top_k, s, 0)
+            # clamp to the cache budget: an oversized gen_len must stop
+            # at max_len, not keep a slot live while decode writes clamp
+            # into the last cache row
+            self.stop_pos[s] = (min(p.shape[0] + gen_len, self.max_len)
+                                if gen_len is not None else self.max_len)
 
     def _prefill_chunked(self, reqs) -> Dict[int, int]:
         chunk = self.prefill_chunk
@@ -141,8 +230,8 @@ class Engine:
             cur = self.pos.copy()
             cur[fresh] = c0
             logits, self.cache = self.prefill(
-                self.params, {"tokens": jnp.array(toks[:, c0:c0 + chunk])},
-                self.cache, jnp.array(cur))
+                self.params, {"tokens": _snap(toks[:, c0:c0 + chunk])},
+                self.cache, _snap(cur))
             logits = np.asarray(logits)
             for s, p in reqs.items():
                 t_last = p.shape[0] - 1
@@ -151,51 +240,97 @@ class Engine:
         return first
 
     def _prefill_looped(self, reqs) -> Dict[int, int]:
-        """Per-token fallback for families without chunkable prefill."""
+        """Per-token fallback for families without chunkable prefill.
+
+        The full-batch decode calls advance EVERY lane — on recurrent
+        families the pad-token inputs would corrupt mid-generation
+        neighbours' state (and earlier fresh slots would pollute later
+        ones).  Each slot's loop therefore restores all OTHER lanes to
+        their pre-loop state afterwards (``merge_slot``), making its
+        prefill exactly equivalent to a solo prefill.
+        """
         first: Dict[int, int] = {}
         for s, p in reqs.items():
+            before = self.cache
             logits = None
             for t in range(p.shape[0]):
                 tok = np.zeros((self.batch, 1), np.int32)
                 tok[s, 0] = p[t]
                 logits, self.cache = self.decode(
-                    self.params, self.cache, jnp.array(tok),
-                    jnp.array(self.pos))
+                    self.params, self.cache, _snap(tok), _snap(self.pos))
                 self.pos[s] += 1
             first[s] = int(jnp.argmax(logits[s, -1]))
+            self.cache = self._merge(self.cache, before, jnp.int32(s))
             # keep pos at prompt length: later slots' loops must not write
             # into this slot's freshly-filled rows (add_requests re-asserts
             # the same value afterwards)
         return first
 
     # -- decode / retire -----------------------------------------------------
-    # NOTE: engine state crosses the jit boundary via ``jnp.array`` (an
-    # explicit copy), never ``jnp.asarray``: on CPU, asarray may zero-copy
-    # an aligned numpy buffer, and self.pos/self.tokens are mutated in
-    # place right after the async dispatch — an alias would race with the
-    # still-running computation.
-    def step(self):
-        logits, self.cache = self.decode(
-            self.params, self.cache, jnp.array(self.tokens),
-            jnp.array(self.pos))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+    # NOTE: all engine state crosses the jit boundary via ``_snap`` (a
+    # defensive numpy copy): pos/tokens/live are mutated in place right
+    # after the async dispatch, and on the CPU backend even jnp.array's
+    # host copy can complete after that mutation (see ``_snap``).
+    def step_many(self, n: int):
+        """Run ``n`` fused decode steps in ONE jit call, sync once.
+
+        Returns ``(block, block_live)`` — (n, B) emitted tokens and
+        their validity mask.  Token-for-token identical to ``n`` calls
+        of ``step()`` (same model step order, same PRNG stream: step
+        ``i`` of the block draws with the global step counter the i-th
+        single step would use).
+        """
+        loop = self._loops.get(n)
+        if loop is None:
+            # cache donated for the same reason as _invalidate: the
+            # loop's output cache replaces self.cache unconditionally,
+            # and a block must not materialize a second full KV copy
+            loop = jax.jit(build_decode_loop(self.cfg, self.ctx, n),
+                           donate_argnums=(1,))
+            self._loops[n] = loop
+        sample_params = {"temperature": _snap(self.temperature),
+                         "top_k": _snap(self.top_k)}
+        # all-greedy batches skip the top-k sorts / noise generation
+        # (greedy consumes no PRNG state, so the stream is unaffected)
+        key = self._key if (self.temperature > 0).any() else None
+        self.cache, tokens, pos, live, block, block_live = loop(
+            self.params, self.cache, _snap(self.tokens), _snap(self.pos),
+            _snap(self.live), _snap(self.stop_pos), sample_params,
+            key, jnp.int32(self._gen_step), jnp.int32(self.eos_id))
+        self._gen_step += n
+        # ONE host sync for the whole block (np.asarray blocks until the
+        # device values are ready; .copy() detaches the engine's mutable
+        # state from the device buffers)
+        block = np.asarray(block)
+        block_live = np.asarray(block_live)
+        self.tokens = np.asarray(tokens).copy()
+        self.pos = np.asarray(pos).copy()
+        self.live = np.asarray(live).copy()
+        self._clean[:] = False              # decode advanced every lane
         for s in range(self.batch):
-            if self.live[s]:
-                self.outputs[s].append(int(self.tokens[s, 0]))
-                self.tokens[s, 0] = nxt[s]
-                self.pos[s] += 1
+            if self.outputs[s] is not None:
+                self.outputs[s].extend(
+                    int(t) for t in block[block_live[:, s], s])
+        return block, block_live
+
+    def step(self):
+        """Per-token decode: the n=1 decode loop (baseline path)."""
+        self.step_many(1)
 
     def finish(self, slot: int):
         self.done.append(self.outputs[slot])
         self.outputs[slot] = None
         self.live[slot] = False
         self.pos[slot] = 0
-        if self.chunked:
-            # invalidate the retired request's KV rows so a recycled slot
-            # can never attend to a previous occupant's cache (defense in
-            # depth on top of the visibility mask; in-place via donation).
-            self.cache = self._invalidate(self.cache,
-                                          jnp.int32(slot))
+        self.temperature[slot] = 0.0
+        self.top_k[slot] = 0
+        self.stop_pos[slot] = self.max_len
+        # invalidate the retired request's serving state (KV rows /
+        # recurrent state) so a recycled slot can never observe a
+        # previous occupant — family-aware (see models.api.invalidate_fn),
+        # in-place via donation.
+        self.cache = self._invalidate(self.cache, jnp.int32(slot))
+        self._clean[slot] = True
 
 
 def quantize_for_serving(params, ctx: QuantContext):
@@ -228,6 +363,12 @@ def main(argv=None):
                     help="int8 KV cache (per-token scales)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="tokens per batched prefill step")
+    ap.add_argument("--decode-block", type=int, default=8,
+                    help="decode steps fused per jit call (1 = per-token)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k best logits (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -248,33 +389,41 @@ def main(argv=None):
         max_len = args.prompt_len + args.gen_len + 1
         eng = Engine(cfg, ctx, params, mesh, batch=args.batch,
                      max_len=max_len, kv_bits=args.kv_bits,
-                     prefill_chunk=args.prefill_chunk)
+                     prefill_chunk=args.prefill_chunk, seed=args.seed)
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
                    for i in range(args.requests)]
         queue = list(range(args.requests))
+        block = max(1, args.decode_block)
         t0 = time.perf_counter()
         gen_tokens = 0
         # continuous batching: fill all slots at once (their prompts share
         # prefill batches), refill freed slots together as they finish
-        eng.add_requests({s: prompts[queue.pop(0)]
-                          for s in range(min(args.batch, len(queue)))})
+        admit = {s: prompts[queue.pop(0)]
+                 for s in range(min(args.batch, len(queue)))}
+        eng.add_requests(admit, gen_len=args.gen_len,
+                         temperature=args.temperature, top_k=args.top_k)
         while eng.live.any():
-            eng.step()
-            gen_tokens += int(eng.live.sum())
+            # device runs a whole block; the host syncs once per block to
+            # retire finished slots and refill them
+            _, block_live = eng.step_many(block)
+            gen_tokens += int(block_live.sum())
             refills = {}
             for s in range(args.batch):
-                if eng.live[s] and len(eng.outputs[s]) >= args.gen_len:
+                if eng.outputs[s] is not None and not eng.live[s]:
                     eng.finish(s)
                     if queue:
                         refills[s] = prompts[queue.pop(0)]
             if refills:
-                eng.add_requests(refills)
+                eng.add_requests(refills, gen_len=args.gen_len,
+                                 temperature=args.temperature,
+                                 top_k=args.top_k)
         dt = time.perf_counter() - t0
         print(f"served {len(eng.done)} requests, {gen_tokens} tokens in "
               f"{dt:.2f}s ({gen_tokens / dt:.1f} tok/s), "
-              f"quant={args.quant} lut={args.lut} kv_bits={args.kv_bits}")
+              f"quant={args.quant} lut={args.lut} kv_bits={args.kv_bits} "
+              f"decode_block={block}")
     return eng.done
 
 

@@ -64,4 +64,51 @@ def prefill_fn(params, batch, cache, cfg: ModelConfig, ctx, *,
 
 
 def decode_fn(params, tokens, cache, pos, cfg: ModelConfig, ctx):
+    """Family-dispatched single decode step.
+
+    Pure in (cache, pos) with a shape/dtype-stable cache pytree, so it
+    can be threaded as a ``lax.scan`` carry — the contract
+    ``build_decode_loop`` relies on for the fused multi-token decode.
+    """
     return get_family(cfg).decode_step(params, tokens, cache, pos, cfg, ctx)
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Families whose cache continues across prefill calls (attention
+    KV); recurrent-state families rebuild from one call's tokens."""
+    return cfg.family == "lm"
+
+
+def invalidate_fn(cache, slot, cfg: ModelConfig):
+    """Zero one slot's serving state (KV rows / recurrent state) so a
+    recycled slot can never observe its previous occupant.
+
+    The shared implementation zeroes batch-axis 1 — the (layers, B, ...)
+    layout every uniform cache uses (lm KV stacks, ssm state stacks).
+    A family whose cache mixes batch axes overrides via its own
+    ``invalidate_slot`` hook (hybrid: grouped ssm states are
+    (G, k, B, ...)).
+    """
+    fam = get_family(cfg)
+    if hasattr(fam, "invalidate_slot"):
+        return fam.invalidate_slot(cache, slot)
+    import jax
+    return jax.tree_util.tree_map(lambda c: c.at[:, slot].set(0), cache)
+
+
+def merge_slot_fn(new_cache, old_cache, slot, cfg: ModelConfig):
+    """``old_cache`` with only ``slot``'s lane taken from ``new_cache``.
+
+    The per-slot prefill isolation primitive: the looped prefill runs
+    full-batch decode calls, which advance EVERY lane's state on
+    recurrent families (even for pad-token inputs) — restoring the
+    other lanes afterwards keeps a slot's prefill exactly equivalent to
+    a solo prefill and leaves mid-generation neighbours untouched.
+    Batch-axis dispatch as in :func:`invalidate_fn`.
+    """
+    fam = get_family(cfg)
+    if hasattr(fam, "merge_slot"):
+        return fam.merge_slot(new_cache, old_cache, slot)
+    import jax
+    return jax.tree_util.tree_map(
+        lambda n, o: o.at[:, slot].set(n[:, slot]), new_cache, old_cache)

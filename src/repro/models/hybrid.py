@@ -26,7 +26,8 @@ from ..nn.ssm import mamba2_state_spec
 from .common import cross_entropy
 from .config import ModelConfig
 
-__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step",
+           "invalidate_slot", "merge_slot"]
 
 
 def _group_structure(cfg: ModelConfig):
@@ -124,6 +125,37 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                     "tail": (jax.vmap(one_ssm)(jnp.arange(tail))
                              if tail else None)},
             "attn": attn}
+
+
+def invalidate_slot(cache, slot):
+    """Zero slot's serving state.  The batch axis is NOT uniform here:
+    grouped SSM states are (G, k, B, ...) — batch at axis 2 — while tail
+    states (layers, B, ...) and the shared-block KV caches
+    (G, B, Hkv, S, Dh) carry it at axis 1."""
+    zero_ax1 = lambda c: jax.tree_util.tree_map(
+        lambda t: t.at[:, slot].set(0), c)
+    zero_ax2 = lambda c: jax.tree_util.tree_map(
+        lambda t: t.at[:, :, slot].set(0), c)
+    return {"ssm": {"groups": zero_ax2(cache["ssm"]["groups"]),
+                    "tail": (zero_ax1(cache["ssm"]["tail"])
+                             if cache["ssm"]["tail"] is not None else None)},
+            "attn": zero_ax1(cache["attn"])}
+
+
+def merge_slot(new_cache, old_cache, slot):
+    """``old_cache`` with only ``slot``'s lane taken from ``new_cache``;
+    batch axes as in :func:`invalidate_slot`."""
+    take_ax1 = lambda n, o: jax.tree_util.tree_map(
+        lambda a, b: b.at[:, slot].set(a[:, slot]), n, o)
+    take_ax2 = lambda n, o: jax.tree_util.tree_map(
+        lambda a, b: b.at[:, :, slot].set(a[:, :, slot]), n, o)
+    return {"ssm": {"groups": take_ax2(new_cache["ssm"]["groups"],
+                                       old_cache["ssm"]["groups"]),
+                    "tail": (take_ax1(new_cache["ssm"]["tail"],
+                                      old_cache["ssm"]["tail"])
+                             if old_cache["ssm"]["tail"] is not None
+                             else None)},
+            "attn": take_ax1(new_cache["attn"], old_cache["attn"])}
 
 
 def prefill(params, tokens, cache, cfg: ModelConfig,

@@ -133,6 +133,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+# slot invalidation / merge: every cache leaf is (layers, B, ...), so
+# the generic axis-1 implementations in models.api apply (no hook here).
 def prefill(params, tokens: jnp.ndarray, cache, cfg: ModelConfig,
             ctx: QuantContext = DEFAULT_CTX, *, pos=None,
             full_logits: bool = False):

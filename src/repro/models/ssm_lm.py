@@ -66,6 +66,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
 
 
+# slot invalidation / merge: state leaves are (layers, B, ...), so the
+# generic axis-1 implementations in models.api apply (no hook here).
 def prefill(params, tokens, cache, cfg: ModelConfig,
             ctx: QuantContext = DEFAULT_CTX, *, pos=None,
             full_logits: bool = False):

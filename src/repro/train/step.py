@@ -24,7 +24,7 @@ from ..nn.context import QuantContext
 from ..optim import OptConfig, adamw_init, adamw_update
 
 __all__ = ["init_state", "build_train_step", "build_serve_step",
-           "build_prefill_step"]
+           "build_prefill_step", "build_decode_loop"]
 
 
 def init_state(rng, cfg: ModelConfig, *, dtype=jnp.float32,
@@ -123,6 +123,78 @@ def build_serve_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
         return decode_fn(params, tokens, cache, pos, cfg, ctx)
 
     return serve_step
+
+
+def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
+                      steps: int) -> Callable:
+    """Device-resident decode: ``steps`` serve steps in ONE ``lax.scan``.
+
+    The per-token serving loop pays a host↔device round trip per
+    generated token (jit dispatch + blocking argmax readback + Python
+    slot bookkeeping).  This builder fuses N steps into a single jitted
+    call: the model step, the sampling draw, the per-slot position
+    advance, and the EOS/length stopping decision all stay on device;
+    the host syncs once per N-token block.
+
+    Returned callable::
+
+        decode_loop(params, cache, tokens, pos, live, stop_pos,
+                    sample_params, key, step0, eos_id)
+            -> (cache, tokens, pos, live, block_tokens, block_live)
+
+    * ``tokens`` (B, 1) i32 — each slot's next input token.
+    * ``pos`` (B,) i32 — current cache position per slot.
+    * ``live`` (B,) bool — slots that are generating; dead slots are
+      frozen (token/pos held, emissions masked) exactly as the per-token
+      engine freezes them, so a block is bit-equivalent to N single
+      steps.
+    * ``stop_pos`` (B,) i32 — a slot's ``live`` drops once its position
+      reaches this bound (prompt_len + gen budget).
+    * ``sample_params`` — {"temperature": (B,) f32, "top_k": (B,) i32};
+      temperature <= 0 is greedy (see repro.kernels.sampling).
+    * ``key``/``step0`` — PRNG base and global step offset; step ``i``
+      draws with ``fold_in(key, step0 + i)``, so any split of a
+      generation into blocks consumes identical randomness
+      (``step_many(2); step_many(3)`` == ``step_many(5)``).  ``key``
+      may be None when every slot is greedy: sampling then skips the
+      top-k sorts and noise generation entirely (greedy consumes no
+      PRNG state, so switching between the two compiled variants never
+      shifts the stream).
+    * ``eos_id`` i32 scalar — sampling it kills the slot (-1 disables).
+
+    ``block_tokens``/``block_live`` (steps, B): the token each slot
+    *emitted* at each step (its input token, matching ``Engine.step``'s
+    append-then-advance order) and whether the slot was live then.
+    """
+    from ..kernels.ops import sample_tokens
+    from ..models.api import decode_fn
+
+    def decode_loop(params, cache, tokens, pos, live, stop_pos,
+                    sample_params, key, step0, eos_id):
+        temperature = sample_params["temperature"]
+        top_k = sample_params["top_k"]
+
+        def body(carry, i):
+            cache, tok, pos, live = carry
+            logits, new_cache = decode_fn(params, tok, cache, pos, cfg, ctx)
+            step_key = (None if key is None
+                        else jax.random.fold_in(key, step0 + i))
+            nxt = sample_tokens(logits[:, -1].astype(jnp.float32),
+                                temperature, top_k, step_key,
+                                backend=ctx.backend)
+            emitted, emit_live = tok[:, 0], live
+            new_pos = jnp.where(live, pos + 1, pos)
+            new_tok = jnp.where(live, nxt, tok[:, 0])[:, None]
+            new_live = live & (nxt != eos_id) & (new_pos < stop_pos)
+            return (new_cache, new_tok, new_pos, new_live), \
+                (emitted, emit_live)
+
+        (cache, tokens, pos, live), (block_tokens, block_live) = \
+            jax.lax.scan(body, (cache, tokens, pos, live),
+                         jnp.arange(steps, dtype=jnp.int32))
+        return cache, tokens, pos, live, block_tokens, block_live
+
+    return decode_loop
 
 
 def build_prefill_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
