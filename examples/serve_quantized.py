@@ -9,9 +9,22 @@ LUT activations on the hot path.  Compares fp32 vs quantized serving:
 throughput and greedy agreement — and the per-token decode baseline
 (``--decode-block 1``) vs the fused loop.
 
+Paged KV cache (``--paged``): K/V rows live in a shared pool of
+``--num-pages`` pages of ``--page-size`` tokens instead of a dense
+``max_len`` allocation per slot, and each request holds exactly the
+pages its token budget needs.  Requests queue via ``submit()`` and are
+admitted the moment freed pages cover their prompt — so with mixed
+prompt lengths the same KV HBM serves ~2x the concurrent requests
+(byte-identical outputs; see tests/test_paged_serving.py).  Dense mode
+still wins for tiny batches (1-2 requests): it has no block-table
+indirection or page-gather overhead and a lone request cannot benefit
+from pooling — page in when traffic is mixed and concurrent, not for a
+single stream.
+
 Run:  PYTHONPATH=src python examples/serve_quantized.py
       (add --arch yi-6b --requests 32 ... to scale up; --temperature /
-       --top-k switch slots from greedy to on-device sampling)
+       --top-k switch slots from greedy to on-device sampling;
+       --paged --page-size 16 --num-pages 64 pools the KV cache)
 """
 
 import sys
@@ -33,5 +46,11 @@ if __name__ == "__main__":
         main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
               "--batch", "4", "--prompt-len", "16", "--gen-len", "16",
               "--quant", "fake", "--lut", "--decode-block", "8"])
+        print("\n== paged KV cache: same KV rows as batch-4 dense, "
+              "8 lanes ==")
+        main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
+              "--batch", "8", "--prompt-len", "16", "--gen-len", "16",
+              "--decode-block", "8", "--paged", "--page-size", "8",
+              "--num-pages", "17"])
     else:
         main(argv)

@@ -127,17 +127,28 @@ def batch_specs(batch, mesh):
 
 
 def cache_specs(cache, mesh):
-    """Cache leaves are stacked (L, B, ...): L replicated, B on data."""
+    """Cache leaves are stacked (L, B, ...): L replicated, B on data.
+
+    Paged-cache leaves (under a ``pages`` subtree, plus ``block_table``
+    leaves) are replicated: the page pool is one shared resource — any
+    slot's table may name any physical page, so there is no batch axis
+    to split it over.  (Sharding the pool over the *model* axis via the
+    Hkv head dim is the natural next step and is deliberately left to
+    the sharding PR this layout exists to enable.)
+    """
     dp = _dp(mesh)
 
-    def rule(leaf):
+    def rule(path, leaf):
         if not hasattr(leaf, "shape") or len(leaf.shape) < 2:
+            return P()
+        keys = tuple(str(getattr(k, "key", k)) for k in path)
+        if "pages" in keys or keys[-1:] == ("block_table",):
             return P()
         return guard_spec(
             P(*([None, dp] + [None] * (len(leaf.shape) - 2))),
             leaf.shape, mesh)
 
-    return jax.tree_util.tree_map(rule, cache)
+    return jax.tree_util.tree_map_with_path(rule, cache)
 
 
 def named(specs, mesh):

@@ -7,6 +7,8 @@ Each kernel ships three artifacts (per the de-specialization discipline):
 * ``ops.py``    — the backend-dispatched public wrapper.
 """
 
-from .ops import attention, lut_activation, qmatmul, sample_tokens
+from .ops import (attention, lut_activation, paged_attention, qmatmul,
+                  sample_tokens)
 
-__all__ = ["attention", "lut_activation", "qmatmul", "sample_tokens"]
+__all__ = ["attention", "lut_activation", "paged_attention", "qmatmul",
+           "sample_tokens"]

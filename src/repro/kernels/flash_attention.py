@@ -33,7 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams
 
-__all__ = ["flash_attention_pallas"]
+__all__ = ["flash_attention_pallas", "paged_attention_pallas"]
 
 _NEG = -1e30
 
@@ -143,3 +143,135 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     )(qp, kp, vp)
 
     return out[:, :, :sq] if pq else out
+
+
+# ===========================================================================
+# Paged attention: block-table-indexed KV pages (decode + chunked prefill)
+# ===========================================================================
+def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, s: int, ps: int, npages: int,
+                  scale: float):
+    """Grid (B, Hkv, NP): online softmax over one sequence's pages.
+
+    The q block holds all ``group * s`` query rows of one (batch, kv
+    head) pair, folded group-major — row ``r`` is query position
+    ``qpos[b] + r % s`` of head group member ``r // s``.  The k/v
+    blocks are one physical page each, DMA'd via the scalar-prefetched
+    block table (``bt_ref``) — the kernel never sees a contiguous
+    cache, which is the entire point: block-table position ``ip``
+    covers logical kv positions ``[ip*ps, (ip+1)*ps)`` wherever the
+    page physically lives.
+    """
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = q_ref.shape[2]
+    qpos0 = qpos_ref[b]
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (rows, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (ps, d)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (rows, ps)
+
+        # absolute positions: query row r sits at qpos0 + r % s; kv
+        # column c of block-table entry ip is logical position ip*ps + c
+        r = jax.lax.broadcasted_iota(jnp.int32, (rows, ps), 0)
+        qp = qpos0 + jax.lax.rem(r, s)
+        kvpos = ip * ps + jax.lax.broadcasted_iota(jnp.int32, (rows, ps), 1)
+        mask = kvpos <= qp                                   # write-before-attend
+        logits = jnp.where(mask, logits, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (ps, d)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # skip pages wholly beyond the last visible position (no MXU work,
+    # no VMEM traffic) — the paged analogue of the causal block skip
+    pl.when(ip * ps <= qpos0 + (s - 1))(_compute)
+
+    @pl.when(ip == npages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softmax_scale", "interpret"))
+def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                           qpos: jnp.ndarray, *,
+                           softmax_scale: float | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Block-table-indexed flash attention over a shared KV page pool.
+
+    Shapes as :func:`repro.kernels.ref.paged_attention_ref` (the
+    numerics oracle): q (B, Hq, S, D), pages (P, Hkv, ps, D), block
+    tables (B, NP) int32, qpos (B,) int32.  S == 1 is the decode step;
+    S > 1 a prefill chunk whose K/V were already scattered into the
+    pages.  GQA is honoured structurally — the page BlockSpec folds the
+    query head onto its KV group and each page is fetched once per
+    (batch, kv head), never broadcast to Hq.
+
+    Block tables ride in SMEM via scalar prefetch
+    (``PrefetchScalarGridSpec``) so the page DMA address for grid step
+    (b, h, ip) — physical page ``block_tables[b, ip]`` — is known
+    before the kernel body runs.
+    """
+    b, hq, s, d = q.shape
+    p_, hkv, ps, _ = k_pages.shape
+    np_ = block_tables.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    rows = group * s
+    scale = (softmax_scale if softmax_scale is not None
+             else float(1.0 / np.sqrt(d)))
+
+    # fold query heads group-major onto their kv head: (B, Hkv, G*S, D)
+    qf = q.reshape(b, hkv, group, s, d).reshape(b, hkv, rows, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, np_),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda bb, h, ip, bt, qp: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bb, h, ip, bt, qp: (bt[bb, ip], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bb, h, ip, bt, qp: (bt[bb, ip], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bb, h, ip, bt, qp: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),   # running max
+            pltpu.VMEM((rows, 1), jnp.float32),   # running denom
+            pltpu.VMEM((rows, d), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, s=s, ps=ps, npages=np_,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qf.shape, q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(qpos, jnp.int32),
+      qf, k_pages, v_pages)
+
+    return out.reshape(b, hkv, group, s, d).reshape(b, hq, s, d)

@@ -18,12 +18,13 @@ import jax.numpy as jnp
 from ..core.registry import get_impl, register_op
 from ..core.tables import TableSpec
 from . import ref as _ref
-from .flash_attention import flash_attention_pallas
+from .flash_attention import flash_attention_pallas, paged_attention_pallas
 from .lut_activation import lut_activation_pallas
 from .qmatmul import qmatmul_pallas
 from .sampling import sample_tokens_fused
 
-__all__ = ["lut_activation", "qmatmul", "attention", "sample_tokens"]
+__all__ = ["lut_activation", "qmatmul", "attention", "paged_attention",
+           "sample_tokens"]
 
 
 def _interpret() -> bool:
@@ -57,6 +58,17 @@ register_op("sample_tokens", "pallas")(sample_tokens_fused)
 
 
 register_op("attention", "ref")(_ref.flash_attention_ref)
+
+
+register_op("paged_attention", "ref")(_ref.paged_attention_ref)
+
+
+@register_op("paged_attention", "pallas")
+def _paged_attention_pallas(q, k_pages, v_pages, block_tables, qpos, *,
+                            softmax_scale=None, **kw):
+    return paged_attention_pallas(q, k_pages, v_pages, block_tables, qpos,
+                                  softmax_scale=softmax_scale,
+                                  interpret=_interpret(), **kw)
 
 
 @register_op("attention", "pallas")
@@ -95,6 +107,23 @@ def attention(q, k, v, *, causal: bool = True, softmax_scale=None,
               backend: Optional[str] = None, **kw) -> jnp.ndarray:
     return get_impl("attention", backend)(q, k, v, causal=causal,
                                           softmax_scale=softmax_scale, **kw)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, qpos, *,
+                    softmax_scale=None, backend: Optional[str] = None,
+                    **kw) -> jnp.ndarray:
+    """Attention over a block-table-indexed KV page pool.
+
+    q (B, Hq, S, D) against k/v pages (P, Hkv, page_size, D) addressed
+    through ``block_tables`` (B, NP), with causal visibility over
+    absolute positions ``qpos[b] + i`` (write-before-attend).  S == 1 is
+    the decode step, S > 1 a chunked-prefill step — one op serves both,
+    which is what lets the serving engine admit mixed prefill/decode
+    batches over one shared pool.
+    """
+    return get_impl("paged_attention", backend)(
+        q, k_pages, v_pages, block_tables, qpos,
+        softmax_scale=softmax_scale, **kw)
 
 
 def sample_tokens(logits, temperature, top_k, key=None, *,

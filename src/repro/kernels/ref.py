@@ -18,7 +18,7 @@ import numpy as np
 from ..core.tables import TableSpec, get_table, table_lookup
 
 __all__ = ["lut_activation_ref", "qmatmul_ref", "flash_attention_ref",
-           "sample_tokens_ref"]
+           "paged_attention_ref", "sample_tokens_ref"]
 
 
 def lut_activation_ref(x: jnp.ndarray, spec: TableSpec) -> jnp.ndarray:
@@ -55,6 +55,60 @@ def qmatmul_ref(a_data: jnp.ndarray, b_data: jnp.ndarray,
         z = lut_activation_ref(y, act_spec)
         y = y * z if act_gated else z
     return y.astype(out_dtype)
+
+
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                        qpos: jnp.ndarray, *,
+                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+    """Block-table-indexed attention oracle (decode and chunked prefill).
+
+    The de-specialized serving layout: K/V live in a shared pool of
+    fixed-size pages and each sequence owns an ordered list of page ids
+    (its *block table*) instead of a contiguous ``max_len`` buffer.
+    Logical kv position ``t`` of batch row ``b`` lives at physical page
+    ``block_tables[b, t // page_size]``, row ``t % page_size``.
+
+    * ``q``: (B, Hq, S, D) — S == 1 is decode, S > 1 a prefill chunk.
+    * ``k_pages``/``v_pages``: (P, Hkv, page_size, D) shared page pool
+      (Hq % Hkv == 0; grouped KV is gathered, never broadcast).
+    * ``block_tables``: (B, NP) int32 page ids; entries beyond a
+      sequence's allocation may point anywhere — they are masked.
+    * ``qpos``: (B,) int32 — tokens already in the cache before this
+      call, i.e. query row ``i`` of batch ``b`` sits at absolute
+      position ``qpos[b] + i``.  Visibility is causal over absolute
+      positions (``kvpos <= qpos[b] + i``), assuming the current chunk's
+      K/V were scattered into the pages *before* the call
+      (write-before-attend, the serving cache contract).
+
+    Returns (B, Hq, S, D).  Masked positions use a finite ``-1e30``
+    (exactly-zero softmax weight), so garbage in unallocated /
+    not-yet-written page rows can never leak — including freshly
+    recycled pages still holding a previous request's KV.
+    """
+    b, hq, s, d = q.shape
+    p_, hkv, page_size, _ = k_pages.shape
+    np_ = block_tables.shape[1]
+    group = hq // hkv
+    assert hq % hkv == 0
+    scale = (softmax_scale if softmax_scale is not None
+             else 1.0 / np.sqrt(d))
+
+    def gather(pages):                       # (P, Hkv, ps, D) -> contiguous
+        g = pages[block_tables]              # (B, NP, Hkv, ps, D)
+        return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, np_ * page_size,
+                                                  pages.shape[-1])
+
+    k = gather(k_pages).astype(jnp.float32)
+    v = gather(v_pages).astype(jnp.float32)
+    qg = q.reshape(b, hkv, group, s, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) * scale
+    kvpos = jnp.arange(np_ * page_size)[None, None, :]
+    visible = kvpos <= (qpos[:, None] + jnp.arange(s)[None, :])[:, :, None]
+    logits = jnp.where(visible[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, v)
+    return out.reshape(b, hq, s, v.shape[-1]).astype(q.dtype)
 
 
 def sample_tokens_ref(logits: jnp.ndarray, temperature: jnp.ndarray,

@@ -1,0 +1,86 @@
+"""Free-list page allocator for the paged KV cache (host-side).
+
+The serving cache's de-specialization step (the hls4ml analogy: replace
+the fixed, shape-specialized per-slot buffer with a generalized pool):
+instead of every slot owning ``max_len`` KV rows, the engine owns a pool
+of ``num_pages`` fixed-size pages and each request holds exactly the
+pages its token budget needs.  Admission is then limited by *used*
+tokens, not worst-case ones — the allocator answers "do the freed pages
+cover this prompt?" in O(1) and hands pages out in O(pages).
+
+The allocator is deliberately host-side and trivial: a LIFO free list.
+Every device-visible consequence of an allocation flows through the
+block tables the engine writes into the cache pytree — the allocator
+itself never touches device memory, so its invariants (no double
+assignment, freed pages immediately reusable, no spurious OOM while
+``free >= need``) are plain-Python checkable (see
+tests/test_paged_serving.py property sweeps).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+__all__ = ["PageAllocator"]
+
+
+class PageAllocator:
+    """LIFO free-list allocator over page ids ``0 .. num_pages-1``.
+
+    A free list cannot fragment: any ``n <= len(free)`` request is
+    satisfiable because pages are position-independent (the block table
+    gives each request its own contiguous *logical* view over arbitrary
+    *physical* page ids).  That is the property the dense layout lacks —
+    a dense slot needs ``max_len`` contiguous rows whether or not the
+    request uses them.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        #: page id -> owner tag (engine: slot index); the double-assign guard
+        self._owner: Dict[int, object] = {}
+
+    # -- queries ------------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` KV rows (ceil division)."""
+        return -(-max(int(tokens), 0) // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, n: int, owner=None) -> List[int]:
+        """Take ``n`` pages off the free list (raises if short).
+
+        ``free_pages >= n`` is the complete admission condition — there
+        is no fragmentation failure mode to account for.
+        """
+        if n > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: need {n}, free {len(self._free)} "
+                f"of {self.num_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert p not in self._owner, f"page {p} double-assigned"
+            self._owner[p] = owner
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        """Return pages to the pool; immediately reusable, O(pages)."""
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(f"page {p} is not allocated")
+            del self._owner[p]
+            self._free.append(p)

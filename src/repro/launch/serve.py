@@ -31,18 +31,32 @@ realized at framework level, as a fused quantized dense pipeline:
 * **Continuous batching** — a finished sequence's slot is refilled by
   the next queued request without draining the batch; freed slots are
   refilled *together* so their prompts share prefill batches too.
+* **Paged KV cache** (``--paged``) — the de-specialization step applied
+  to serving memory: instead of every slot owning a dense ``max_len``
+  KV allocation, K/V rows live in a shared pool of fixed-size pages
+  (``--page-size`` tokens each, ``--num-pages`` total) and each request
+  holds exactly the pages its token budget needs, addressed through a
+  per-slot block table.  Admission is metered by *used* tokens, not
+  worst-case ones: ``submit()`` queues a request, and ``step_many``
+  admits waiting requests the moment a freed lane plus freed pages
+  cover them — ``finish()`` returns pages to the free list in O(pages)
+  (a block-table edit) instead of zeroing ``max_len`` cache rows.
+  Dense mode still wins at tiny batches (no gather/table indirection,
+  one request never fragments); paged mode wins the moment mixed-length
+  traffic leaves dense slots half empty.
 
 Usage (CPU-scale)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --requests 16 --batch 4 --prompt-len 32 --gen-len 16 \
-        --quant int8 --decode-block 8
+        --quant int8 --decode-block 8 --paged --page-size 16
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 import jax
@@ -53,12 +67,14 @@ from ..configs import get_config
 from ..data.pipeline import SyntheticLM
 from ..dist.constrain import use_mesh
 from ..dist.sharding import cache_specs, named, param_specs
-from ..models.api import (get_family, invalidate_fn, merge_slot_fn,
+from ..models.api import (get_family, init_paged_cache_fn, invalidate_fn,
+                          merge_slot_fn, set_block_table,
                           supports_chunked_prefill)
 from ..nn.context import QuantContext
 from ..train.step import (build_decode_loop, build_prefill_step,
                           build_serve_step)
 from .mesh import make_local_mesh
+from .paging import PageAllocator
 from .train import build_ctx
 
 
@@ -98,7 +114,8 @@ class Engine:
 
     def __init__(self, cfg, ctx, params, mesh, *, batch: int, max_len: int,
                  kv_bits=None, prefill_chunk: int = 16, eos_id: int = -1,
-                 seed: int = 0):
+                 seed: int = 0, paged: bool = False, page_size: int = 16,
+                 num_pages: Optional[int] = None):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
         self.prefill_chunk = max(1, prefill_chunk)
@@ -110,8 +127,31 @@ class Engine:
         self.params = params
         cache_dtype = jnp.int8 if kv_bits == 8 else jnp.float32
         margin = self.prefill_chunk if self.chunked else 0
-        self.cache = fam.init_cache(cfg, batch, max_len + margin,
-                                    cache_dtype)
+        self.paged = bool(paged)
+        if self.paged:
+            ps = max(1, int(page_size))
+            if num_pages is None:
+                # dense-equivalent HBM budget by default; the win comes
+                # from passing a smaller pool (or a bigger batch)
+                num_pages = -(-(batch * max_len) // ps)
+            self.allocator = PageAllocator(num_pages, ps)
+            self._trash = num_pages          # reserved garbage page id
+            # table width covers every reachable write position: decode
+            # holds a dead lane at pos <= max_len, chunked prefill's
+            # margin writes reach max_len + margin - 1
+            width = -(-(max_len + max(margin, 1)) // ps)
+            self.block_tables = np.full((batch, width), self._trash,
+                                        np.int32)
+            self._slot_pages: Dict[int, List[int]] = {}
+            #: host table edited but not yet written into the cache —
+            #: finish() defers the device write so a retire sweep costs
+            #: ONE table upload, flushed by the next consumer
+            self._bt_dirty = False
+            self.cache = init_paged_cache_fn(cfg, batch, num_pages, ps,
+                                             width, cache_dtype)
+        else:
+            self.cache = fam.init_cache(cfg, batch, max_len + margin,
+                                        cache_dtype)
         c_sh = named(cache_specs(self.cache, mesh), mesh)
         self.cache = jax.device_put(self.cache, c_sh)
         self.decode = jax.jit(build_serve_step(cfg, ctx))
@@ -149,6 +189,11 @@ class Engine:
         self._gen_step = 0          # global decode-step counter (PRNG)
         self.outputs: List[Optional[list]] = [None] * batch
         self.done: List[list] = []
+        #: FIFO admission queue (see submit/try_admit): requests wait
+        #: here until a lane AND (paged) enough free pages exist
+        self.waiting: deque = deque()
+        #: serving telemetry: peak concurrent requests + admission count
+        self.stats = {"peak_live": 0, "admitted": 0}
 
     # -- request admission --------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray, **kw):
@@ -167,13 +212,26 @@ class Engine:
 
         ``gen_len`` bounds generation per admitted request (``stop_pos =
         prompt_len + gen_len``; None = run to the cache bound).
-        ``temperature``/``top_k`` set the admitted slots' sampling
-        params: a scalar applies to all of them, a ``{slot: value}``
+        ``temperature``/``top_k``/``gen_len`` set the admitted slots'
+        parameters: a scalar applies to all of them, a ``{slot: value}``
         dict sets them per request.
+
+        A prompt longer than ``max_len`` is rejected (ValueError): the
+        cache cannot hold it, and clamp-writing its tail into the last
+        rows would silently serve a truncated request.  In paged mode
+        the request's full token budget (``min(prompt_len + gen_len,
+        max_len)`` rows) is allocated here; direct calls raise
+        MemoryError when the pool is short — queue through
+        :meth:`submit` to wait for pages instead.
         """
         reqs = {int(s): np.asarray(p, np.int32).reshape(-1)
                 for s, p in requests.items()}
         for s, p in reqs.items():
+            if p.shape[0] > self.max_len:
+                raise ValueError(
+                    f"prompt of {p.shape[0]} tokens does not fit the cache "
+                    f"(max_len={self.max_len}); refusing to clamp-write "
+                    f"the tail")
             if p.size == 0:
                 reqs[s] = np.zeros((1,), np.int32)
         if not reqs:
@@ -183,6 +241,38 @@ class Engine:
             if v is None:
                 return default
             return v.get(s, default) if isinstance(v, dict) else v
+
+        def stop_of(s, plen):
+            return self._token_budget(plen, per_slot(gen_len, s, None))
+
+        if self.paged:
+            # one page allocation covers the request's whole budget, so
+            # the block table is static for its lifetime (the fused
+            # decode loop never needs a mid-block allocator callback).
+            # Feasibility is checked for the whole group BEFORE touching
+            # any allocator state, so a failed admission leaves the
+            # engine exactly as it was.
+            needs = {s: self.allocator.pages_for(stop_of(s, p.shape[0]))
+                     for s, p in reqs.items()}
+            recyclable = sum(len(self._slot_pages.get(s, ())) for s in reqs)
+            if sum(needs.values()) > self.allocator.free_pages + recyclable:
+                raise MemoryError(
+                    f"page pool exhausted: admission needs "
+                    f"{sum(needs.values())} pages, free "
+                    f"{self.allocator.free_pages} of "
+                    f"{self.allocator.num_pages} (queue through submit() "
+                    f"to wait for pages)")
+            for s in reqs:
+                # direct slot-addressed admission over a slot that still
+                # holds pages (no finish() in between) recycles them
+                if s in self._slot_pages:
+                    self.allocator.free(self._slot_pages.pop(s))
+            for s in reqs:
+                pages = self.allocator.alloc(needs[s], owner=s)
+                self._slot_pages[s] = pages
+                self.block_tables[s, :] = self._trash
+                self.block_tables[s, :len(pages)] = pages
+            self._flush_block_tables()
 
         # a recycled slot may have idled for whole blocks since
         # finish(): decode advances dead lanes too (the held pad token
@@ -207,11 +297,104 @@ class Engine:
             self._clean[s] = False          # lane now holds the prompt
             self.temperature[s] = per_slot(temperature, s, 0.0)
             self.top_k[s] = per_slot(top_k, s, 0)
-            # clamp to the cache budget: an oversized gen_len must stop
-            # at max_len, not keep a slot live while decode writes clamp
-            # into the last cache row
-            self.stop_pos[s] = (min(p.shape[0] + gen_len, self.max_len)
-                                if gen_len is not None else self.max_len)
+            self.stop_pos[s] = stop_of(s, p.shape[0])
+        self.stats["admitted"] += len(reqs)
+        self.stats["peak_live"] = max(self.stats["peak_live"],
+                                      int(self.live.sum()))
+
+    def _flush_block_tables(self):
+        """Write the host block tables into the cache pytree (one upload
+        covering every table edit since the last flush).
+
+        The ``.copy()`` is the same jit-boundary rule as ``_snap``:
+        ``self.block_tables`` is mutated in place by finish()/admission
+        right after dispatch, and on the CPU backend jax may alias the
+        numpy buffer into the async transfer instead of copying it."""
+        self.cache = set_block_table(self.cache, self.block_tables.copy())
+        self._bt_dirty = False
+
+    # -- admission queue ----------------------------------------------------
+    def submit(self, prompt: np.ndarray, *, gen_len: Optional[int] = None,
+               temperature: float = 0.0, top_k: int = 0) -> int:
+        """Queue a request; returns its position in the FIFO.
+
+        Admission happens inside :meth:`step_many` (and via
+        :meth:`try_admit`): a request leaves the queue the moment a
+        lane is free AND — in paged mode — the free list covers its
+        token budget, i.e. the instant earlier requests' freed pages
+        add up, not when a whole dense slot's ``max_len`` would."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] > self.max_len:
+            raise ValueError(
+                f"prompt of {prompt.shape[0]} tokens does not fit the "
+                f"cache (max_len={self.max_len})")
+        req = {"prompt": prompt, "gen_len": gen_len,
+               "temperature": temperature, "top_k": top_k}
+        if self.paged:
+            need = self.allocator.pages_for(self._budget(req))
+            if need > self.allocator.num_pages:
+                # would head-of-line block the FIFO forever
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self.allocator.num_pages}; raise num_pages or "
+                    f"lower gen_len")
+        self.waiting.append(req)
+        return len(self.waiting) - 1
+
+    def _token_budget(self, plen: int, gen_len: Optional[int]) -> int:
+        """A request's cache-row budget — its final ``stop_pos``.
+
+        The single source of truth for both page planning (try_admit /
+        submit) and allocation+stopping (add_requests): clamped to the
+        cache bound (an oversized gen_len must stop at max_len, not
+        keep a slot live while decode writes clamp into the last row),
+        with an empty prompt counting as its 1-token pad/BOS stand-in.
+        """
+        plen = max(1, int(plen))
+        return min(plen + gen_len, self.max_len) if gen_len is not None \
+            else self.max_len
+
+    def _budget(self, req) -> int:
+        return self._token_budget(len(req["prompt"]), req["gen_len"])
+
+    def retire_finished(self) -> int:
+        """finish() every slot whose generation ended (frees its lane —
+        and, paged, its pages) so try_admit can reuse both."""
+        n = 0
+        for s in range(self.batch):
+            if self.outputs[s] is not None and not self.live[s]:
+                self.finish(s)
+                n += 1
+        return n
+
+    def try_admit(self) -> int:
+        """Admit queued requests into free lanes, FIFO, while pages last.
+
+        Strict FIFO (no head-of-line skipping): a big request at the
+        head waits for pages rather than being starved by smaller ones
+        behind it — admission order is therefore deterministic, which
+        the cross-backend conformance suite relies on.  All admissions
+        of one call share a single batched prefill."""
+        free = [s for s in range(self.batch)
+                if self.outputs[s] is None and not self.live[s]]
+        admit, kw = {}, {"gen_len": {}, "temperature": {}, "top_k": {}}
+        planned = 0
+        while self.waiting and free:
+            req = self.waiting[0]
+            if self.paged:
+                need = self.allocator.pages_for(self._budget(req))
+                if not self.allocator.can_alloc(planned + need):
+                    break
+                planned += need
+            s = free.pop(0)
+            self.waiting.popleft()
+            admit[s] = req["prompt"]
+            kw["gen_len"][s] = req["gen_len"]
+            kw["temperature"][s] = req["temperature"]
+            kw["top_k"][s] = req["top_k"]
+        if admit:
+            self.add_requests(admit, **kw)
+        return len(admit)
 
     def _prefill_chunked(self, reqs) -> Dict[int, int]:
         chunk = self.prefill_chunk
@@ -280,6 +463,8 @@ class Engine:
         ``i`` of the block draws with the global step counter the i-th
         single step would use).
         """
+        if self.paged and self._bt_dirty:
+            self._flush_block_tables()
         loop = self._loops.get(n)
         if loop is None:
             # cache donated for the same reason as _invalidate: the
@@ -311,6 +496,12 @@ class Engine:
             if self.outputs[s] is not None:
                 self.outputs[s].extend(
                     int(t) for t in block[block_live[:, s], s])
+        # continuous batching: with requests waiting, retire finished
+        # slots NOW and admit whatever the freed lanes/pages cover —
+        # admission latency is one block, not one drained batch
+        if self.waiting:
+            self.retire_finished()
+            self.try_admit()
         return block, block_live
 
     def step(self):
@@ -328,8 +519,19 @@ class Engine:
         # invalidate the retired request's serving state (KV rows /
         # recurrent state) so a recycled slot can never observe a
         # previous occupant — family-aware (see models.api.invalidate_fn),
-        # in-place via donation.
+        # in-place via donation.  Paged KV needs no zeroing at all: the
+        # block-table reset below makes the pages unreachable, so only
+        # recurrent-state lanes (ssm/hybrid) are touched.
         self.cache = self._invalidate(self.cache, jnp.int32(slot))
+        if self.paged:
+            # O(pages) retirement: free-list append + host table edit;
+            # the pages' contents are left as-is (never observable — a
+            # new owner's visibility mask hides them until overwritten)
+            # and the device table write is deferred to the next
+            # consumer, so a whole retire sweep costs one upload
+            self.allocator.free(self._slot_pages.pop(slot, []))
+            self.block_tables[slot, :] = self._trash
+            self._bt_dirty = True
         self._clean[slot] = True
 
 
@@ -365,6 +567,15 @@ def main(argv=None):
                     help="tokens per batched prefill step")
     ap.add_argument("--decode-block", type=int, default=8,
                     help="decode steps fused per jit call (1 = per-token)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache: shared page pool + block tables; "
+                         "admission metered by used tokens (dense mode "
+                         "still wins at tiny batches — no indirection)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: batch*max_len/page_size, "
+                         "the dense-equivalent HBM budget)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -389,41 +600,37 @@ def main(argv=None):
         max_len = args.prompt_len + args.gen_len + 1
         eng = Engine(cfg, ctx, params, mesh, batch=args.batch,
                      max_len=max_len, kv_bits=args.kv_bits,
-                     prefill_chunk=args.prefill_chunk, seed=args.seed)
+                     prefill_chunk=args.prefill_chunk, seed=args.seed,
+                     paged=args.paged, page_size=args.page_size,
+                     num_pages=args.num_pages)
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
                    for i in range(args.requests)]
-        queue = list(range(args.requests))
         block = max(1, args.decode_block)
         t0 = time.perf_counter()
         gen_tokens = 0
-        # continuous batching: fill all slots at once (their prompts share
-        # prefill batches), refill freed slots together as they finish
-        admit = {s: prompts[queue.pop(0)]
-                 for s in range(min(args.batch, len(queue)))}
-        eng.add_requests(admit, gen_len=args.gen_len,
-                         temperature=args.temperature, top_k=args.top_k)
-        while eng.live.any():
-            # device runs a whole block; the host syncs once per block to
-            # retire finished slots and refill them
+        # continuous batching through the admission queue: every request
+        # is submitted up front; step_many retires finished slots and
+        # admits whatever the freed lanes (and, paged, freed pages)
+        # cover, one block's latency after they free up
+        for p in prompts:
+            eng.submit(p, gen_len=args.gen_len,
+                       temperature=args.temperature, top_k=args.top_k)
+        eng.try_admit()
+        while eng.live.any() or eng.waiting:
             _, block_live = eng.step_many(block)
             gen_tokens += int(block_live.sum())
-            refills = {}
-            for s in range(args.batch):
-                if eng.outputs[s] is not None and not eng.live[s]:
-                    eng.finish(s)
-                    if queue:
-                        refills[s] = prompts[queue.pop(0)]
-            if refills:
-                eng.add_requests(refills, gen_len=args.gen_len,
-                                 temperature=args.temperature,
-                                 top_k=args.top_k)
+        eng.retire_finished()
         dt = time.perf_counter() - t0
+        paged_note = (f" paged(ps={eng.allocator.page_size},"
+                      f"pages={eng.allocator.num_pages})"
+                      if args.paged else " dense")
         print(f"served {len(eng.done)} requests, {gen_tokens} tokens in "
               f"{dt:.2f}s ({gen_tokens / dt:.1f} tok/s), "
               f"quant={args.quant} lut={args.lut} kv_bits={args.kv_bits} "
-              f"decode_block={block}")
+              f"decode_block={block}{paged_note} "
+              f"peak_live={eng.stats['peak_live']}")
     return eng.done
 
 

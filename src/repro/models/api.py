@@ -19,7 +19,8 @@ from types import ModuleType
 from . import encdec, hybrid, lm, ssm_lm, vlm
 from .config import ModelConfig
 
-__all__ = ["get_family", "FAMILIES"]
+__all__ = ["get_family", "FAMILIES", "init_paged_cache_fn",
+           "set_block_table"]
 
 FAMILIES = {
     "lm": lm,
@@ -79,6 +80,50 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     return cfg.family == "lm"
 
 
+def init_paged_cache_fn(cfg: ModelConfig, batch: int, num_pages: int,
+                        page_size: int, table_width: int, dtype):
+    """Family-dispatched paged serving cache (see each family's
+    ``init_paged_cache``): KV leaves become shared page pools +
+    layer-tiled block tables; recurrent state stays dense."""
+    fam = get_family(cfg)
+    if not hasattr(fam, "init_paged_cache"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no paged serving cache; serve it "
+            f"with a dense engine (paged=False)")
+    return fam.init_paged_cache(cfg, batch, num_pages, page_size,
+                                table_width, dtype)
+
+
+def _is_paged(cache) -> bool:
+    """A serving cache is paged iff any subtree carries a block table."""
+    import jax
+    return any(
+        getattr(p[-1], "key", None) == "block_table"
+        for p, _ in jax.tree_util.tree_flatten_with_path(cache)[0])
+
+
+def set_block_table(cache, bt):
+    """Write the engine's (B, NP) block table into every paged subtree.
+
+    Page *assignment* is a host-side decision (the free-list allocator);
+    this is the one channel by which it reaches the device: each
+    ``block_table`` leaf (layer- or group-tiled to (L, B, NP)) is
+    replaced by a broadcast of the new table.  Pages themselves are
+    never touched — retiring a slot is just this table edit plus a
+    host-side free-list append, O(pages) instead of O(max_len) zeroing.
+    """
+    import jax
+    import jax.numpy as jnp
+    bt = jnp.asarray(bt, jnp.int32)
+
+    def repl(path, leaf):
+        if getattr(path[-1], "key", None) == "block_table":
+            return jnp.broadcast_to(bt, leaf.shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(repl, cache)
+
+
 def invalidate_fn(cache, slot, cfg: ModelConfig):
     """Zero one slot's serving state (KV rows / recurrent state) so a
     recycled slot can never observe its previous occupant.
@@ -87,11 +132,15 @@ def invalidate_fn(cache, slot, cfg: ModelConfig):
     layout every uniform cache uses (lm KV stacks, ssm state stacks).
     A family whose cache mixes batch axes overrides via its own
     ``invalidate_slot`` hook (hybrid: grouped ssm states are
-    (G, k, B, ...)).
+    (G, k, B, ...)).  A fully paged cache (lm) is returned unchanged:
+    its KV pages carry no batch axis, and the retired slot's pages are
+    unreachable once the engine resets its block table row.
     """
     fam = get_family(cfg)
     if hasattr(fam, "invalidate_slot"):
         return fam.invalidate_slot(cache, slot)
+    if _is_paged(cache):
+        return cache
     import jax
     return jax.tree_util.tree_map(lambda c: c.at[:, slot].set(0), cache)
 

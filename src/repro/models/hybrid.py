@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..nn.attention import gqa_cache_spec
+from ..nn.attention import gqa_cache_spec, gqa_paged_cache_spec
 from ..nn.blocks import (dense_block_apply, dense_block_init,
                          mamba_block_apply, mamba_block_init, norm_apply,
                          norm_init, scan_apply, stack_init)
@@ -26,8 +26,8 @@ from ..nn.ssm import mamba2_state_spec
 from .common import cross_entropy
 from .config import ModelConfig
 
-__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step",
-           "invalidate_slot", "merge_slot"]
+__all__ = ["init", "forward", "loss", "init_cache", "init_paged_cache",
+           "prefill", "decode_step", "invalidate_slot", "merge_slot"]
 
 
 def _group_structure(cfg: ModelConfig):
@@ -127,35 +127,65 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
             "attn": attn}
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, table_width: int, dtype=jnp.bfloat16):
+    """Only the KV axis pages: the shared-block attention caches become
+    per-group page pools + block tables, while the O(1) recurrent SSM
+    states keep their dense (…, B, …) lanes — there is nothing
+    length-proportional in them to page."""
+    n_groups, k, tail = _group_structure(cfg)
+    one_ssm = lambda _: mamba2_state_spec(cfg.ssm, batch, jnp.float32)
+    groups = jax.vmap(lambda _: jax.vmap(one_ssm)(jnp.arange(k)))(
+        jnp.arange(n_groups))
+    attn = jax.vmap(lambda _: gqa_paged_cache_spec(
+        cfg.attn_dims(), batch, num_pages, page_size, table_width,
+        dtype))(jnp.arange(n_groups))
+    return {"ssm": {"groups": groups,
+                    "tail": (jax.vmap(one_ssm)(jnp.arange(tail))
+                             if tail else None)},
+            "attn": attn}
+
+
 def invalidate_slot(cache, slot):
     """Zero slot's serving state.  The batch axis is NOT uniform here:
     grouped SSM states are (G, k, B, ...) — batch at axis 2 — while tail
     states (layers, B, ...) and the shared-block KV caches
-    (G, B, Hkv, S, Dh) carry it at axis 1."""
+    (G, B, Hkv, S, Dh) carry it at axis 1.  Paged attention caches are
+    left untouched: their pages carry no batch axis, and the retired
+    slot's pages become unreachable when the engine resets its block
+    table (only the recurrent lanes need zeroing)."""
     zero_ax1 = lambda c: jax.tree_util.tree_map(
         lambda t: t.at[:, slot].set(0), c)
     zero_ax2 = lambda c: jax.tree_util.tree_map(
         lambda t: t.at[:, :, slot].set(0), c)
+    attn = cache["attn"]
     return {"ssm": {"groups": zero_ax2(cache["ssm"]["groups"]),
                     "tail": (zero_ax1(cache["ssm"]["tail"])
                              if cache["ssm"]["tail"] is not None else None)},
-            "attn": zero_ax1(cache["attn"])}
+            "attn": attn if "pages" in attn else zero_ax1(attn)}
 
 
 def merge_slot(new_cache, old_cache, slot):
     """``old_cache`` with only ``slot``'s lane taken from ``new_cache``;
-    batch axes as in :func:`invalidate_slot`."""
+    batch axes as in :func:`invalidate_slot`.  Paged attention caches
+    keep the NEW pages wholesale: each lane's writes went through its
+    own block table, so a neighbour's in-flight garbage rows sit at its
+    current position and are overwritten by its next real write before
+    they can be attended (the write-before-attend invariant) — only the
+    recurrent lanes need the restore."""
     take_ax1 = lambda n, o: jax.tree_util.tree_map(
         lambda a, b: b.at[:, slot].set(a[:, slot]), n, o)
     take_ax2 = lambda n, o: jax.tree_util.tree_map(
         lambda a, b: b.at[:, :, slot].set(a[:, :, slot]), n, o)
+    attn = (new_cache["attn"] if "pages" in new_cache["attn"]
+            else take_ax1(new_cache["attn"], old_cache["attn"]))
     return {"ssm": {"groups": take_ax2(new_cache["ssm"]["groups"],
                                        old_cache["ssm"]["groups"]),
                     "tail": (take_ax1(new_cache["ssm"]["tail"],
                                       old_cache["ssm"]["tail"])
                              if old_cache["ssm"]["tail"] is not None
                              else None)},
-            "attn": take_ax1(new_cache["attn"], old_cache["attn"])}
+            "attn": attn}
 
 
 def prefill(params, tokens, cache, cfg: ModelConfig,

@@ -15,7 +15,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..nn.attention import gqa_cache_spec, mla_cache_spec
+from ..nn.attention import (gqa_cache_spec, gqa_paged_cache_spec,
+                            mla_cache_spec, mla_paged_cache_spec)
 from ..nn.blocks import (dense_block_apply, dense_block_init, moe_block_apply,
                          moe_block_init, norm_apply, norm_init, scan_apply,
                          stack_init)
@@ -25,7 +26,8 @@ from ..nn.linear import linear, linear_init
 from .common import cross_entropy
 from .config import ModelConfig
 
-__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+__all__ = ["init", "forward", "loss", "init_cache", "init_paged_cache",
+           "prefill", "decode_step"]
 
 
 def _split_layers(cfg: ModelConfig) -> Tuple[int, int]:
@@ -133,8 +135,39 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
-# slot invalidation / merge: every cache leaf is (layers, B, ...), so
-# the generic axis-1 implementations in models.api apply (no hook here).
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, table_width: int, dtype=jnp.bfloat16):
+    """Paged serving cache: per-layer KV pages + per-layer block tables.
+
+    The page *pool* is per layer ((L, P+1, ...) leaves — every layer
+    needs its own KV rows) but the page *assignment* is shared: one
+    host-side allocation covers all layers, and the engine broadcasts
+    the (B, NP) block table across the layer axis
+    (:func:`repro.models.api.set_block_table`), so logical token ``t``
+    of a slot lives at the same physical page index in every layer.
+    """
+    n_dense, n_moe = _split_layers(cfg)
+
+    def one(_):
+        if cfg.attn_kind == "mla":
+            return mla_paged_cache_spec(cfg.mla, batch, num_pages,
+                                        page_size, table_width, dtype)
+        return gqa_paged_cache_spec(cfg.attn_dims(), batch, num_pages,
+                                    page_size, table_width, dtype)
+
+    cache = {}
+    if n_dense:
+        cache["dense"] = jax.vmap(one)(jnp.arange(n_dense))
+    if n_moe:
+        cache["moe"] = jax.vmap(one)(jnp.arange(n_moe))
+    return cache
+
+
+# slot invalidation / merge: dense cache leaves are (layers, B, ...), so
+# the generic axis-1 implementations in models.api apply; the paged
+# cache has NO batch-indexed KV state to zero (a retired slot's pages
+# become unreachable the moment the engine resets its block table), so
+# the generic paged no-op in models.api applies too (no hook here).
 def prefill(params, tokens: jnp.ndarray, cache, cfg: ModelConfig,
             ctx: QuantContext = DEFAULT_CTX, *, pos=None,
             full_logits: bool = False):

@@ -17,7 +17,8 @@ from ..nn.ssm import mamba2_state_spec
 from .common import cross_entropy
 from .config import ModelConfig
 
-__all__ = ["init", "forward", "loss", "init_cache", "prefill", "decode_step"]
+__all__ = ["init", "forward", "loss", "init_cache", "init_paged_cache",
+           "prefill", "decode_step"]
 
 
 def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
@@ -64,6 +65,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         return mamba2_state_spec(cfg.ssm, batch, jnp.float32)
 
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, table_width: int, dtype=jnp.bfloat16):
+    """There is no KV axis to page: the recurrent state is O(1) in
+    context length, so the paged engine serves this family with the
+    dense state cache unchanged (the page pool only meters admission)."""
+    del num_pages, page_size, table_width
+    return init_cache(cfg, batch, 0, dtype)
 
 
 # slot invalidation / merge: state leaves are (layers, B, ...), so the

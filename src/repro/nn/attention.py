@@ -64,8 +64,8 @@ def _constrain_heads(t: jnp.ndarray, role: str = "q") -> jnp.ndarray:
     return constrain(t, "dp", None, None, "tp")
 
 __all__ = ["AttnDims", "gqa_init", "gqa_apply", "gqa_cache_spec",
-           "gqa_project_kv", "MLADims", "mla_init", "mla_apply",
-           "mla_cache_spec"]
+           "gqa_paged_cache_spec", "gqa_project_kv", "MLADims", "mla_init",
+           "mla_apply", "mla_cache_spec", "mla_paged_cache_spec"]
 
 
 def gqa_project_kv(p, kv_src: jnp.ndarray, d: "AttnDims",
@@ -124,6 +124,75 @@ def gqa_cache_spec(d: AttnDims, batch: int, max_len: int, dtype=jnp.bfloat16):
         cache["k_scale"] = jnp.zeros(sshape, jnp.bfloat16)
         cache["v_scale"] = jnp.zeros(sshape, jnp.bfloat16)
     return cache
+
+
+def gqa_paged_cache_spec(d: AttnDims, batch: int, num_pages: int,
+                         page_size: int, table_width: int,
+                         dtype=jnp.bfloat16):
+    """Paged KV cache: a shared pool of fixed-size pages + block tables.
+
+    The de-specialized layout (vs :func:`gqa_cache_spec`'s per-slot
+    ``max_len`` buffers): K/V rows live in ``num_pages`` pages of
+    ``page_size`` tokens each, shared by every slot, and
+    ``block_table[b, j]`` names the physical page holding slot ``b``'s
+    logical tokens ``[j*page_size, (j+1)*page_size)``.  One extra
+    *trash page* (physical index ``num_pages``) absorbs writes from
+    lanes with no allocation — dead lanes' held-token decode writes and
+    chunked-prefill margin writes land there instead of needing
+    per-slot margin rows.  Unset table entries point at it.
+
+    ``dtype=jnp.int8`` pages the quantized cache: int8 payload pages
+    plus per-(token, head) bf16 scale pages, exactly mirroring the
+    dense int8 layout so paged and dense serving quantize identically.
+    """
+    shape = (num_pages + 1, d.n_kv_heads, page_size, d.head_dim)
+    pages = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if dtype == jnp.int8:
+        sshape = (num_pages + 1, d.n_kv_heads, page_size, 1)
+        pages["k_scale"] = jnp.zeros(sshape, jnp.bfloat16)
+        pages["v_scale"] = jnp.zeros(sshape, jnp.bfloat16)
+    return {"pages": pages,
+            "block_table": jnp.full((batch, table_width), num_pages,
+                                    jnp.int32)}
+
+
+def _page_coords(bt: jnp.ndarray, pos: jnp.ndarray, s: int, page_size: int):
+    """(physical page, in-page row) for tokens written at pos..pos+s-1.
+
+    Positions beyond the table clamp to its last entry — engine layouts
+    size the table to cover every reachable position, so the clamp only
+    guards compiler-visible out-of-range lanes (it can never alias a
+    live page: clamped entries are trash-page defaults).
+    """
+    tpos = pos[:, None] + jnp.arange(s)[None, :]            # (B, s)
+    idx = jnp.clip(tpos // page_size, 0, bt.shape[1] - 1)
+    return jnp.take_along_axis(bt, idx, axis=1), tpos % page_size
+
+
+def _paged_write(pages: jnp.ndarray, page: jnp.ndarray, row: jnp.ndarray,
+                 u: jnp.ndarray) -> jnp.ndarray:
+    """Scatter new tokens' K/V into their pages.
+
+    ``pages`` (P, Hkv, ps, X); ``page``/``row`` (B, s); ``u``
+    (B, Hkv, s, X).  Distinct lanes never share a (page, row) pair —
+    the allocator hands each slot disjoint pages — except on the trash
+    page, whose contents are never observed.
+    """
+    return pages.at[page, :, row].set(
+        u.transpose(0, 2, 1, 3).astype(pages.dtype))
+
+
+def _paged_gather(pages: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a slot-contiguous view (B, Hkv, NP*ps, X) of the pages.
+
+    The jnp lowering (CPU/ref path): physically gathers the block
+    table's pages in logical order.  The Pallas kernel
+    (:func:`repro.kernels.flash_attention.paged_attention_pallas`)
+    instead DMAs pages on demand and never materializes this view.
+    """
+    g = pages[bt]                                  # (B, NP, Hkv, ps, X)
+    b, np_, h, ps, x = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, np_ * ps, x)
 
 
 def _quantize_kv(u: jnp.ndarray):
@@ -279,7 +348,46 @@ def gqa_apply(p, x: jnp.ndarray, d: AttnDims, ctx: QuantContext = DEFAULT_CTX,
     v = _constrain_heads(v.transpose(0, 2, 1, 3), "kv")
 
     new_cache = None
-    if cache is not None:
+    if cache is not None and "pages" in cache:
+        # paged decode / chunked prefill: scatter K/V into the slot's
+        # pages (write-before-attend), then attend through the block
+        # table.  No per-slot margin rows exist — out-of-allocation
+        # writes land on the trash page via the table defaults.
+        pages, bt = cache["pages"], cache["block_table"]
+        zeros = jnp.zeros((b,), jnp.int32) if cache_pos is None else cache_pos
+        page, row = _page_coords(bt, zeros, s, pages["k"].shape[2])
+        cd = ctx.compute_dtype
+        if "k_scale" in pages:          # int8 pages + scale pages
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            pages = {"k": _paged_write(pages["k"], page, row, kq),
+                     "v": _paged_write(pages["v"], page, row, vq),
+                     "k_scale": _paged_write(pages["k_scale"], page, row, ks),
+                     "v_scale": _paged_write(pages["v_scale"], page, row, vs)}
+            ck = (_paged_gather(pages["k"], bt).astype(cd)
+                  * _paged_gather(pages["k_scale"], bt).astype(cd))
+            cv = (_paged_gather(pages["v"], bt).astype(cd)
+                  * _paged_gather(pages["v_scale"], bt).astype(cd))
+            mask = _cache_mask(zeros, s, ck.shape[2], d.causal)
+            y = _einsum_attention(q, ck, cv, causal=False, ctx=ctx, mask=mask)
+        else:
+            pages = {"k": _paged_write(pages["k"], page, row, k),
+                     "v": _paged_write(pages["v"], page, row, v)}
+            if (ctx.backend == "pallas" and jax.default_backend() == "tpu"
+                    and d.causal):
+                # TPU path: block-table-indexed flash kernel — pages are
+                # DMA'd on demand, the contiguous view never exists
+                from ..kernels.ops import paged_attention
+                y = paged_attention(q, pages["k"], pages["v"], bt, zeros,
+                                    backend=ctx.backend)
+            else:
+                ck = _paged_gather(pages["k"], bt)
+                cv = _paged_gather(pages["v"], bt)
+                mask = _cache_mask(zeros, s, ck.shape[2], d.causal)
+                y = _einsum_attention(q, ck, cv, causal=False, ctx=ctx,
+                                      mask=mask)
+        new_cache = {"pages": pages, "block_table": bt}
+    elif cache is not None:
         # decode (s == 1) or chunked prefill: write K/V at cache_pos
         zeros = jnp.zeros((b,), jnp.int32) if cache_pos is None else cache_pos
         def write(c, u):
@@ -378,6 +486,26 @@ def mla_cache_spec(d: MLADims, batch: int, max_len: int, dtype=jnp.bfloat16):
             "krope": jnp.zeros((batch, max_len, d.qk_rope_dim), dtype)}
 
 
+def mla_paged_cache_spec(d: MLADims, batch: int, num_pages: int,
+                         page_size: int, table_width: int,
+                         dtype=jnp.bfloat16):
+    """Paged MLA latent cache: (P+1, page_size, kv_lora / rope) pages.
+
+    Same pool/table/trash-page scheme as :func:`gqa_paged_cache_spec`;
+    the latent has no head axis, so a page row is one token's compressed
+    KV.  int8 falls back to bf16 exactly as the dense spec does (the
+    latent *is* the compression)."""
+    if dtype == jnp.int8:
+        dtype = jnp.bfloat16
+    return {"pages": {
+                "ckv": jnp.zeros((num_pages + 1, page_size,
+                                  d.kv_lora_rank), dtype),
+                "krope": jnp.zeros((num_pages + 1, page_size,
+                                    d.qk_rope_dim), dtype)},
+            "block_table": jnp.full((batch, table_width), num_pages,
+                                    jnp.int32)}
+
+
 def _mla_qkv(p, x, d: MLADims, ctx, positions, path):
     b, s, _ = x.shape
     h = d.n_heads
@@ -448,11 +576,24 @@ def mla_apply(p, x: jnp.ndarray, d: MLADims, ctx: QuantContext = DEFAULT_CTX,
 
     # ---- decode: absorbed form against the latent cache -------------------
     zeros = jnp.zeros((b,), jnp.int32) if cache_pos is None else cache_pos
-    cckv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-        c, u.astype(c.dtype), (i, 0)))(cache["ckv"], ckv, zeros)
-    ckrope = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
-        c, u.astype(c.dtype), (i, 0)))(cache["krope"], krope, zeros)
-    new_cache = {"ckv": cckv, "krope": ckrope}
+    if "pages" in cache:
+        # paged latent: scatter this chunk's rows into the slot's pages,
+        # score against the gathered logical view (write-before-attend)
+        pages, bt = cache["pages"], cache["block_table"]
+        page, row = _page_coords(bt, zeros, s, pages["ckv"].shape[1])
+        pages = {"ckv": pages["ckv"].at[page, row].set(
+                     ckv.astype(pages["ckv"].dtype)),
+                 "krope": pages["krope"].at[page, row].set(
+                     krope.astype(pages["krope"].dtype))}
+        cckv = pages["ckv"][bt].reshape(b, -1, d.kv_lora_rank)
+        ckrope = pages["krope"][bt].reshape(b, -1, d.qk_rope_dim)
+        new_cache = {"pages": pages, "block_table": bt}
+    else:
+        cckv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (i, 0)))(cache["ckv"], ckv, zeros)
+        ckrope = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (i, 0)))(cache["krope"], krope, zeros)
+        new_cache = {"ckv": cckv, "krope": ckrope}
 
     # absorb W_uk into the query: q_abs (B, s, H, lora)
     cd = ctx.compute_dtype

@@ -143,7 +143,13 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
             -> (cache, tokens, pos, live, block_tokens, block_live)
 
     * ``tokens`` (B, 1) i32 — each slot's next input token.
-    * ``pos`` (B,) i32 — current cache position per slot.
+    * ``pos`` (B,) i32 — current cache position per slot.  With a
+      *paged* cache the carry additionally threads the block-table
+      leaves unchanged: page *assignment* is a host decision made at
+      admission (the engine allocates a request's whole token budget up
+      front), so the device loop never calls back into the allocator —
+      each step's KV write resolves ``pos`` through the table it was
+      launched with, and dead lanes resolve to the trash page.
     * ``live`` (B,) bool — slots that are generating; dead slots are
       frozen (token/pos held, emissions masked) exactly as the per-token
       engine freezes them, so a block is bit-equivalent to N single
@@ -204,6 +210,12 @@ def build_prefill_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:
     each slot's current cache position and the returned logits cover
     every chunk position (so ragged prompt ends can be read per slot).
     Pass ``pos=None`` for a whole-prompt prefill from position 0.
+
+    Cache-layout agnostic: with a paged cache the chunk's K/V scatter
+    through each slot's block table instead of a dense row range, and
+    writes past a slot's allocation (the dense layout's margin rows)
+    land on the shared trash page.  Same step function, same jit — the
+    layout is carried entirely by the cache pytree.
     """
     from ..models.api import prefill_fn
 

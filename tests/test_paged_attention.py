@@ -1,0 +1,175 @@
+"""Interpret-mode paged-attention kernel tests vs the ``ref.py`` oracle.
+
+``paged_attention_pallas`` reads K/V through a scalar-prefetched block
+table (one physical page per grid step) and must match
+``paged_attention_ref`` — which gathers the pages into a contiguous view
+— across the cases the table indirection actually has to handle:
+
+* ragged block tables (every batch row at a different fill level);
+* a last page that is only partially filled (qpos mid-page);
+* GQA group folding (Hq > Hkv share pages, never broadcast);
+* a prompt ending exactly at a page boundary (the next write starts a
+  fresh page — the off-by-one magnet for ``pos // page_size``);
+* chunked-prefill queries (S > 1) next to single-token decode (S == 1);
+* garbage in unallocated / not-yet-written rows never leaking (recycled
+  pages keep their previous occupant's KV until overwritten).
+
+The oracle itself is cross-checked against the dense attention path on
+an identity block table, so the two implementations cannot share a
+common indexing mistake.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import paged_attention_pallas
+from repro.kernels.ref import paged_attention_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _case(b, hq, hkv, s, d, ps, num_pages, table_width, seed=0):
+    rs = np.random.RandomState(seed)
+    q = jnp.asarray(rs.randn(b, hq, s, d), jnp.float32)
+    kp = jnp.asarray(rs.randn(num_pages, hkv, ps, d), jnp.float32)
+    vp = jnp.asarray(rs.randn(num_pages, hkv, ps, d), jnp.float32)
+    # distinct physical pages per row, deliberately shuffled so logical
+    # order != physical order (the whole point of the table)
+    bt = np.stack([rs.permutation(num_pages)[:table_width]
+                   for _ in range(b)])
+    return q, kp, vp, jnp.asarray(bt, jnp.int32)
+
+
+def _check(q, kp, vp, bt, qpos):
+    qpos = jnp.asarray(qpos, jnp.int32)
+    got = paged_attention_pallas(q, kp, vp, bt, qpos, interpret=True)
+    want = paged_attention_ref(q, kp, vp, bt, qpos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ===========================================================================
+class TestOracleAgainstDense:
+    """paged_attention_ref == plain masked attention on an identity table.
+
+    Anchors the oracle: if pages are laid out contiguously (block table
+    = identity), paged attention IS dense cache attention with the
+    ``kvpos <= qpos`` visibility mask."""
+
+    @pytest.mark.parametrize("s,qpos", [(1, 11), (4, 7), (3, 0)])
+    def test_identity_table_matches_dense(self, s, qpos):
+        b, hq, hkv, d, ps, np_ = 2, 4, 2, 8, 4, 6
+        rs = np.random.RandomState(3)
+        q = jnp.asarray(rs.randn(b, hq, s, d), jnp.float32)
+        kp = jnp.asarray(rs.randn(np_, hkv, ps, d), jnp.float32)
+        vp = jnp.asarray(rs.randn(np_, hkv, ps, d), jnp.float32)
+        bt = jnp.broadcast_to(jnp.arange(np_, dtype=jnp.int32), (b, np_))
+        qpos_v = jnp.full((b,), qpos, jnp.int32)
+        got = paged_attention_ref(q, kp, vp, bt, qpos_v)
+
+        # dense reference: contiguous K/V + explicit visibility mask
+        k = kp.transpose(1, 0, 2, 3).reshape(hkv, np_ * ps, d)[None]
+        v = vp.transpose(1, 0, 2, 3).reshape(hkv, np_ * ps, d)[None]
+        k = jnp.broadcast_to(k, (b, hkv, np_ * ps, d))
+        v = jnp.broadcast_to(v, (b, hkv, np_ * ps, d))
+        g = hq // hkv
+        qg = q.reshape(b, hkv, g, s, d)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) * (d ** -0.5)
+        vis = (jnp.arange(np_ * ps)[None, None, :]
+               <= (qpos_v[:, None] + jnp.arange(s)[None, :])[:, :, None])
+        logits = jnp.where(vis[:, None, None], logits, -1e30)
+        want = jnp.einsum("bhgqk,bhkd->bhgqd",
+                          jax.nn.softmax(logits, -1), v)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want.reshape(b, hq, s, d)), **TOL)
+
+
+# ===========================================================================
+class TestKernelVsOracle:
+    def test_ragged_block_tables(self):
+        """Every batch row at a different fill level (mixed decode)."""
+        q, kp, vp, bt = _case(4, 4, 2, 1, 16, ps=4, num_pages=12,
+                              table_width=5)
+        _check(q, kp, vp, bt, [0, 3, 9, 17])
+
+    def test_last_page_partial_fill(self):
+        """qpos mid-page: only part of the final page is visible."""
+        q, kp, vp, bt = _case(2, 2, 2, 1, 8, ps=8, num_pages=6,
+                              table_width=3, seed=1)
+        _check(q, kp, vp, bt, [10, 13])          # rows 2 and 5 of page 1
+
+    @pytest.mark.parametrize("hq,hkv", [(4, 1), (8, 2), (6, 6)])
+    def test_gqa_group_folding(self, hq, hkv):
+        """Query heads fold onto their KV group; pages fetched per Hkv."""
+        q, kp, vp, bt = _case(2, hq, hkv, 1, 8, ps=4, num_pages=8,
+                              table_width=4, seed=2)
+        _check(q, kp, vp, bt, [6, 11])
+
+    @pytest.mark.parametrize("ps", [4, 8])
+    def test_prompt_exactly_at_page_boundary(self, ps):
+        """qpos a multiple of page_size: the query's own token is the
+        first row of a fresh page and every earlier page is full."""
+        q, kp, vp, bt = _case(2, 4, 2, 1, 8, ps=ps, num_pages=10,
+                              table_width=4, seed=3)
+        _check(q, kp, vp, bt, [2 * ps, ps])
+
+    @pytest.mark.parametrize("s", [2, 5, 8])
+    def test_chunked_prefill_queries(self, s):
+        """S > 1: within-chunk causality over absolute positions."""
+        q, kp, vp, bt = _case(3, 4, 2, s, 8, ps=4, num_pages=16,
+                              table_width=6, seed=4)
+        _check(q, kp, vp, bt, [0, 5, 9])
+
+    def test_chunk_ending_at_page_boundary(self):
+        """qpos + s lands exactly on a page edge (full last page)."""
+        q, kp, vp, bt = _case(2, 2, 2, 4, 8, ps=8, num_pages=8,
+                              table_width=3, seed=5)
+        _check(q, kp, vp, bt, [4, 12])           # 4+4=8, 12+4=16
+
+    def test_garbage_beyond_qpos_never_leaks(self):
+        """Poisoning every row beyond the visible prefix (recycled pages
+        still holding a previous request's KV, unwritten tail rows)
+        must not change the output."""
+        q, kp, vp, _ = _case(2, 4, 2, 2, 8, ps=4, num_pages=10,
+                             table_width=5, seed=6)
+        # rows own DISJOINT pages (the allocator's invariant): poisoning
+        # one row's hidden tail must not touch the other's visible rows
+        perm = np.random.RandomState(7).permutation(10)
+        bt = jnp.asarray(perm.reshape(2, 5), jnp.int32)
+        qpos = jnp.asarray([5, 9], jnp.int32)
+        want = paged_attention_pallas(q, kp, vp, bt, qpos, interpret=True)
+
+        # poison: rewrite rows at logical positions > qpos+s-1 with junk
+        kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+        bt_np, ps = np.asarray(bt), 4
+        for b in range(2):
+            first_hidden = int(qpos[b]) + q.shape[2]
+            for t in range(first_hidden, bt_np.shape[1] * ps):
+                pg, row = bt_np[b, t // ps], t % ps
+                kp2[pg, :, row] = 1e4
+                vp2[pg, :, row] = -1e4
+        got = paged_attention_pallas(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                                     bt, qpos, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   **TOL)
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 6),
+           st.integers(2, 8), st.integers(0, 2 ** 16))
+    def test_shape_sweep(self, b, group, s, ps, seed):
+        """Random (batch, group, chunk, page size) sweep; qpos drawn so
+        every fill level incl. empty and boundary cases appears."""
+        hkv = 2
+        rs = np.random.RandomState(seed)
+        table_width = int(rs.randint(1, 5))
+        num_pages = max(table_width + 1, int(rs.randint(2, 10)))
+        q, kp, vp, bt = _case(b, group * hkv, hkv, s, 8, ps=ps,
+                              num_pages=num_pages,
+                              table_width=table_width, seed=seed)
+        hi = max(table_width * ps - s, 0)
+        qpos = rs.randint(0, hi + 1, (b,))
+        _check(q, kp, vp, bt, qpos)

@@ -1,0 +1,313 @@
+"""Serving conformance suite: paged engine ≡ dense engine, byte for byte.
+
+The paged KV cache (shared page pool + block tables + free-list
+allocator + admission queue) must be *observationally invisible*: for
+the same submitted requests, the paged engine emits exactly the token
+streams the dense engine does — for every serving family (lm KV pages,
+hybrid pages-KV-only, ssm no-KV) under f32 and pre-quantized int8
+weights, including requests admitted mid-stream onto freshly recycled
+pages and prompts whose pages are physically non-contiguous.
+
+Plus the allocator's own invariants (hypothesis-stub sweeps) and the
+``add_requests`` long-prompt rejection fix.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core.precision import PrecisionPolicy
+from repro.core.qtypes import FixedPointType
+from repro.dist.constrain import use_mesh
+from repro.launch.mesh import make_local_mesh
+from repro.launch.paging import PageAllocator
+from repro.launch.serve import Engine, quantize_for_serving
+from repro.models.api import get_family
+from repro.nn.context import QuantContext
+
+ARCHS = {"lm": "gemma-2b", "ssm": "mamba2-370m", "hybrid": "zamba2-1.2b"}
+_CACHE = {}
+
+
+def _setup(family: str, quant: str):
+    """(cfg, ctx, params, mesh) per (family, quant) — built once."""
+    key = (family, quant)
+    if key not in _CACHE:
+        cfg = get_config(ARCHS[family]).smoke()
+        if quant == "int8":
+            ctx = QuantContext(mode="int8",
+                               policy=PrecisionPolicy.uniform(
+                                   FixedPointType(8, 4)),
+                               compute_dtype=jnp.float32)
+        else:
+            ctx = QuantContext(compute_dtype=jnp.float32)
+        fam = get_family(cfg)
+        params = fam.init(jax.random.PRNGKey(0), cfg)
+        if quant == "int8":
+            params = quantize_for_serving(params, ctx)
+        _CACHE[key] = (cfg, ctx, params, make_local_mesh())
+    return _CACHE[key]
+
+
+def _serve(setup, prompts, *, gen_len=6, block=4, batch=2, max_len=32,
+           **kw):
+    """Submit everything, run blocks to drain, return the done streams.
+
+    ``step_many`` performs the continuous-batching admission: finished
+    slots retire and queued requests take their lanes/pages one block
+    after they free up."""
+    cfg, ctx, params, mesh = setup
+    with use_mesh(mesh):
+        eng = Engine(cfg, ctx, params, mesh, batch=batch, max_len=max_len,
+                     **kw)
+        for p in prompts:
+            eng.submit(p, gen_len=gen_len)
+        eng.try_admit()
+        while eng.live.any() or eng.waiting:
+            eng.step_many(block)
+        eng.retire_finished()
+    return eng
+
+
+def _prompts(cfg, lens, seed=0):
+    rs = np.random.RandomState(seed)
+    return [rs.randint(0, cfg.vocab, (n,)) for n in lens]
+
+
+# ===========================================================================
+class TestPagedDenseConformance:
+    """Byte-identical greedy streams, all families × weight precisions."""
+
+    @pytest.mark.parametrize("family,quant", [
+        ("lm", "f32"),
+        ("ssm", "f32"),
+        pytest.param("lm", "int8", marks=pytest.mark.slow),
+        pytest.param("ssm", "int8", marks=pytest.mark.slow),
+        pytest.param("hybrid", "f32", marks=pytest.mark.slow),
+        pytest.param("hybrid", "int8", marks=pytest.mark.slow),
+    ])
+    def test_paged_matches_dense(self, family, quant):
+        setup = _setup(family, quant)
+        prompts = _prompts(setup[0], (9, 5, 12, 3))
+        dense = _serve(setup, prompts)
+        paged = _serve(setup, prompts, paged=True, page_size=8)
+        assert paged.done == dense.done
+        assert len(paged.done) == len(prompts)
+        assert paged.allocator.used_pages == 0        # all pages returned
+
+    @pytest.mark.slow
+    def test_paged_matches_dense_int8_kv(self):
+        """int8 KV *pages* (payload + per-token scale pages)."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12))
+        dense = _serve(setup, prompts, kv_bits=8)
+        paged = _serve(setup, prompts, kv_bits=8, paged=True, page_size=8)
+        assert paged.done == dense.done
+
+    def test_midblock_finish_admit_recycles_pages(self):
+        """A tight pool: the queued request is admitted the moment a
+        finishing request's pages return — onto *recycled* pages whose
+        stale contents must never leak into its stream."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (10, 10, 10), seed=1)
+        # 16-token budgets (10 + 6) = 4 pages each; 8 pages = exactly two
+        # concurrent requests, so request 3 runs entirely on recycled pages
+        paged = _serve(setup, prompts, gen_len=6, max_len=24,
+                       paged=True, page_size=4, num_pages=8)
+        dense = _serve(setup, prompts, gen_len=6, max_len=24)
+        assert paged.done == dense.done
+        assert paged.stats["peak_live"] == 2
+
+    def test_prompt_spans_noncontiguous_pages(self):
+        """A request admitted after an early finish inherits freed page
+        ids out of order — its logical prompt spans physically
+        non-contiguous pages and must still decode identically."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        prompts = _prompts(cfg, (4, 10, 14), seed=2)
+        cfg_kw = dict(gen_len=6, max_len=24, block=2)
+        paged = _serve(setup, prompts, paged=True, page_size=4,
+                       num_pages=11, **cfg_kw)
+        # request 0 (4+6=10 tokens, 3 pages) finishes first; request 2
+        # (14+6=20 tokens, 5 pages) reuses its LIFO-freed pages plus
+        # fresh ones — physically out of order
+        pages3 = paged._slot_pages  # noqa: SLF001 — drained, must be empty
+        assert pages3 == {}
+        dense = _serve(setup, prompts, **cfg_kw)
+        assert paged.done == dense.done
+
+    def test_admission_waits_for_pages_not_lanes(self):
+        """With a free lane but an empty pool, a request waits; it is
+        admitted as soon as freed pages cover its budget — and still
+        produces exactly a fresh engine's stream."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (10, 10, 10), seed=3)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=3, max_len=24,
+                         paged=True, page_size=4, num_pages=8)
+            for p in prompts:
+                eng.submit(p, gen_len=6)
+            eng.try_admit()
+            # three free lanes, but pages only cover two 4-page requests
+            assert int(eng.live.sum()) == 2 and len(eng.waiting) == 1
+            free_before = eng.allocator.free_pages
+            assert free_before == 0
+            while eng.live.any() or eng.waiting:
+                eng.step_many(4)
+            eng.retire_finished()
+
+            solo = Engine(cfg, ctx, params, mesh, batch=3, max_len=24,
+                          paged=True, page_size=4, num_pages=8)
+            solo.submit(prompts[2], gen_len=6)
+            solo.try_admit()
+            while solo.live.any():
+                solo.step_many(4)
+            solo.retire_finished()
+        assert eng.stats["admitted"] == 3
+        assert eng.done[-1] == solo.done[0]
+
+
+# ===========================================================================
+class TestLongPromptRejection:
+    """`add_requests` must reject prompts the cache cannot hold instead
+    of silently clamp-writing their tail into the last rows."""
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_add_requests_rejects_oversized_prompt(self, paged):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompt = _prompts(cfg, (33,))[0]         # max_len is 32
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=32,
+                         paged=paged)
+            with pytest.raises(ValueError, match="does not fit"):
+                eng.add_requests({0: prompt}, gen_len=4)
+            # nothing was admitted: the engine stays fully idle
+            assert not eng.live.any() and eng.outputs == [None, None]
+            if paged:
+                assert eng.allocator.used_pages == 0
+            # a fitting prompt still serves normally afterwards
+            eng.add_requests({0: prompt[:8]}, gen_len=4)
+            eng.step_many(4)
+        assert len(eng.outputs[0]) == 4
+
+    def test_submit_rejects_oversized_prompt(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=16)
+            with pytest.raises(ValueError, match="does not fit"):
+                eng.submit(_prompts(cfg, (17,))[0])
+            assert not eng.waiting
+
+    def test_submit_rejects_request_larger_than_pool(self):
+        """A request whose budget exceeds the whole pool would block the
+        FIFO head forever — rejected at submit time."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=32,
+                         paged=True, page_size=4, num_pages=4)
+            with pytest.raises(ValueError, match="pool only has"):
+                eng.submit(_prompts(cfg, (8,))[0], gen_len=12)  # 5 pages
+            eng.submit(_prompts(cfg, (8,))[0], gen_len=8)       # 4: fits
+            assert len(eng.waiting) == 1
+
+    def test_direct_admission_oom_is_atomic(self):
+        """A slot-addressed add_requests that cannot get pages raises
+        BEFORE touching allocator or engine state."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (8, 8))
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=32,
+                         paged=True, page_size=4, num_pages=5)
+            with pytest.raises(MemoryError, match="exhausted"):
+                eng.add_requests({0: prompts[0], 1: prompts[1]}, gen_len=4)
+            assert eng.allocator.used_pages == 0
+            assert not eng.live.any()
+            # the pool still serves a fitting admission afterwards
+            eng.add_requests({0: prompts[0]}, gen_len=4)
+            eng.step_many(4)
+        assert len(eng.outputs[0]) == 4
+
+
+# ===========================================================================
+class TestPageAllocatorProperties:
+    """Free-list invariants under hypothesis-stub interleaving sweeps."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 16), st.integers(0, 2 ** 16))
+    def test_interleaved_alloc_free_never_double_assigns(
+            self, num_pages, page_size, seed):
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, page_size)
+        held = {}
+        outstanding = set()
+        for step in range(60):
+            if held and (rs.rand() < 0.4 or alloc.free_pages == 0):
+                owner = rs.choice(sorted(held))
+                pages = held.pop(owner)
+                outstanding.difference_update(pages)
+                alloc.free(pages)
+            else:
+                n = int(rs.randint(0, alloc.free_pages + 1))
+                pages = alloc.alloc(n, owner=step)
+                # a page may never be assigned twice concurrently
+                assert not (outstanding & set(pages))
+                assert len(set(pages)) == len(pages)
+                outstanding.update(pages)
+                if pages:
+                    held[step] = pages
+            assert alloc.used_pages == len(outstanding)
+            assert alloc.free_pages == num_pages - len(outstanding)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 64), st.integers(0, 2 ** 16))
+    def test_freed_pages_immediately_reusable(self, num_pages, seed):
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 4)
+        a = alloc.alloc(num_pages)               # drain the pool
+        assert not alloc.can_alloc(1)
+        give_back = [p for p in a if rs.rand() < 0.5]
+        alloc.free(give_back)
+        # everything just freed is claimable again in one shot, now
+        b = alloc.alloc(len(give_back))
+        assert sorted(b) == sorted(give_back)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 40), st.integers(0, 2 ** 16))
+    def test_no_spurious_oom_while_free_covers_need(self, num_pages, steps,
+                                                    seed):
+        """The dense layout's failure mode — enough total memory but no
+        whole slot free — must not exist: any request with ``need <=
+        free_pages`` succeeds, regardless of alloc/free history."""
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 8)
+        held = []
+        for _ in range(steps):
+            if held and rs.rand() < 0.5:
+                alloc.free(held.pop(rs.randint(len(held))))
+            need = int(rs.randint(0, num_pages + 1))
+            if need <= alloc.free_pages:
+                held.append(alloc.alloc(need))   # must never raise
+            else:
+                with pytest.raises(MemoryError):
+                    alloc.alloc(need)
+
+    def test_tokens_to_pages_rounding(self):
+        alloc = PageAllocator(8, 16)
+        assert [alloc.pages_for(t) for t in (0, 1, 16, 17, 32)] \
+            == [0, 1, 1, 2, 2]
+
+    def test_double_free_rejected(self):
+        alloc = PageAllocator(4, 8)
+        pages = alloc.alloc(2)
+        alloc.free(pages)
+        with pytest.raises(ValueError):
+            alloc.free(pages)
