@@ -5,6 +5,12 @@ exists (CPU-relative), and every other measured quantity folded into the
 ``derived`` column as ``key=value`` pairs.  Roofline benchmarks (per
 paper-scale table) live in the dry-run artifacts; ``--with-roofline``
 appends their summary lines if artifacts/dryrun exists.
+
+``--json PATH`` additionally writes the SAME rows machine-readably:
+one ``BENCH_<name>.json`` per bench module (``BENCH_serving.json``
+among them) plus a combined ``BENCH_all.json``, all under PATH.  CI's
+full job runs this and uploads the directory, so the bench trajectory
+is an artifact instead of scrollback.
 """
 
 import argparse
@@ -31,6 +37,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     ap.add_argument("--with-roofline", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_<name>.json per bench plus a "
+                         "combined BENCH_all.json under PATH (created if "
+                         "missing) — the CSV rows, machine-readable")
     args, _ = ap.parse_known_args()
 
     from . import (bench_backends, bench_lut_tables, bench_qmatmul,
@@ -45,14 +55,26 @@ def main() -> None:
     }
     wanted = set(args.only.split(",")) if args.only else set(modules)
 
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
+    all_rows = {}
     print("name,us_per_call,derived")
     for name, mod in modules.items():
         if name not in wanted:
             continue
-        for row in mod.run():
+        rows = mod.run()
+        all_rows[name] = rows
+        for row in rows:
             us = row.get("us_per_call", "")
             us = f"{us:.3f}" if isinstance(us, float) else ""
             print(f"{row['bench']}/{row['name']},{us},{_fmt_derived(row)}")
+        if args.json:
+            with open(os.path.join(args.json,
+                                   f"BENCH_{name}.json"), "w") as f:
+                json.dump(rows, f, indent=2, default=float)
+    if args.json:
+        with open(os.path.join(args.json, "BENCH_all.json"), "w") as f:
+            json.dump(all_rows, f, indent=2, default=float)
 
     if args.with_roofline and os.path.isdir("artifacts/dryrun"):
         for fn in sorted(glob.glob("artifacts/dryrun/*.json")):

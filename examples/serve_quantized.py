@@ -21,10 +21,22 @@ indirection or page-gather overhead and a lone request cannot benefit
 from pooling — page in when traffic is mixed and concurrent, not for a
 single stream.
 
+Speculative decoding (``--spec``): a drafter proposes ``--spec-k``
+tokens per round (prompt-lookup by default; ``--spec-draft <arch>``
+uses a second model) and the target verifies them all with ONE forward
+pass.  Greedy streams stay byte-identical to the non-speculative
+engine (tests/test_speculative.py); the exit stats table reports how
+many drafts each verify round committed.
+
+Each run prints an ``Engine.stats()`` summary table at exit: requests,
+peak concurrency, decode tok/s, mean TTFT, and (speculative) drafts
+accepted per verify round.
+
 Run:  PYTHONPATH=src python examples/serve_quantized.py
       (add --arch yi-6b --requests 32 ... to scale up; --temperature /
        --top-k switch slots from greedy to on-device sampling;
-       --paged --page-size 16 --num-pages 64 pools the KV cache)
+       --paged --page-size 16 --num-pages 64 pools the KV cache;
+       --spec --spec-k 6 turns on speculative decoding)
 """
 
 import sys
@@ -52,5 +64,10 @@ if __name__ == "__main__":
               "--batch", "8", "--prompt-len", "16", "--gen-len", "16",
               "--decode-block", "8", "--paged", "--page-size", "8",
               "--num-pages", "17"])
+        print("\n== speculative decoding: prompt-lookup drafts, "
+              "one verify pass per round ==")
+        main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
+              "--batch", "4", "--prompt-len", "16", "--gen-len", "32",
+              "--decode-block", "4", "--spec", "--spec-k", "4"])
     else:
         main(argv)

@@ -8,7 +8,7 @@ Each kernel ships three artifacts (per the de-specialization discipline):
 """
 
 from .ops import (attention, lut_activation, paged_attention, qmatmul,
-                  sample_tokens)
+                  sample_tokens, verify_tokens)
 
 __all__ = ["attention", "lut_activation", "paged_attention", "qmatmul",
-           "sample_tokens"]
+           "sample_tokens", "verify_tokens"]

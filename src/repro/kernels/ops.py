@@ -22,9 +22,10 @@ from .flash_attention import flash_attention_pallas, paged_attention_pallas
 from .lut_activation import lut_activation_pallas
 from .qmatmul import qmatmul_pallas
 from .sampling import sample_tokens_fused
+from .speculative import verify_tokens_fused
 
 __all__ = ["lut_activation", "qmatmul", "attention", "paged_attention",
-           "sample_tokens"]
+           "sample_tokens", "verify_tokens"]
 
 
 def _interpret() -> bool:
@@ -55,6 +56,15 @@ register_op("sample_tokens", "ref")(_ref.sample_tokens_ref)
 # sampling reads (B, V) floats once, so the win is living inside the
 # decode jit (token never leaves the device), not a custom kernel.
 register_op("sample_tokens", "pallas")(sample_tokens_fused)
+
+
+register_op("verify_tokens", "ref")(_ref.verify_tokens_ref)
+
+# same stance as sample_tokens: verification touches (B, S, V) floats
+# once — the value is running INSIDE the fused decode scan (accepted
+# lengths and the rewound position never leave the device), so the
+# specialized lowering is an XLA fusion, not a pallas_call.
+register_op("verify_tokens", "pallas")(verify_tokens_fused)
 
 
 register_op("attention", "ref")(_ref.flash_attention_ref)
@@ -137,3 +147,20 @@ def sample_tokens(logits, temperature, top_k, key=None, *,
     """
     return get_impl("sample_tokens", backend)(logits, temperature, top_k,
                                               key)
+
+
+def verify_tokens(logits, draft, temperature, top_k, key=None, *,
+                  backend: Optional[str] = None):
+    """Speculative acceptance rule: (B, S, V) target logits over a
+    drafted block × (B, S-1) draft ids -> (next_token (B,),
+    n_advance (B,) in [1, S]).
+
+    Greedy slots (temperature <= 0) accept the longest draft prefix
+    that matches the argmax chain — committed output is byte-identical
+    to non-speculative decode.  Sampled slots run point-mass rejection
+    sampling, preserving the temperature/top-k output distribution.
+    Deterministic in ``key`` across jit/scan boundaries — see
+    :mod:`repro.kernels.speculative`.
+    """
+    return get_impl("verify_tokens", backend)(logits, draft, temperature,
+                                              top_k, key)

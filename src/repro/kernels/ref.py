@@ -18,7 +18,7 @@ import numpy as np
 from ..core.tables import TableSpec, get_table, table_lookup
 
 __all__ = ["lut_activation_ref", "qmatmul_ref", "flash_attention_ref",
-           "paged_attention_ref", "sample_tokens_ref"]
+           "paged_attention_ref", "sample_tokens_ref", "verify_tokens_ref"]
 
 
 def lut_activation_ref(x: jnp.ndarray, spec: TableSpec) -> jnp.ndarray:
@@ -146,6 +146,73 @@ def sample_tokens_ref(logits: jnp.ndarray, temperature: jnp.ndarray,
         + gumbel_noise(key, (b, v))
     sampled = jnp.argmax(perturbed, axis=-1).astype(jnp.int32)
     return jnp.where(temperature > 0, sampled, greedy)
+
+
+def verify_tokens_ref(logits: jnp.ndarray, draft: jnp.ndarray,
+                      temperature: jnp.ndarray, top_k: jnp.ndarray,
+                      key=None):
+    """Draft-verification oracle: (B, S, V) × (B, S-1) -> (next, n_adv).
+
+    Matches :func:`repro.kernels.speculative.verify_tokens_fused`
+    bit-for-bit.  NOTE the limits of this oracle (same stance as
+    ``sample_tokens_ref``): the stochastic pieces — noise
+    (:func:`~repro.kernels.speculative.verify_noise`), temperature/top-k
+    restriction, softmax, Gumbel perturbation — must be *shared*
+    formulas, because a last-ulp difference in a probability or a
+    perturbed logit flips a borderline accept/argmax and exact-match
+    testing would be flaky-by-seed.  What IS independently re-derived is
+    the verification composition this op exists for: an explicit
+    per-position python loop carrying the "chain still alive" flag (vs
+    the fused cumprod), per-position residual masking and commit
+    selection.  The semantic properties (greedy chain == argmax chain,
+    n_adv bounds, committed-token validity) are asserted independently
+    in tests/test_speculative.py.
+    """
+    from .speculative import verify_noise
+    logits = logits.astype(jnp.float32)
+    b, s, v = logits.shape
+    k = s - 1
+    draft = draft.astype(jnp.int32)
+    greedy_t = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    if key is None:
+        accept = draft == greedy_t[:, :k]
+        t_full = greedy_t
+    else:
+        temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+        top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+        order = jnp.argsort(-logits, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)
+        k_eff = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v)
+        candidate = ranks < k_eff[:, None, None]
+        temp = jnp.maximum(temperature, 1e-6)[:, None, None]
+        scaled = jnp.where(candidate, logits / temp, -jnp.inf)
+        probs = jax.nn.softmax(scaled, axis=-1)
+
+        u, g_resample, g_bonus = verify_noise(key, b, k, v)
+        cols = []
+        accepts = []
+        for j in range(k):
+            p_d = probs[jnp.arange(b), j, draft[:, j]]
+            accepts.append(u[:, j] < p_d)
+            res = jnp.where(jnp.arange(v)[None, :] == draft[:, j, None],
+                            -jnp.inf, scaled[:, j])
+            cols.append(jnp.argmax(res + g_resample[:, j], axis=-1))
+        bonus = jnp.argmax(scaled[:, k] + g_bonus, axis=-1)
+        t_sampled = jnp.stack(cols + [bonus], axis=1).astype(jnp.int32)
+
+        is_greedy = (temperature <= 0)[:, None]
+        accept = jnp.where(is_greedy, draft == greedy_t[:, :k],
+                           jnp.stack(accepts, axis=1))
+        t_full = jnp.where(is_greedy, greedy_t, t_sampled)
+
+    alive = jnp.ones((b,), bool)
+    n_accept = jnp.zeros((b,), jnp.int32)
+    for j in range(k):
+        alive = alive & accept[:, j]
+        n_accept = n_accept + alive.astype(jnp.int32)
+    next_token = jnp.take_along_axis(t_full, n_accept[:, None], axis=1)[:, 0]
+    return next_token, (n_accept + 1).astype(jnp.int32)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,0 +1,191 @@
+"""Fused draft-verification lowering for speculative decoding.
+
+``verify_tokens`` is the acceptance rule of the draft→verify pipeline:
+given the target model's logits over a drafted block and the drafted
+token ids, it decides — entirely on device — how many drafted tokens
+survive and what the next input token is.
+
+The op consumes ``logits`` (B, S, V) produced by ONE target-model call
+over the block ``[cur, d_1, .., d_k]`` (S = k + 1: the current token
+plus k drafts), where row ``j`` conditions on the block prefix up to and
+including token ``j``.  Rows are compared against the drafts one step
+ahead: row ``j`` predicts the token after consuming ``d_j``, so it is
+judged against ``d_{j+1}``.
+
+* ``temperature <= 0`` — greedy: draft ``d_{j+1}`` is accepted iff it
+  equals ``argmax(logits[:, j])``.  The committed stream is therefore
+  *exactly* the target model's argmax chain regardless of what the
+  drafter proposed — the byte-identical-to-non-speculative contract.
+* ``temperature > 0`` — rejection sampling against a *deterministic*
+  (point-mass) proposal: every drafter in this library proposes greedily
+  (prompt-lookup copies history, a draft model argmaxes), so the
+  proposal distribution is ``q(x) = 1[x == d]``.  The standard
+  speculative-sampling rule then reduces to: accept ``d`` with
+  probability ``p(d)`` (the target's post-temperature/top-k probability
+  of the draft), and on rejection sample from the residual
+  ``max(0, p - q) ∝ p`` with the draft token's mass removed.  Each
+  committed token is marginally distributed exactly as the
+  non-speculative sampler's — temperature/top-k distributions are
+  preserved (the token *sequence* differs from the non-speculative
+  stream's, as it must: different randomness consumption).
+
+The final row (``j == k``) never judges a draft: when every draft is
+accepted it supplies the "bonus" token (greedy argmax or a regular
+sample), so a fully-accepted step commits k + 1 tokens and a fully
+rejected one still commits 1 — the ``n_advance >= 1`` guarantee that
+makes speculation never slower than plain decode in steps.
+
+Determinism contract (mirrors :mod:`repro.kernels.sampling`): both
+lowerings derive their noise from the same key-splitting helper
+(:func:`verify_noise`) and share the rank-based top-k tie convention,
+so fused and ``ref`` agree bit-for-bit on the same inputs, under jit and
+inside ``lax.scan``.  ``key=None`` is legal when every slot is greedy —
+greedy verification consumes no randomness.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sampling import gumbel_noise
+
+__all__ = ["verify_tokens_fused", "verify_noise", "draft_ngram"]
+
+
+def verify_noise(key, batch: int, k: int, vocab: int):
+    """Shared noise for the three stochastic legs of verification.
+
+    Returns ``(u, g_resample, g_bonus)``: acceptance uniforms (B, k),
+    residual-resample Gumbel (B, k, V) and bonus-sample Gumbel (B, V).
+    Both lowerings MUST draw through this helper — the fused/ref
+    exact-match contract is bit-level.
+    """
+    ku, kr, kb = jax.random.split(key, 3)
+    u = jax.random.uniform(ku, (batch, k), dtype=jnp.float32)
+    g_resample = gumbel_noise(kr, (batch, k, vocab))
+    g_bonus = gumbel_noise(kb, (batch, vocab))
+    return u, g_resample, g_bonus
+
+
+def _topk_restricted(logits: jnp.ndarray, top_k: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, V) -> bool candidacy mask, rank-based (same tie convention
+    as sample_tokens: exactly k candidates even on tied logits)."""
+    b, s, v = logits.shape
+    order = jnp.argsort(-logits, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    k_eff = jnp.clip(top_k, 1, v)
+    return jnp.where(top_k[:, None, None] > 0,
+                     ranks < k_eff[:, None, None],
+                     jnp.ones((b, s, v), bool))
+
+
+def verify_tokens_fused(logits: jnp.ndarray, draft: jnp.ndarray,
+                        temperature: jnp.ndarray, top_k: jnp.ndarray,
+                        key: Optional[jax.Array] = None,
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, S, V) logits × (B, S-1) drafts -> (next_token (B,), n_advance (B,)).
+
+    ``n_advance`` in [1, S]: the number of block tokens committed
+    (``cur`` plus the accepted draft prefix).  ``next_token`` is the new
+    input token — the correction sampled/argmaxed at the first rejected
+    position, or the bonus token from the final row when every draft
+    survived.  ``temperature`` (B,) f32 and ``top_k`` (B,) i32 are per
+    slot, exactly as in ``sample_tokens``; ``key`` may be None only if
+    every slot is greedy.
+    """
+    logits = logits.astype(jnp.float32)
+    b, s, v = logits.shape
+    k = s - 1
+    draft = draft.astype(jnp.int32)
+    greedy_t = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B, S)
+
+    if key is None:
+        accept = draft == greedy_t[:, :k]                        # (B, k)
+        t_full = greedy_t                                        # (B, S)
+    else:
+        temperature = jnp.asarray(temperature, jnp.float32).reshape(b)
+        top_k = jnp.asarray(top_k, jnp.int32).reshape(b)
+        restricted = _topk_restricted(logits, top_k)             # (B, S, V)
+        temp = jnp.maximum(temperature, 1e-6)[:, None, None]
+        scaled = jnp.where(restricted, logits / temp, -jnp.inf)  # (B, S, V)
+        probs = jax.nn.softmax(scaled, axis=-1)                  # (B, S, V)
+
+        u, g_resample, g_bonus = verify_noise(key, b, k, v)
+        # accept d_{j+1} with prob p_j(d_{j+1}) — point-mass proposal
+        p_draft = jnp.take_along_axis(probs[:, :k], draft[..., None],
+                                      axis=-1)[..., 0]           # (B, k)
+        accept_s = u < p_draft
+        # residual max(0, p - q) ∝ p with the draft's mass removed:
+        # Gumbel-max over the restricted logits minus the draft token
+        res_logits = jnp.where(
+            jax.nn.one_hot(draft, v, dtype=bool), -jnp.inf, scaled[:, :k])
+        resample = jnp.argmax(res_logits + g_resample,
+                              axis=-1).astype(jnp.int32)         # (B, k)
+        bonus = jnp.argmax(scaled[:, k] + g_bonus,
+                           axis=-1).astype(jnp.int32)            # (B,)
+        t_sampled = jnp.concatenate([resample, bonus[:, None]], axis=1)
+
+        is_greedy = (temperature <= 0)[:, None]
+        accept = jnp.where(is_greedy, draft == greedy_t[:, :k], accept_s)
+        t_full = jnp.where(is_greedy, greedy_t, t_sampled)       # (B, S)
+
+    # committed drafts = the leading run of accepts; n_advance counts
+    # them plus cur itself
+    n_accept = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1),
+                       axis=1)                                   # (B,) 0..k
+    n_advance = (n_accept + 1).astype(jnp.int32)
+    next_token = jnp.take_along_axis(t_full, n_accept[:, None],
+                                     axis=1)[:, 0]
+    return next_token, n_advance
+
+
+# ---------------------------------------------------------------------------
+# Prompt-lookup (n-gram self-speculation) drafting — the default drafter:
+# no second model, so it runs anywhere the target does (CPU CI included).
+# ---------------------------------------------------------------------------
+def draft_ngram(hist: jnp.ndarray, tok: jnp.ndarray, pos: jnp.ndarray,
+                k: int, ngram: int = 2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Draft ``k`` tokens per slot by prompt lookup over ``hist``.
+
+    ``hist`` (B, H) holds each slot's committed tokens (prompt + accepted
+    generations) at their absolute positions; ``tok`` (B, 1) is the
+    current input token at position ``pos`` (B,).  The current token is
+    committed into ``hist`` here (it is emitted unconditionally by the
+    spec step), then the most recent earlier occurrence of the trailing
+    ``ngram`` tokens is located and its continuation proposed.  A slot
+    with no match (or not enough history/continuation) falls back to
+    repeating the current token — a deliberately weak proposal that the
+    verifier simply rejects, degrading to ≥ 1 token per step.
+
+    Returns ``(drafts (B, k), hist)`` with the current token written.
+    Pure jnp, O(B·H·ngram) per call — bandwidth noise next to the
+    verification matmuls, and shape-stable so it scans.
+    """
+    b, h = hist.shape
+    lane = jnp.arange(b)
+    hist = hist.at[lane, pos].set(tok[:, 0])
+    # window ending at t matches the window ending at pos iff
+    # hist[t - i] == hist[pos - i] for all i < ngram
+    match = jnp.ones((b, h), bool)
+    for i in range(ngram):
+        ref = hist[lane, jnp.maximum(pos - i, 0)]                # (B,)
+        shifted = jnp.pad(hist, ((0, 0), (i, 0)))[:, :h]         # hist[t-i]
+        match = match & (shifted == ref[:, None])
+    t_arr = jnp.arange(h)[None, :]
+    # need a full window at t, a full k-token continuation inside the
+    # committed history, t strictly earlier than pos, and enough history
+    # for the query window itself
+    valid = ((t_arr >= ngram - 1)
+             & (t_arr + k <= pos[:, None])
+             & (pos[:, None] >= ngram))
+    best = jnp.max(jnp.where(match & valid, t_arr, -1), axis=1)  # (B,)
+    found = best >= 0
+    idx = jnp.clip(jnp.where(found, best, 0)[:, None] + 1
+                   + jnp.arange(k)[None, :], 0, h - 1)
+    cont = jnp.take_along_axis(hist, idx, axis=1)                # (B, k)
+    drafts = jnp.where(found[:, None], cont,
+                       jnp.broadcast_to(tok, (b, k)))
+    return drafts.astype(jnp.int32), hist

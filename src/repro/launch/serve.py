@@ -44,12 +44,30 @@ realized at framework level, as a fused quantized dense pipeline:
   Dense mode still wins at tiny batches (no gather/table indirection,
   one request never fragments); paged mode wins the moment mixed-length
   traffic leaves dense slots half empty.
+* **Speculative decoding** (``--spec``) — the draft→verify pipeline on
+  top of the de-specialized attention path: a drafter proposes
+  ``--spec-k`` tokens per live slot (prompt-lookup self-speculation by
+  default; ``--spec-draft <arch>`` drafts with a second model) and the
+  target model verifies ALL of them with one forward pass —
+  verification is just a k+1-token chunked-prefill call, dense einsum
+  or ``paged_attention``, the same op either way.  Acceptance runs
+  device-resident (:func:`repro.kernels.ops.verify_tokens` inside the
+  fused scan): greedy streams are byte-identical to the
+  non-speculative engine, sampled streams keep their exact
+  temperature/top-k distribution via point-mass rejection sampling.
+  Rewind on rejection is a scalar ``pos`` edit for KV families (pages
+  were allocated for the full budget at admission — allocator and
+  block tables untouched); recurrent families checkpoint-and-restore
+  their state per block position (see ``models.api.spec_state_fn``).
+  The speculation depth ``k`` is the serving-side reuse factor:
+  deeper speculation = fewer target passes on predictable streams,
+  more wasted verify positions on incompressible ones.
 
 Usage (CPU-scale)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
         --requests 16 --batch 4 --prompt-len 32 --gen-len 16 \
-        --quant int8 --decode-block 8 --paged --page-size 16
+        --quant int8 --decode-block 8 --paged --page-size 16 --spec
 """
 
 from __future__ import annotations
@@ -72,7 +90,7 @@ from ..models.api import (get_family, init_paged_cache_fn, invalidate_fn,
                           supports_chunked_prefill)
 from ..nn.context import QuantContext
 from ..train.step import (build_decode_loop, build_prefill_step,
-                          build_serve_step)
+                          build_serve_step, build_spec_decode_loop)
 from .mesh import make_local_mesh
 from .paging import PageAllocator
 from .train import build_ctx
@@ -115,7 +133,9 @@ class Engine:
     def __init__(self, cfg, ctx, params, mesh, *, batch: int, max_len: int,
                  kv_bits=None, prefill_chunk: int = 16, eos_id: int = -1,
                  seed: int = 0, paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, spec: bool = False,
+                 spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
+                 drafter_fn=None):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
         self.prefill_chunk = max(1, prefill_chunk)
@@ -127,6 +147,21 @@ class Engine:
         self.params = params
         cache_dtype = jnp.int8 if kv_bits == 8 else jnp.float32
         margin = self.prefill_chunk if self.chunked else 0
+        # speculative decoding: the verification block writes k+1 KV
+        # rows starting at a (possibly held, up to max_len) position, so
+        # the margin must absorb spec_k + 1 rows beyond the cache bound
+        # exactly as it absorbs chunked-prefill overshoot
+        self.spec, self.spec_k = bool(spec), max(1, int(spec_k))
+        self.spec_ngram = max(1, int(spec_ngram))
+        self.drafter_fn = drafter_fn            # test hook (custom drafts)
+        if not self.spec and (spec_draft is not None
+                              or drafter_fn is not None):
+            raise ValueError(
+                "spec_draft/drafter_fn were given but spec=False — a "
+                "drafter without speculation would silently never run; "
+                "pass spec=True")
+        if self.spec:
+            margin = max(margin, self.spec_k + 2)
         self.paged = bool(paged)
         if self.paged:
             ps = max(1, int(page_size))
@@ -158,6 +193,39 @@ class Engine:
         self.prefill = jax.jit(build_prefill_step(cfg, ctx))
         #: per-block-size cache of jitted fused decode loops
         self._loops: Dict[int, callable] = {}
+        #: per-block-size cache of jitted speculative draft→verify loops
+        self._spec_loops: Dict[int, callable] = {}
+        # -- speculative drafting state --------------------------------
+        #: committed-token history per slot (prompt + accepted
+        #: generations at their absolute positions) — the prompt-lookup
+        #: drafter's corpus; threaded through the spec loop carry
+        self.hist = np.zeros((batch, max_len + self.spec_k + 2), np.int32)
+        self.draft = None
+        if self.spec and spec_draft is not None:
+            d_cfg, d_params, d_ctx = spec_draft
+            if d_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft model vocab {d_cfg.vocab} != target vocab "
+                    f"{cfg.vocab}; drafts would be meaningless")
+            self.draft = (d_cfg, d_params, d_ctx or ctx)
+            self.draft_chunked = supports_chunked_prefill(d_cfg)
+            d_margin = max(self.prefill_chunk if self.draft_chunked else 0,
+                           self.spec_k + 2)
+            # the drafter's cache is always dense: it holds one model's
+            # worth of rows and is rolled back by pos/checkpoints, never
+            # paged (paging meters the TARGET's admission, not drafts)
+            self.draft_cache = get_family(d_cfg).init_cache(
+                d_cfg, batch, max_len + d_margin, jnp.float32)
+            self._draft_decode = jax.jit(build_serve_step(d_cfg,
+                                                          self.draft[2]))
+            self._draft_prefill = jax.jit(build_prefill_step(
+                d_cfg, self.draft[2]))
+            self._draft_invalidate = jax.jit(
+                lambda cache, slot: invalidate_fn(cache, slot, d_cfg),
+                donate_argnums=(0,))
+            self._draft_merge = jax.jit(
+                lambda new, old, slot: merge_slot_fn(new, old, slot, d_cfg),
+                donate_argnums=(1,))
         # donated so XLA updates the cache in place — invalidating a slot
         # on finish() must not copy the whole KV cache per request
         self._invalidate = jax.jit(
@@ -192,8 +260,15 @@ class Engine:
         #: FIFO admission queue (see submit/try_admit): requests wait
         #: here until a lane AND (paged) enough free pages exist
         self.waiting: deque = deque()
-        #: serving telemetry: peak concurrent requests + admission count
-        self.stats = {"peak_live": 0, "admitted": 0}
+        #: aggregate serving counters (peak concurrency, admissions,
+        #: generated tokens, decode walltime, speculation acceptance);
+        #: per-request rows land in ``request_log`` — see :meth:`stats`
+        self.counters = {"peak_live": 0, "admitted": 0, "gen_tokens": 0,
+                         "decode_s": 0.0, "verify_steps": 0,
+                         "draft_accepted": 0}
+        #: one dict per retired request: ttft_s, gen_tokens, decode_s
+        self.request_log: List[dict] = []
+        self._req_meta: Dict[int, dict] = {}    # slot -> live request row
 
     # -- request admission --------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray, **kw):
@@ -202,7 +277,7 @@ class Engine:
 
     def add_requests(self, requests: Dict[int, np.ndarray], *,
                      gen_len: Optional[int] = None,
-                     temperature=None, top_k=None):
+                     temperature=None, top_k=None, _t_submit=None):
         """Prefill several fresh slots together (batched chunked prefill).
 
         Prompts are ingested in full-batch chunks of ``prefill_chunk``
@@ -224,6 +299,7 @@ class Engine:
         MemoryError when the pool is short — queue through
         :meth:`submit` to wait for pages instead.
         """
+        t_call = time.perf_counter()
         reqs = {int(s): np.asarray(p, np.int32).reshape(-1)
                 for s, p in requests.items()}
         for s, p in reqs.items():
@@ -285,10 +361,18 @@ class Engine:
         for s in reqs:
             if not self._clean[s]:
                 self.cache = self._invalidate(self.cache, jnp.int32(s))
+                if self.draft is not None:
+                    # the draft scan advances dead lanes too, so the
+                    # drafter's recurrent/KV lane is just as dirty
+                    self.draft_cache = self._draft_invalidate(
+                        self.draft_cache, jnp.int32(s))
         if self.chunked:
             first = self._prefill_chunked(reqs)
         else:
             first = self._prefill_looped(reqs)
+        if self.spec and self.draft is not None:
+            self._prefill_draft(reqs)
+        t_first = time.perf_counter()
         for s, p in reqs.items():
             self.pos[s] = p.shape[0]
             self.live[s] = True
@@ -298,9 +382,17 @@ class Engine:
             self.temperature[s] = per_slot(temperature, s, 0.0)
             self.top_k[s] = per_slot(top_k, s, 0)
             self.stop_pos[s] = stop_of(s, p.shape[0])
-        self.stats["admitted"] += len(reqs)
-        self.stats["peak_live"] = max(self.stats["peak_live"],
-                                      int(self.live.sum()))
+            # drafting corpus + per-request telemetry: TTFT is measured
+            # from submit() when the request came through the queue,
+            # else from this call's start (direct slot-addressed adds)
+            self.hist[s, :] = 0
+            self.hist[s, :p.shape[0]] = p
+            t_sub = (_t_submit or {}).get(s, t_call)
+            self._req_meta[s] = {"ttft_s": t_first - t_sub,
+                                 "t_admit": t_first}
+        self.counters["admitted"] += len(reqs)
+        self.counters["peak_live"] = max(self.counters["peak_live"],
+                                         int(self.live.sum()))
 
     def _flush_block_tables(self):
         """Write the host block tables into the cache pytree (one upload
@@ -329,7 +421,8 @@ class Engine:
                 f"prompt of {prompt.shape[0]} tokens does not fit the "
                 f"cache (max_len={self.max_len})")
         req = {"prompt": prompt, "gen_len": gen_len,
-               "temperature": temperature, "top_k": top_k}
+               "temperature": temperature, "top_k": top_k,
+               "t_submit": time.perf_counter()}
         if self.paged:
             need = self.allocator.pages_for(self._budget(req))
             if need > self.allocator.num_pages:
@@ -377,7 +470,8 @@ class Engine:
         of one call share a single batched prefill."""
         free = [s for s in range(self.batch)
                 if self.outputs[s] is None and not self.live[s]]
-        admit, kw = {}, {"gen_len": {}, "temperature": {}, "top_k": {}}
+        admit, kw = {}, {"gen_len": {}, "temperature": {}, "top_k": {},
+                         "_t_submit": {}}
         planned = 0
         while self.waiting and free:
             req = self.waiting[0]
@@ -392,6 +486,7 @@ class Engine:
             kw["gen_len"][s] = req["gen_len"]
             kw["temperature"][s] = req["temperature"]
             kw["top_k"][s] = req["top_k"]
+            kw["_t_submit"][s] = req["t_submit"]
         if admit:
             self.add_requests(admit, **kw)
         return len(admit)
@@ -449,6 +544,48 @@ class Engine:
             # the same value afterwards)
         return first
 
+    def _prefill_draft(self, reqs):
+        """Ingest admitted prompts into the DRAFT model's cache.
+
+        After this the drafter has consumed exactly each admitted
+        slot's prompt — one token behind the engine's held first
+        generated token, which is precisely the state the spec loop's
+        draft scan expects (its first draft step consumes the held
+        token).  Chunked for attention-cache drafters, per-slot looped
+        with ``merge_slot`` isolation for recurrent ones, mirroring the
+        target's two prefill regimes.
+        """
+        d_cfg, d_params, _ = self.draft
+        if self.draft_chunked:
+            chunk = self.prefill_chunk
+            plen = max(p.shape[0] for p in reqs.values())
+            padded = -(-plen // chunk) * chunk
+            toks = np.zeros((self.batch, padded), np.int32)
+            for s, p in reqs.items():
+                toks[s, :p.shape[0]] = p
+            fresh = np.fromiter(sorted(reqs), np.int64)
+            for c0 in range(0, padded, chunk):
+                if c0 >= plen:
+                    break
+                cur = self.pos.copy()
+                cur[fresh] = c0
+                _, self.draft_cache = self._draft_prefill(
+                    d_params, {"tokens": _snap(toks[:, c0:c0 + chunk])},
+                    self.draft_cache, _snap(cur))
+        else:
+            for s, p in reqs.items():
+                before = self.draft_cache
+                cur = self.pos.copy()
+                cur[s] = 0
+                for t in range(p.shape[0]):
+                    tok = np.zeros((self.batch, 1), np.int32)
+                    tok[s, 0] = p[t]
+                    _, self.draft_cache = self._draft_decode(
+                        d_params, self.draft_cache, _snap(tok), _snap(cur))
+                    cur[s] += 1
+                self.draft_cache = self._draft_merge(self.draft_cache,
+                                                     before, jnp.int32(s))
+
     # -- decode / retire -----------------------------------------------------
     # NOTE: all engine state crosses the jit boundary via ``_snap`` (a
     # defensive numpy copy): pos/tokens/live are mutated in place right
@@ -462,9 +599,45 @@ class Engine:
         of ``step()`` (same model step order, same PRNG stream: step
         ``i`` of the block draws with the global step counter the i-th
         single step would use).
+
+        With speculation enabled (``spec=True``) ``n`` counts
+        *draft→verify rounds* instead of single tokens: the block is
+        (n * (spec_k + 1), B) and each live slot commits between 1 and
+        spec_k + 1 tokens per round.  Greedy streams remain
+        byte-identical to the non-speculative engine's.
         """
         if self.paged and self._bt_dirty:
             self._flush_block_tables()
+        t0 = time.perf_counter()
+        if self.spec:
+            block, block_live = self._block_spec(n)
+        else:
+            block, block_live = self._block_decode(n)
+        self._gen_step += n
+        self._clean[:] = False              # decode advanced every lane
+        t1 = time.perf_counter()
+        self.counters["decode_s"] += t1 - t0
+        self.counters["gen_tokens"] += int(block_live.sum())
+        # stamp generation end the moment a slot's live drops: finish()
+        # may run much later (deferred retirement), and the idle gap
+        # must not count against the request's decode throughput
+        for s in range(self.batch):
+            if not self.live[s] and s in self._req_meta:
+                self._req_meta[s].setdefault("t_done", t1)
+        for s in range(self.batch):
+            if self.outputs[s] is not None:
+                self.outputs[s].extend(
+                    int(t) for t in block[block_live[:, s], s])
+        # continuous batching: with requests waiting, retire finished
+        # slots NOW and admit whatever the freed lanes/pages cover —
+        # admission latency is one block, not one drained batch
+        if self.waiting:
+            self.retire_finished()
+            self.try_admit()
+        return block, block_live
+
+    def _block_decode(self, n: int):
+        """One fused plain-decode block (n single-token steps)."""
         loop = self._loops.get(n)
         if loop is None:
             # cache donated for the same reason as _invalidate: the
@@ -482,7 +655,6 @@ class Engine:
             self.params, self.cache, _snap(self.tokens), _snap(self.pos),
             _snap(self.live), _snap(self.stop_pos), sample_params,
             key, jnp.int32(self._gen_step), jnp.int32(self.eos_id))
-        self._gen_step += n
         # ONE host sync for the whole block (np.asarray blocks until the
         # device values are ready; .copy() detaches the engine's mutable
         # state from the device buffers)
@@ -491,17 +663,61 @@ class Engine:
         self.tokens = np.asarray(tokens).copy()
         self.pos = np.asarray(pos).copy()
         self.live = np.asarray(live).copy()
-        self._clean[:] = False              # decode advanced every lane
-        for s in range(self.batch):
-            if self.outputs[s] is not None:
-                self.outputs[s].extend(
-                    int(t) for t in block[block_live[:, s], s])
-        # continuous batching: with requests waiting, retire finished
-        # slots NOW and admit whatever the freed lanes/pages cover —
-        # admission latency is one block, not one drained batch
-        if self.waiting:
-            self.retire_finished()
-            self.try_admit()
+        return block, block_live
+
+    def _block_spec(self, n: int):
+        """One fused speculative block (n draft→verify rounds).
+
+        The whole pipeline — drafting, the single k+1-position target
+        pass, acceptance, position rewind, recurrent-state rollback —
+        runs inside ONE jit call; the host sees only the committed
+        tokens, exactly like the plain decode block.
+        """
+        model_draft = self.draft is not None and self.drafter_fn is None
+        loop = self._spec_loops.get(n)
+        if loop is None:
+            if self.drafter_fn is not None:
+                drafter, kw = self.drafter_fn, {}
+            elif model_draft:
+                drafter = "model"
+                kw = dict(draft_cfg=self.draft[0], draft_ctx=self.draft[2])
+            else:
+                drafter, kw = "ngram", {}
+            loop = jax.jit(
+                build_spec_decode_loop(self.cfg, self.ctx, n, self.spec_k,
+                                       drafter=drafter,
+                                       ngram=self.spec_ngram, **kw),
+                donate_argnums=(1, 11) if model_draft else (1,))
+            self._spec_loops[n] = loop
+        sample_params = {"temperature": _snap(self.temperature),
+                         "top_k": _snap(self.top_k)}
+        key = self._key if (self.temperature > 0).any() else None
+        common = (self.params, self.cache, _snap(self.tokens),
+                  _snap(self.pos), _snap(self.live), _snap(self.stop_pos),
+                  sample_params, key, jnp.int32(self._gen_step),
+                  jnp.int32(self.eos_id))
+        if model_draft:
+            out = loop(*common, self.draft[1], self.draft_cache)
+        else:
+            out = loop(*common, _snap(self.hist))
+        (self.cache, tokens, pos, live, aux, block, block_live,
+         accepted) = out
+        block = np.asarray(block)
+        block_live = np.asarray(block_live)
+        accepted = np.asarray(accepted)
+        self.tokens = np.asarray(tokens).copy()
+        self.pos = np.asarray(pos).copy()
+        self.live = np.asarray(live).copy()
+        if model_draft:
+            self.draft_cache = aux
+        else:
+            self.hist = np.asarray(aux).copy()
+        # acceptance telemetry: rounds in which a slot was live, and
+        # how many drafts each such round committed (0..spec_k)
+        step_live = block_live.reshape(n, self.spec_k + 1,
+                                       self.batch)[:, 0]
+        self.counters["verify_steps"] += int(step_live.sum())
+        self.counters["draft_accepted"] += int(accepted[step_live].sum())
         return block, block_live
 
     def step(self):
@@ -509,6 +725,15 @@ class Engine:
         self.step_many(1)
 
     def finish(self, slot: int):
+        meta = self._req_meta.pop(slot, None)
+        if meta is not None:
+            done = meta.get("t_done", time.perf_counter())
+            dt = done - meta["t_admit"]
+            gen = len(self.outputs[slot] or [])
+            self.request_log.append({
+                "ttft_s": meta["ttft_s"], "gen_tokens": gen,
+                "decode_s": dt,
+                "tok_per_s": gen / dt if dt > 0 else 0.0})
         self.done.append(self.outputs[slot])
         self.outputs[slot] = None
         self.live[slot] = False
@@ -533,6 +758,34 @@ class Engine:
             self.block_tables[slot, :] = self._trash
             self._bt_dirty = True
         self._clean[slot] = True
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate serving telemetry.
+
+        Combines the running counters with per-request rows from
+        ``request_log``: time-to-first-token (submit→first token for
+        queued requests), engine decode throughput (committed tokens
+        per second of block walltime, syncs included), and — under
+        speculation — the mean number of drafted tokens accepted per
+        verify round (committed tokens per round = that + 1).
+        """
+        c = dict(self.counters)
+        out = {"requests": len(self.done), "admitted": c["admitted"],
+               "peak_live": c["peak_live"], "gen_tokens": c["gen_tokens"],
+               "decode_s": c["decode_s"],
+               "decode_tok_per_s": (c["gen_tokens"] / c["decode_s"]
+                                    if c["decode_s"] > 0 else 0.0)}
+        if self.request_log:
+            out["ttft_mean_s"] = float(np.mean(
+                [r["ttft_s"] for r in self.request_log]))
+            out["req_tok_per_s_mean"] = float(np.mean(
+                [r["tok_per_s"] for r in self.request_log]))
+        if self.spec:
+            out["verify_steps"] = c["verify_steps"]
+            out["accepted_per_step"] = (c["draft_accepted"]
+                                        / max(c["verify_steps"], 1))
+        return out
 
 
 def quantize_for_serving(params, ctx: QuantContext):
@@ -580,6 +833,22 @@ def main(argv=None):
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the k best logits (0 = off)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding: draft k tokens per round "
+                         "and verify them with ONE target pass (greedy "
+                         "streams stay byte-identical; helps on "
+                         "repetitive/code-like continuations, costs a "
+                         "little on incompressible ones)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify round (the serving-"
+                         "side reuse factor: deeper = fewer target "
+                         "passes when drafts hit, more waste when not)")
+    ap.add_argument("--spec-draft", default=None,
+                    help="arch name of a (smaller) draft model sharing "
+                         "the target's vocab (implies --spec); default = "
+                         "prompt-lookup self-speculation, no second model")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="context length of the prompt-lookup match")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -597,12 +866,24 @@ def main(argv=None):
             params = quantize_for_serving(params, ctx)
         p_sh = named(param_specs(params, mesh), mesh)
         params = jax.device_put(params, p_sh)
+        if args.spec_draft:
+            args.spec = True                    # a drafter implies --spec
+        spec_draft = None
+        if args.spec_draft:
+            d_cfg = get_config(args.spec_draft)
+            if args.smoke:
+                d_cfg = d_cfg.smoke()
+            d_params = get_family(d_cfg).init(
+                jax.random.PRNGKey(args.seed + 1), d_cfg)
+            spec_draft = (d_cfg, d_params, ctx)
         max_len = args.prompt_len + args.gen_len + 1
         eng = Engine(cfg, ctx, params, mesh, batch=args.batch,
                      max_len=max_len, kv_bits=args.kv_bits,
                      prefill_chunk=args.prefill_chunk, seed=args.seed,
                      paged=args.paged, page_size=args.page_size,
-                     num_pages=args.num_pages)
+                     num_pages=args.num_pages, spec=args.spec,
+                     spec_k=args.spec_k, spec_draft=spec_draft,
+                     spec_ngram=args.spec_ngram)
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
@@ -626,12 +907,35 @@ def main(argv=None):
         paged_note = (f" paged(ps={eng.allocator.page_size},"
                       f"pages={eng.allocator.num_pages})"
                       if args.paged else " dense")
+        spec_note = (f" spec(k={eng.spec_k},"
+                     f"draft={args.spec_draft or 'ngram'})"
+                     if args.spec else "")
+        st = eng.stats()
         print(f"served {len(eng.done)} requests, {gen_tokens} tokens in "
               f"{dt:.2f}s ({gen_tokens / dt:.1f} tok/s), "
               f"quant={args.quant} lut={args.lut} kv_bits={args.kv_bits} "
-              f"decode_block={block}{paged_note} "
-              f"peak_live={eng.stats['peak_live']}")
+              f"decode_block={block}{paged_note}{spec_note} "
+              f"peak_live={st['peak_live']}")
+        print_stats_table(st)
     return eng.done
+
+
+def print_stats_table(st: dict) -> None:
+    """Summary table of :meth:`Engine.stats` rows (serve CLI + examples)."""
+    rows = [("requests served", f"{st['requests']}"),
+            ("peak concurrent", f"{st['peak_live']}"),
+            ("generated tokens", f"{st['gen_tokens']}"),
+            ("decode tok/s", f"{st['decode_tok_per_s']:.1f}")]
+    if "ttft_mean_s" in st:
+        rows.append(("mean TTFT", f"{st['ttft_mean_s'] * 1e3:.1f} ms"))
+    if "accepted_per_step" in st:
+        rows.append(("verify rounds", f"{st['verify_steps']}"))
+        rows.append(("drafts accepted/round",
+                     f"{st['accepted_per_step']:.2f}"))
+    width = max(len(k) for k, _ in rows)
+    print("-- serving stats " + "-" * (width + 8))
+    for k, v in rows:
+        print(f"  {k:<{width}}  {v}")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,7 @@ from . import encdec, hybrid, lm, ssm_lm, vlm
 from .config import ModelConfig
 
 __all__ = ["get_family", "FAMILIES", "init_paged_cache_fn",
-           "set_block_table"]
+           "set_block_table", "spec_state_fn", "spec_restore_fn"]
 
 FAMILIES = {
     "lm": lm,
@@ -143,6 +143,40 @@ def invalidate_fn(cache, slot, cfg: ModelConfig):
         return cache
     import jax
     return jax.tree_util.tree_map(lambda c: c.at[:, slot].set(0), cache)
+
+
+def spec_state_fn(cache, cfg: ModelConfig):
+    """The *recurrent* part of a serving cache, batch axis leading.
+
+    Speculative decoding's multi-token advance runs the target over a
+    drafted block and then rewinds to the accepted prefix.  KV rows
+    rewind for free — a scalar ``pos`` edit makes the rejected rows
+    unreachable (write-before-attend: the next block overwrites them
+    before any query can attend them).  Recurrent state cannot rewind:
+    it already *consumed* the rejected tokens.  This hook returns the
+    subtree that must be checkpointed per block position (None for
+    pure-KV families), with every leaf transposed batch-first so the
+    per-slot checkpoint gather after verification is one uniform
+    ``t[n_advance - 1, arange(B)]`` regardless of each family's native
+    batch axis.  :func:`spec_restore_fn` is its inverse.
+    """
+    fam = get_family(cfg)
+    if hasattr(fam, "spec_state"):
+        return fam.spec_state(cache)
+    return None                       # lm: KV-only, pos rewind suffices
+
+
+def spec_restore_fn(cache, state, cfg: ModelConfig):
+    """Write a batch-leading recurrent checkpoint back into ``cache``.
+
+    ``state`` is a (possibly per-slot-gathered) pytree in the layout
+    :func:`spec_state_fn` produced; families that checkpoint nothing
+    return the cache unchanged.
+    """
+    fam = get_family(cfg)
+    if hasattr(fam, "spec_restore"):
+        return fam.spec_restore(cache, state)
+    return cache
 
 
 def merge_slot_fn(new_cache, old_cache, slot, cfg: ModelConfig):

@@ -27,7 +27,8 @@ from .common import cross_entropy
 from .config import ModelConfig
 
 __all__ = ["init", "forward", "loss", "init_cache", "init_paged_cache",
-           "prefill", "decode_step", "invalidate_slot", "merge_slot"]
+           "prefill", "decode_step", "invalidate_slot", "merge_slot",
+           "spec_state", "spec_restore"]
 
 
 def _group_structure(cfg: ModelConfig):
@@ -186,6 +187,28 @@ def merge_slot(new_cache, old_cache, slot):
                              if old_cache["ssm"]["tail"] is not None
                              else None)},
             "attn": attn}
+
+
+def spec_state(cache):
+    """Only the SSM lanes need speculative checkpoints: the shared-block
+    KV caches rewind by position like any attention cache.  Leaves go
+    batch-first — grouped states (G, k, B, ...) → (B, G, k, ...), tail
+    states (L, B, ...) → (B, L, ...) — so the per-slot checkpoint
+    gather in the spec loop is axis-uniform."""
+    return {"groups": jax.tree_util.tree_map(
+                lambda t: jnp.moveaxis(t, 2, 0), cache["ssm"]["groups"]),
+            "tail": (jax.tree_util.tree_map(
+                lambda t: jnp.moveaxis(t, 1, 0), cache["ssm"]["tail"])
+                if cache["ssm"]["tail"] is not None else None)}
+
+
+def spec_restore(cache, state):
+    return {"ssm": {"groups": jax.tree_util.tree_map(
+                        lambda t: jnp.moveaxis(t, 0, 2), state["groups"]),
+                    "tail": (jax.tree_util.tree_map(
+                        lambda t: jnp.moveaxis(t, 0, 1), state["tail"])
+                        if state["tail"] is not None else None)},
+            "attn": cache["attn"]}
 
 
 def prefill(params, tokens, cache, cfg: ModelConfig,

@@ -18,7 +18,7 @@ from .common import cross_entropy
 from .config import ModelConfig
 
 __all__ = ["init", "forward", "loss", "init_cache", "init_paged_cache",
-           "prefill", "decode_step"]
+           "prefill", "decode_step", "spec_state", "spec_restore"]
 
 
 def init(rng, cfg: ModelConfig, *, dtype=jnp.float32):
@@ -78,6 +78,18 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
 
 # slot invalidation / merge: state leaves are (layers, B, ...), so the
 # generic axis-1 implementations in models.api apply (no hook here).
+def spec_state(cache):
+    """The whole cache is recurrent state — speculative rollback must
+    checkpoint every leaf.  Leaves go batch-first ((L, B, ...) →
+    (B, L, ...)) so per-slot checkpoint selection is uniform."""
+    return jax.tree_util.tree_map(lambda t: jnp.moveaxis(t, 1, 0), cache)
+
+
+def spec_restore(cache, state):
+    del cache  # fully recurrent: the restored state IS the cache
+    return jax.tree_util.tree_map(lambda t: jnp.moveaxis(t, 0, 1), state)
+
+
 def prefill(params, tokens, cache, cfg: ModelConfig,
             ctx: QuantContext = DEFAULT_CTX, *, pos=None,
             full_logits: bool = False):

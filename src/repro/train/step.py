@@ -24,7 +24,8 @@ from ..nn.context import QuantContext
 from ..optim import OptConfig, adamw_init, adamw_update
 
 __all__ = ["init_state", "build_train_step", "build_serve_step",
-           "build_prefill_step", "build_decode_loop"]
+           "build_prefill_step", "build_decode_loop",
+           "build_spec_decode_loop"]
 
 
 def init_state(rng, cfg: ModelConfig, *, dtype=jnp.float32,
@@ -201,6 +202,210 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
         return cache, tokens, pos, live, block_tokens, block_live
 
     return decode_loop
+
+
+def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
+                           k: int, *, drafter="ngram", ngram: int = 2,
+                           draft_cfg: Optional[ModelConfig] = None,
+                           draft_ctx: Optional[QuantContext] = None
+                           ) -> Callable:
+    """Speculative decode: ``steps`` draft→verify rounds in ONE scan.
+
+    Each round proposes ``k`` tokens per slot, runs the target model
+    ONCE over all k + 1 block positions (the de-specialization payoff:
+    verification *is* a k+1-token chunked-prefill call — the dense
+    einsum path or ``paged_attention`` handle S > 1 natively, so no
+    bespoke verify forward exists), accepts the longest agreeing prefix
+    via the :func:`repro.kernels.ops.verify_tokens` op, and advances
+    each slot by its accepted length.  Greedy slots emit the target's
+    exact argmax stream (byte-identical to the non-speculative engine);
+    sampled slots preserve the temperature/top-k distribution through
+    point-mass rejection sampling.
+
+    Rollback is family-aware (:func:`repro.models.api.spec_state_fn`):
+
+    * KV families (lm, dense or paged) rewind by the scalar ``pos``
+      edit alone — rejected rows are overwritten by the next block's
+      writes before any query can attend them (write-before-attend),
+      and pages were allocated for the full token budget at admission,
+      so the allocator and block tables are untouched.
+    * Recurrent families (ssm, hybrid's mamba lanes) cannot un-consume
+      a token: their verification runs as a k+1-step inner scan that
+      checkpoints the recurrent leaves per position, and the committed
+      checkpoint is gathered per slot after verification.
+
+    ``drafter`` selects the proposal source:
+
+    * ``"ngram"`` — prompt-lookup self-speculation (default; no second
+      model).  The loop threads a ``hist`` (B, H) committed-token
+      buffer and drafts by copying the continuation of the most recent
+      match of the trailing ``ngram`` tokens.
+    * ``(draft_cfg, draft_ctx)`` via the keyword args with
+      ``drafter="model"`` — a second (smaller) model drafts greedily;
+      any ``configs/*`` model sharing the target's vocab works.  Its
+      cache is threaded through the carry and rolled back with the
+      same family-aware machinery (it runs k + 1 draft steps so a
+      fully-accepted round leaves it exactly one token behind the new
+      input, like the target).
+    * a callable ``(hist, tok, pos) -> (B, k) drafts`` — test hook for
+      adversarial/custom proposal sources.
+
+    Signature (ngram/callable)::
+
+        spec_loop(params, cache, tokens, pos, live, stop_pos,
+                  sample_params, key, step0, eos_id, hist)
+            -> (cache, tokens, pos, live, hist,
+                block_tokens, block_live, accepted)
+
+    model drafter replaces the trailing ``hist`` with
+    ``(draft_params, draft_cache)`` and returns the advanced (rolled
+    back) ``draft_cache`` in ``hist``'s slot.
+
+    ``block_tokens``/``block_live`` are (steps * (k+1), B) in
+    chronological order — each round contributes its k + 1 block slots,
+    masked down to the committed prefix of live lanes.  ``accepted``
+    (steps, B) counts the drafts that survived each round (0..k, 0 for
+    dead lanes); committed tokens per live round = accepted + 1, so a
+    fully-rejecting drafter still advances every slot — speculation
+    degrades to plain decode, never below it.
+
+    PRNG: round ``i`` folds ``step0 + i`` exactly like the plain decode
+    loop, so block splits consume identical randomness
+    (``step_many(2); step_many(3)`` == ``step_many(5)``); greedy-only
+    batches pass ``key=None`` and consume none.  The sampled *stream*
+    intentionally differs from the non-speculative engine's (different
+    randomness consumption per emitted token) — only its distribution
+    is preserved.
+    """
+    from ..kernels.ops import verify_tokens
+    from ..kernels.speculative import draft_ngram
+    from ..models.api import (decode_fn, get_family, spec_restore_fn,
+                              spec_state_fn)
+
+    s_blk = k + 1
+    has_rec = hasattr(get_family(cfg), "spec_state")
+    model_draft = drafter == "model"
+    if model_draft:
+        assert draft_cfg is not None, "model drafter needs draft_cfg"
+        draft_ctx = draft_ctx or ctx
+        draft_has_rec = hasattr(get_family(draft_cfg), "spec_state")
+
+    def spec_forward(params, seq, cache, pos):
+        """Target logits over the block + cache with rollback handles.
+
+        Returns (logits (B, S, V), new_cache, ckpts): ``ckpts`` is None
+        for pure-KV families (chunked call, pos rewind) or the stacked
+        (S, B, ...) recurrent checkpoints (per-token inner scan).
+        """
+        if not has_rec:
+            logits, new_cache = decode_fn(params, seq, cache, pos, cfg, ctx)
+            return logits, new_cache, None
+
+        def body(c, j):
+            tok_j = jax.lax.dynamic_slice_in_dim(seq, j, 1, axis=1)
+            lg, nc = decode_fn(params, tok_j, c, pos + j, cfg, ctx)
+            return nc, (lg[:, 0], spec_state_fn(nc, cfg))
+
+        new_cache, (lgs, ckpts) = jax.lax.scan(body, cache,
+                                               jnp.arange(s_blk))
+        return jnp.moveaxis(lgs, 0, 1), new_cache, ckpts
+
+    def draft_with_model(draft_params, dcache, tok, pos):
+        """k+1 greedy draft steps (the extra step keeps the drafter's
+        consumed-token count able to cover a fully-accepted round)."""
+        def body(carry, j):
+            dc, t = carry
+            lg, dc = decode_fn(draft_params, t, dc, pos + j,
+                               draft_cfg, draft_ctx)
+            nxt = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            ck = spec_state_fn(dc, draft_cfg) if draft_has_rec else None
+            return (dc, nxt), (nxt[:, 0], ck)
+
+        (dc_fin, _), (toks, dckpts) = jax.lax.scan(
+            body, (dcache, tok), jnp.arange(s_blk))
+        return jnp.moveaxis(toks, 0, 1)[:, :k], dc_fin, dckpts
+
+    def spec_loop(params, cache, tokens, pos, live, stop_pos,
+                  sample_params, key, step0, eos_id, *aux):
+        temperature = sample_params["temperature"]
+        top_k = sample_params["top_k"]
+        if model_draft:
+            draft_params, draft_cache = aux
+            carry_aux = draft_cache
+        else:
+            (carry_aux,) = aux                      # hist (B, H)
+        b = tokens.shape[0]
+        lane = jnp.arange(b)
+        jdraft = jnp.arange(k)
+
+        def body(carry, i):
+            cache, tok, pos, live, aux = carry
+            # -- draft ------------------------------------------------
+            if model_draft:
+                drafts, aux, dckpts = draft_with_model(draft_params, aux,
+                                                       tok, pos)
+            elif callable(drafter):
+                aux = aux.at[lane, pos].set(tok[:, 0])
+                drafts = drafter(aux, tok, pos).astype(jnp.int32)
+            else:
+                drafts, aux = draft_ngram(aux, tok, pos, k, ngram)
+            # -- verify: ONE target pass over the whole block ---------
+            seq = jnp.concatenate([tok, drafts], axis=1)     # (B, k+1)
+            logits, new_cache, ckpts = spec_forward(params, seq, cache,
+                                                    pos)
+            step_key = (None if key is None
+                        else jax.random.fold_in(key, step0 + i))
+            next_tok, n_adv = verify_tokens(
+                logits.astype(jnp.float32), drafts, temperature, top_k,
+                step_key, backend=ctx.backend)
+            # -- truncate: a committed EOS draft or the slot's token
+            # budget ends the round early; the held token then matches
+            # what sequential decode would hold (the first uncommitted
+            # chain token, which IS the corresponding draft)
+            any_eos = jnp.any(drafts == eos_id, axis=1)
+            first_eos = jnp.argmax(drafts == eos_id, axis=1)     # (B,)
+            limit = jnp.where(any_eos, first_eos + 1, s_blk + 1)
+            n_fin = jnp.clip(jnp.minimum(jnp.minimum(n_adv, limit),
+                                         stop_pos - pos), 1, s_blk)
+            next_tok = jnp.where(n_fin < n_adv,
+                                 drafts[lane, n_fin - 1], next_tok)
+            # -- family-aware rollback of recurrent state -------------
+            if ckpts is not None:
+                sel = jax.tree_util.tree_map(lambda t: t[n_fin - 1, lane],
+                                             ckpts)
+                new_cache = spec_restore_fn(new_cache, sel, cfg)
+            if model_draft and draft_has_rec:
+                dsel = jax.tree_util.tree_map(lambda t: t[n_fin - 1, lane],
+                                              dckpts)
+                aux = spec_restore_fn(aux, dsel, draft_cfg)
+            # -- commit: accepted drafts join the history buffer ------
+            if not model_draft:
+                widx = jnp.clip(pos[:, None] + 1 + jdraft[None, :],
+                                0, aux.shape[1] - 1)
+                held = jnp.take_along_axis(aux, widx, axis=1)
+                wmask = live[:, None] & (jdraft[None, :]
+                                         < n_fin[:, None] - 1)
+                aux = aux.at[lane[:, None], widx].set(
+                    jnp.where(wmask, drafts, held))
+            committed = jnp.arange(s_blk)[None, :] < n_fin[:, None]
+            emit_live = live[:, None] & committed            # (B, k+1)
+            new_pos = jnp.where(live, pos + n_fin, pos)
+            new_tok = jnp.where(live, next_tok, tok[:, 0])[:, None]
+            new_live = live & (next_tok != eos_id) & (new_pos < stop_pos)
+            accepted = jnp.where(live, n_fin - 1, 0)
+            return (new_cache, new_tok, new_pos, new_live, aux), \
+                (seq, emit_live, accepted)
+
+        (cache, tokens, pos, live, carry_aux), (toks, emits, accepted) = \
+            jax.lax.scan(body, (cache, tokens, pos, live, carry_aux),
+                         jnp.arange(steps, dtype=jnp.int32))
+        # (steps, B, k+1) -> chronological (steps*(k+1), B)
+        block_tokens = toks.transpose(0, 2, 1).reshape(steps * s_blk, -1)
+        block_live = emits.transpose(0, 2, 1).reshape(steps * s_blk, -1)
+        return (cache, tokens, pos, live, carry_aux,
+                block_tokens, block_live, accepted)
+
+    return spec_loop
 
 
 def build_prefill_step(cfg: ModelConfig, ctx: QuantContext) -> Callable:

@@ -120,7 +120,7 @@ class TestPagedDenseConformance:
                        paged=True, page_size=4, num_pages=8)
         dense = _serve(setup, prompts, gen_len=6, max_len=24)
         assert paged.done == dense.done
-        assert paged.stats["peak_live"] == 2
+        assert paged.counters["peak_live"] == 2
 
     def test_prompt_spans_noncontiguous_pages(self):
         """A request admitted after an early finish inherits freed page
@@ -168,7 +168,7 @@ class TestPagedDenseConformance:
             while solo.live.any():
                 solo.step_many(4)
             solo.retire_finished()
-        assert eng.stats["admitted"] == 3
+        assert eng.counters["admitted"] == 3
         assert eng.done[-1] == solo.done[0]
 
 

@@ -1,0 +1,536 @@
+"""Speculative decoding conformance suite.
+
+Two layers of guarantees:
+
+1. The ``verify_tokens`` op: fused lowering == ref oracle bit-for-bit
+   (shared-noise exact match, see the oracle docstring for what that
+   does and does not verify), plus the semantic properties asserted
+   independently — the greedy chain IS the argmax chain, ``n_advance``
+   bounds, next-token consistency.
+
+2. The engine: greedy speculative streams are byte-identical to the
+   non-speculative engine for lm/ssm/hybrid × f32/int8 × dense/paged —
+   for the default prompt-lookup drafter, for a second-model drafter,
+   and for a deliberately-adversarial drafter (which must degrade to
+   ≥ 1 committed token per round and never corrupt KV/recurrent state:
+   byte-identity with full rejection is precisely the proof that the
+   family-aware rollback restored every consumed-but-rejected token).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.precision import PrecisionPolicy
+from repro.core.qtypes import FixedPointType
+from repro.dist.constrain import use_mesh
+from repro.kernels.ops import verify_tokens
+from repro.kernels.ref import verify_tokens_ref
+from repro.kernels.speculative import draft_ngram, verify_tokens_fused
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import Engine, quantize_for_serving
+from repro.models.api import get_family
+from repro.nn.context import QuantContext
+
+ARCHS = {"lm": "gemma-2b", "ssm": "mamba2-370m", "hybrid": "zamba2-1.2b"}
+_CACHE = {}
+
+
+def _setup(family: str, quant: str = "f32"):
+    key = (family, quant)
+    if key not in _CACHE:
+        cfg = get_config(ARCHS[family]).smoke()
+        if quant == "int8":
+            ctx = QuantContext(mode="int8",
+                               policy=PrecisionPolicy.uniform(
+                                   FixedPointType(8, 4)),
+                               compute_dtype=jnp.float32)
+        else:
+            ctx = QuantContext(compute_dtype=jnp.float32)
+        fam = get_family(cfg)
+        params = fam.init(jax.random.PRNGKey(0), cfg)
+        if quant == "int8":
+            params = quantize_for_serving(params, ctx)
+        _CACHE[key] = (cfg, ctx, params, make_local_mesh())
+    return _CACHE[key]
+
+
+def _prompts(cfg, seed=0, repetitive=False):
+    rs = np.random.RandomState(seed)
+    if repetitive:
+        # the workload where prompt-lookup shines: tiled patterns give
+        # the n-gram drafter matches from the first generated token
+        pat = rs.randint(0, cfg.vocab, (4,))
+        return {0: np.tile(pat, 3), 1: np.tile(pat[::-1], 2)}
+    return {0: rs.randint(0, cfg.vocab, (9,)),
+            1: rs.randint(0, cfg.vocab, (5,))}
+
+
+def _engine(setup, **kw):
+    cfg, ctx, params, mesh = setup
+    kw.setdefault("batch", 2)
+    kw.setdefault("max_len", 32)
+    return Engine(cfg, ctx, params, mesh, **kw)
+
+
+def _drain(eng, block=3):
+    while eng.live.any() or eng.waiting:
+        eng.step_many(block)
+    return [list(o) if o is not None else None for o in eng.outputs]
+
+
+# ===========================================================================
+class TestVerifyTokensOp:
+    """Fused == ref, plus the acceptance-rule semantics."""
+
+    def _case(self, seed, b, k, v, greedy_frac=0.5):
+        rs = np.random.RandomState(seed)
+        logits = jnp.asarray(rs.randn(b, k + 1, v), jnp.float32)
+        draft = jnp.asarray(rs.randint(0, v, (b, k)), jnp.int32)
+        temp = jnp.asarray(np.where(rs.rand(b) < greedy_frac, 0.0,
+                                    rs.rand(b) * 1.5 + 0.1), jnp.float32)
+        top_k = jnp.asarray(rs.randint(0, v + 1, (b,)), jnp.int32)
+        key = jax.random.PRNGKey(seed)
+        return logits, draft, temp, top_k, key
+
+    @given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 5),
+           k=st.integers(1, 6), v=st.integers(4, 40))
+    @settings(max_examples=20, deadline=None)
+    def test_fused_matches_ref(self, seed, b, k, v):
+        logits, draft, temp, top_k, key = self._case(seed, b, k, v)
+        for kk in (key, None):
+            nf, af = verify_tokens_fused(logits, draft, temp, top_k, kk)
+            nr, ar = verify_tokens_ref(logits, draft, temp, top_k, kk)
+            np.testing.assert_array_equal(np.asarray(nf), np.asarray(nr))
+            np.testing.assert_array_equal(np.asarray(af), np.asarray(ar))
+
+    @given(seed=st.integers(0, 2**31 - 1), b=st.integers(1, 4),
+           k=st.integers(1, 5), v=st.integers(4, 30))
+    @settings(max_examples=20, deadline=None)
+    def test_greedy_chain_property(self, seed, b, k, v):
+        """Greedy verification commits exactly the leading argmax-chain
+        matches and holds the first uncommitted chain token."""
+        logits, draft, _, _, _ = self._case(seed, b, k, v)
+        nt, na = verify_tokens_fused(logits, draft,
+                                     jnp.zeros((b,)), jnp.zeros((b,),
+                                                                jnp.int32),
+                                     None)
+        gl, dr = np.asarray(logits), np.asarray(draft)
+        for i in range(b):
+            chain = np.argmax(gl[i], axis=-1)           # (k+1,)
+            a = 0
+            while a < k and dr[i, a] == chain[a]:
+                a += 1
+            assert int(na[i]) == a + 1
+            assert int(nt[i]) == chain[a]
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_n_advance_bounds_and_validity(self, seed):
+        b, k, v = 4, 5, 16
+        logits, draft, temp, top_k, key = self._case(seed, b, k, v,
+                                                     greedy_frac=0.3)
+        nt, na = verify_tokens_fused(logits, draft, temp, top_k, key)
+        assert ((np.asarray(na) >= 1) & (np.asarray(na) <= k + 1)).all()
+        assert ((np.asarray(nt) >= 0) & (np.asarray(nt) < v)).all()
+
+    def test_registry_dispatch(self):
+        logits, draft, temp, top_k, key = self._case(3, 2, 3, 8)
+        a = verify_tokens(logits, draft, temp, top_k, key, backend="ref")
+        bq = verify_tokens(logits, draft, temp, top_k, key,
+                           backend="pallas")
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(bq[0]))
+        np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(bq[1]))
+
+    def test_deterministic_under_jit_and_scan(self):
+        logits, draft, temp, top_k, key = self._case(9, 3, 4, 12,
+                                                     greedy_frac=0.0)
+        eager = verify_tokens_fused(logits, draft, temp, top_k, key)
+        jitted = jax.jit(verify_tokens_fused)(logits, draft, temp, top_k,
+                                              key)
+
+        def body(c, _):
+            return c, verify_tokens_fused(logits, draft, temp, top_k, key)
+
+        _, scanned = jax.lax.scan(body, 0, jnp.arange(2))
+        for got in (jitted, (scanned[0][0], scanned[1][0])):
+            np.testing.assert_array_equal(np.asarray(eager[0]),
+                                          np.asarray(got[0]))
+            np.testing.assert_array_equal(np.asarray(eager[1]),
+                                          np.asarray(got[1]))
+
+
+# ===========================================================================
+class TestDraftNgram:
+    def test_copies_continuation_of_latest_match(self):
+        hist = jnp.asarray([[5, 6, 7, 8, 5, 6, 0, 0, 0, 0]], jnp.int32)
+        # committed: 5 6 7 8 5; cur token 6 at pos 5 → trailing bigram
+        # (5, 6) matched at t=1 → draft the continuation 7 8 5
+        drafts, h2 = draft_ngram(hist, jnp.asarray([[6]], jnp.int32),
+                                 jnp.asarray([5], jnp.int32), 3, 2)
+        np.testing.assert_array_equal(np.asarray(drafts), [[7, 8, 5]])
+        assert int(h2[0, 5]) == 6          # cur committed into hist
+
+    def test_no_match_falls_back_to_cur(self):
+        hist = jnp.asarray([[1, 2, 3, 4, 0, 0, 0, 0]], jnp.int32)
+        drafts, _ = draft_ngram(hist, jnp.asarray([[9]], jnp.int32),
+                                jnp.asarray([4], jnp.int32), 3, 2)
+        np.testing.assert_array_equal(np.asarray(drafts), [[9, 9, 9]])
+
+    def test_short_history_falls_back(self):
+        hist = jnp.zeros((1, 8), jnp.int32)
+        drafts, _ = draft_ngram(hist, jnp.asarray([[3]], jnp.int32),
+                                jnp.asarray([0], jnp.int32), 2, 2)
+        np.testing.assert_array_equal(np.asarray(drafts), [[3, 3]])
+
+
+# ===========================================================================
+class TestGreedyEquivalence:
+    """Speculative greedy output == the target's argmax stream, for
+    every family × quant × cache layout the engine serves."""
+
+    @pytest.mark.parametrize("family,quant,paged", [
+        ("lm", "f32", False),
+        ("lm", "f32", True),
+        pytest.param("lm", "int8", False, marks=pytest.mark.slow),
+        pytest.param("lm", "int8", True, marks=pytest.mark.slow),
+        pytest.param("ssm", "f32", False, marks=pytest.mark.slow),
+        pytest.param("ssm", "f32", True, marks=pytest.mark.slow),
+        pytest.param("ssm", "int8", False, marks=pytest.mark.slow),
+        pytest.param("ssm", "int8", True, marks=pytest.mark.slow),
+        pytest.param("hybrid", "f32", False, marks=pytest.mark.slow),
+        pytest.param("hybrid", "f32", True, marks=pytest.mark.slow),
+        pytest.param("hybrid", "int8", False, marks=pytest.mark.slow),
+        pytest.param("hybrid", "int8", True, marks=pytest.mark.slow),
+    ])
+    def test_spec_stream_matches_plain_engine(self, family, quant, paged):
+        setup = _setup(family, quant)
+        kw = dict(paged=True, page_size=8) if paged else {}
+        for rep in (False, True):
+            prompts = _prompts(setup[0], seed=2, repetitive=rep)
+            with use_mesh(setup[3]):
+                base = _engine(setup, **kw)
+                base.add_requests(prompts, gen_len=10)
+                base.step_many(10)
+
+                spec = _engine(setup, spec=True, spec_k=3, **kw)
+                spec.add_requests(prompts, gen_len=10)
+                while spec.live.any():
+                    spec.step_many(2)
+            assert spec.outputs == base.outputs, \
+                f"greedy divergence (repetitive={rep})"
+            np.testing.assert_array_equal(spec.pos, base.pos)
+            np.testing.assert_array_equal(spec.live, base.live)
+
+    def test_repetitive_stream_accepts_drafts(self):
+        """On the repetitive workload the prompt-lookup drafter must
+        actually land accepted drafts (otherwise the equivalence tests
+        only ever exercise the full-rejection path)."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=2, repetitive=True)
+        with use_mesh(setup[3]):
+            spec = _engine(setup, spec=True, spec_k=3)
+            spec.add_requests(prompts, gen_len=12)
+            while spec.live.any():
+                spec.step_many(2)
+        assert spec.stats()["accepted_per_step"] > 0.5
+
+    def test_block_split_invariance_greedy(self):
+        """Cutting the same generation into different spec-block sizes
+        changes nothing (scan-carry correctness across host syncs)."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=4, repetitive=True)
+        with use_mesh(setup[3]):
+            a = _engine(setup, spec=True, spec_k=3)
+            a.add_requests(prompts, gen_len=12)
+            while a.live.any():
+                a.step_many(4)
+            b = _engine(setup, spec=True, spec_k=3)
+            b.add_requests(prompts, gen_len=12)
+            while b.live.any():
+                b.step_many(1)
+        assert a.outputs == b.outputs
+
+    def test_eos_inside_accepted_drafts_kills_slot(self):
+        """An EOS that arrives as an *accepted draft* mid-round stops
+        the stream exactly where sequential decode would."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=2, repetitive=True)
+        with use_mesh(setup[3]):
+            probe = _engine(setup, spec=True, spec_k=3)
+            probe.add_requests({0: prompts[0]}, gen_len=12)
+            while probe.live.any():
+                probe.step_many(2)
+            stream = probe.outputs[0]
+            cut = next((i for i in range(1, len(stream))
+                        if stream[i] not in stream[:i]), None)
+            if cut is None:
+                pytest.skip("stream has no fresh token to use as eos")
+            eos = stream[cut]
+
+            base = _engine(setup, eos_id=eos)
+            base.add_requests({0: prompts[0]}, gen_len=12)
+            base.step_many(12)
+            spec = _engine(setup, spec=True, spec_k=3, eos_id=eos)
+            spec.add_requests({0: prompts[0]}, gen_len=12)
+            while spec.live.any():
+                spec.step_many(2)
+        assert spec.outputs[0] == base.outputs[0] == stream[:cut]
+        assert not spec.live[0]
+
+
+# ===========================================================================
+class TestAdversarialDrafter:
+    """A drafter that proposes garbage must cost correctness nothing:
+    ≥ 1 committed token per live round, byte-identical output (which is
+    the proof that rejected tokens' KV writes / recurrent-state
+    consumption were fully rolled back), isolated neighbours."""
+
+    @staticmethod
+    def _wrong(hist, tok, pos, k=3, vocab=512):
+        # shift-by-prime proposals: essentially never the argmax
+        j = jnp.arange(1, k + 1, dtype=jnp.int32)[None, :]
+        return (tok + 7919 * j) % vocab
+
+    @pytest.mark.parametrize("family,paged", [
+        ("lm", False),
+        ("lm", True),
+        pytest.param("ssm", False, marks=pytest.mark.slow),
+        pytest.param("ssm", True, marks=pytest.mark.slow),
+        pytest.param("hybrid", False, marks=pytest.mark.slow),
+        pytest.param("hybrid", True, marks=pytest.mark.slow),
+    ])
+    def test_full_rejection_degrades_to_plain_decode(self, family, paged):
+        setup = _setup(family)
+        kw = dict(paged=True, page_size=8) if paged else {}
+        prompts = _prompts(setup[0], seed=5)
+        with use_mesh(setup[3]):
+            base = _engine(setup, **kw)
+            base.add_requests(prompts, gen_len=8)
+            base.step_many(8)
+
+            spec = _engine(setup, spec=True, spec_k=3,
+                           drafter_fn=self._wrong, **kw)
+            spec.add_requests(prompts, gen_len=8)
+            rounds = 0
+            while spec.live.any():
+                spec.step_many(1)
+                rounds += 1
+        assert spec.outputs == base.outputs
+        st = spec.stats()
+        # every live round commits at least one token...
+        assert st["gen_tokens"] >= st["verify_steps"]
+        # ...and with this drafter, at most barely more (full rejection)
+        assert st["accepted_per_step"] <= 0.25
+        assert rounds <= 8
+
+    def test_recycled_slot_after_rejections_starts_clean(self):
+        """finish() + re-admission under speculation: the new request
+        must see none of the previous occupant's state, and the live
+        neighbour must be undisturbed (same invariants as the plain
+        decode loop, now with k+1-row writes per round)."""
+        setup = _setup("lm")
+        cfg = setup[0]
+        rs = np.random.RandomState(6)
+        p_old, p_live, p_new = (rs.randint(0, cfg.vocab, (n,))
+                                for n in (7, 6, 8))
+        with use_mesh(setup[3]):
+            eng = _engine(setup, spec=True, spec_k=3)
+            eng.add_requests({0: p_old, 1: p_live}, gen_len=12)
+            eng.step_many(2)
+            eng.finish(0)
+            eng.add_requests({0: p_new}, gen_len=6)
+            while eng.live.any():
+                eng.step_many(2)
+
+            solo = _engine(setup, spec=True, spec_k=3)
+            solo.add_requests({0: p_new}, gen_len=6)
+            while solo.live.any():
+                solo.step_many(2)
+
+            undisturbed = _engine(setup, spec=True, spec_k=3)
+            undisturbed.add_requests({0: p_old, 1: p_live}, gen_len=12)
+            while undisturbed.live.any():
+                undisturbed.step_many(2)
+        assert eng.outputs[0] == solo.outputs[0]
+        assert eng.outputs[1] == undisturbed.outputs[1]
+
+
+# ===========================================================================
+class TestModelDrafter:
+    @pytest.mark.parametrize("draft_family", [
+        "lm",
+        pytest.param("ssm", marks=pytest.mark.slow),
+    ])
+    def test_draft_model_preserves_greedy_stream(self, draft_family):
+        """A second-model drafter (KV or recurrent) with different
+        weights: partial acceptance, identical output — exercising the
+        drafter's own family-aware rollback path."""
+        setup = _setup("lm")
+        cfg, ctx, params, mesh = setup
+        d_cfg = get_config(ARCHS[draft_family]).smoke()
+        assert d_cfg.vocab == cfg.vocab
+        d_params = get_family(d_cfg).init(jax.random.PRNGKey(11), d_cfg)
+        prompts = _prompts(cfg, seed=7)
+        with use_mesh(mesh):
+            base = _engine(setup)
+            base.add_requests(prompts, gen_len=8)
+            base.step_many(8)
+
+            spec = _engine(setup, spec=True, spec_k=3,
+                           spec_draft=(d_cfg, d_params, ctx))
+            spec.add_requests(prompts, gen_len=8)
+            while spec.live.any():
+                spec.step_many(2)
+        assert spec.outputs == base.outputs
+
+    def test_vocab_mismatch_rejected(self):
+        import dataclasses
+        setup = _setup("lm")
+        cfg, ctx, params, mesh = setup
+        d_cfg = dataclasses.replace(get_config("gemma-2b").smoke(),
+                                    vocab=cfg.vocab + 1)
+        with use_mesh(mesh):
+            with pytest.raises(ValueError, match="vocab"):
+                _engine(setup, spec=True,
+                        spec_draft=(d_cfg, None, ctx))
+
+
+# ===========================================================================
+class TestSampledSpec:
+    def test_deterministic_and_block_split_invariant(self):
+        """Sampled speculation is reproducible under a fixed seed and
+        invariant to how rounds are cut into blocks (per-round fold_in,
+        same contract as the plain decode loop)."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=8, repetitive=True)
+        outs = []
+        for blocks in ([4], [1, 1, 1, 1], [2, 2]):
+            with use_mesh(setup[3]):
+                eng = _engine(setup, spec=True, spec_k=3, seed=13)
+                eng.add_requests(prompts, gen_len=10,
+                                 temperature={0: 0.9, 1: 1.2},
+                                 top_k={0: 7, 1: 0})
+                for nb in blocks:
+                    eng.step_many(nb)
+                while eng.live.any():
+                    eng.step_many(1)
+            outs.append([list(o) for o in eng.outputs])
+        assert outs[0] == outs[1] == outs[2]
+
+    def test_mixed_batch_keeps_greedy_lane_exact(self):
+        """One spec batch mixing a greedy and a sampled slot: the greedy
+        lane must still be byte-identical to the non-speculative engine
+        (the sampled lane's noise consumption must not leak into it)."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=11, repetitive=True)
+        kw = dict(gen_len=10, temperature={0: 0.0, 1: 1.1},
+                  top_k={0: 0, 1: 5})
+        with use_mesh(setup[3]):
+            spec = _engine(setup, spec=True, spec_k=3, seed=5)
+            spec.add_requests(prompts, **kw)
+            while spec.live.any():
+                spec.step_many(2)
+            base = _engine(setup, seed=5)
+            base.add_requests(prompts, **kw)
+            base.step_many(10)
+        assert spec.outputs[0] == base.outputs[0]
+        assert len(spec.outputs[1]) == 10
+
+    def test_top_k_one_equals_greedy_stream(self):
+        """top_k=1 collapses the sampled path onto the argmax chain —
+        the speculative sampled stream must equal the greedy one."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=9, repetitive=True)
+        with use_mesh(setup[3]):
+            greedy = _engine(setup, spec=True, spec_k=3)
+            greedy.add_requests(prompts, gen_len=10)
+            while greedy.live.any():
+                greedy.step_many(2)
+            sampled = _engine(setup, spec=True, spec_k=3)
+            sampled.add_requests(prompts, gen_len=10, temperature=0.7,
+                                 top_k=1)
+            while sampled.live.any():
+                sampled.step_many(2)
+        assert sampled.outputs == greedy.outputs
+
+
+# ===========================================================================
+class TestTelemetry:
+    def test_stats_and_request_log(self):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=10, repetitive=True)
+        with use_mesh(setup[3]):
+            eng = _engine(setup, spec=True, spec_k=3)
+            for s, p in prompts.items():
+                eng.submit(p, gen_len=6)
+            eng.try_admit()
+            while eng.live.any() or eng.waiting:
+                eng.step_many(2)
+            eng.retire_finished()
+        st = eng.stats()
+        assert st["requests"] == 2 and st["admitted"] == 2
+        assert st["gen_tokens"] == 12
+        assert st["decode_tok_per_s"] > 0
+        assert st["verify_steps"] > 0
+        assert 0 <= st["accepted_per_step"] <= 3
+        assert len(eng.request_log) == 2
+        for row in eng.request_log:
+            assert row["ttft_s"] >= 0 and row["gen_tokens"] == 6
+
+    def test_drafter_without_spec_rejected(self):
+        """A drafter with spec=False would silently never run — the
+        engine must refuse the inconsistent combination."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            with pytest.raises(ValueError, match="spec"):
+                _engine(setup, drafter_fn=lambda h, t, p: t)
+
+    def test_deferred_retirement_does_not_skew_throughput(self):
+        """finish() long after generation ended must report the decode
+        window (admission → live drop), not the idle gap."""
+        import time as _time
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], seed=14)
+        with use_mesh(setup[3]):
+            eng = _engine(setup)
+            eng.add_requests({0: prompts[0]}, gen_len=4)
+            eng.step_many(4)               # jit warmup round
+            eng.finish(0)
+            eng.add_requests({0: prompts[0]}, gen_len=4)
+            eng.step_many(4)
+            assert not eng.live[0]
+            _time.sleep(0.3)               # idle gap before retirement
+            eng.finish(0)
+        row = eng.request_log[-1]
+        assert row["decode_s"] < 0.25, \
+            f"idle gap leaked into decode_s ({row['decode_s']:.3f}s)"
+
+    def test_spec_with_continuous_batching(self):
+        """More requests than lanes, through the admission queue, under
+        speculation: every request's stream matches the non-speculative
+        engine's (retirement timing differs, so compare as sets)."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        rs = np.random.RandomState(12)
+        prompts = [rs.randint(0, cfg.vocab, (4 + (i % 3),))
+                   for i in range(5)]
+        with use_mesh(setup[3]):
+            base = _engine(setup)
+            for p in prompts:
+                base.submit(p, gen_len=6)
+            base.try_admit()
+            _drain(base, block=4)
+            base.retire_finished()
+
+            spec = _engine(setup, spec=True, spec_k=3)
+            for p in prompts:
+                spec.submit(p, gen_len=6)
+            spec.try_admit()
+            _drain(spec, block=2)
+            spec.retire_finished()
+        assert sorted(map(tuple, spec.done)) == sorted(map(tuple,
+                                                           base.done))
