@@ -23,6 +23,15 @@ concurrent requests, and page utilization; asserts the paged engine
 reaches ≥2x peak concurrency (or ≥1.5x admitted-tokens/s) at the same
 row budget.
 
+``run_long_context`` measures the split-KV latency knob at ≥64 pages
+per slot: decode attention over a long page chain, unsplit (the serial
+one-page-per-step schedule today's kernel executes — ``kv_split=1,
+pages_per_step=1`` of the XLA schedule lowering, whose ``lax.scan``
+carries the same dependence chain) vs the flash-decoding split chosen
+by the cost model.  Asserts ≥1.5x decode tok/s; reports the resolved
+``(kv_split, pages_per_step)`` pair so BENCH_serving.json records the
+knob the model picked, not just the win.
+
 ``run_spec`` measures speculative decoding on a repetitive (code-like)
 workload — the traffic shape where prompt-lookup drafting shines: the
 greedy continuation keeps revisiting n-grams already in the history, so
@@ -269,6 +278,77 @@ def run_paged(gen_len=8, max_len=48, page_size=8, dense_batch=2,
     return rows
 
 
+def run_long_context(batch=4, hq=4, hkv=1, d=64, page_size=8, npages=64,
+                     iters=100):
+    """Long-context decode: split-KV flash decoding vs the serial chain.
+
+    A decode-shaped attention step (S = 1, MQA like the gemma smoke
+    model) against ``npages`` pages per slot — the regime the
+    fused-loop engine hits at long context, where today's paged kernel
+    walks its block table one page per grid step.  Both arms run the
+    XLA lowering of the op (:mod:`repro.kernels` backend ``"xla"``), so
+    the comparison isolates the *schedule*: the unsplit arm's scan IS
+    the serial kernel's dependence chain (one page per step), the split
+    arm runs the cost-model-chosen ``(kv_split, pages_per_step)`` point
+    — partitions batched per step, merged by the shared log-sum-exp
+    combine.  Interpret-mode Pallas walltime is deliberately NOT
+    compared: on CPU it measures the interpreter's per-step array
+    traffic, not the schedule (the kernel's conformance is covered in
+    tests/test_split_kv.py instead).
+
+    Asserts the knob's reason to exist: ≥1.5x decode tok/s at ≥64
+    pages per slot.
+    """
+    from repro.kernels.flash_attention import (auto_pages_per_step,
+                                               choose_kv_split)
+    from repro.kernels.ops import paged_attention
+
+    assert npages >= 64, "long-context bench contract: >=64 pages/slot"
+    rs = np.random.RandomState(0)
+    q = jnp.asarray(rs.randn(batch, hq, 1, d), jnp.float32)
+    kp = jnp.asarray(rs.randn(npages + 1, hkv, page_size, d), jnp.float32)
+    vp = jnp.asarray(rs.randn(npages + 1, hkv, page_size, d), jnp.float32)
+    # physically shuffled pages per slot (the table's whole point) and
+    # near-full contexts: the last page partially filled per slot
+    bt = jnp.asarray(np.stack([rs.permutation(npages)
+                               for _ in range(batch)]), jnp.int32)
+    qpos = jnp.asarray(npages * page_size - 1
+                       - np.arange(batch) * (page_size // 2), jnp.int32)
+
+    t_auto = auto_pages_per_step(page_size, npages)
+    s_auto = choose_kv_split(npages * page_size, npages, hkv, batch=batch,
+                             pages_per_step=t_auto)
+
+    def time_arm(split, tile):
+        def step():
+            return paged_attention(q, kp, vp, bt, qpos, backend="xla",
+                                   kv_split=split, pages_per_step=tile)
+        step().block_until_ready()              # compile (untimed)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = step()
+        out.block_until_ready()
+        return (time.perf_counter() - t0) / iters
+
+    rows = []
+    for name, split, tile in [("unsplit_serial_chain", 1, 1),
+                              ("split_kv", s_auto, t_auto)]:
+        dt = time_arm(split, tile)
+        rows.append({"bench": "serving_long_context", "name": name,
+                     "kv_split": split, "pages_per_step": tile,
+                     "pages_per_slot": npages, "page_size": page_size,
+                     "us_per_call": dt * 1e6,
+                     "tok_per_s": batch / dt})
+    speedup = rows[1]["tok_per_s"] / rows[0]["tok_per_s"]
+    rows[1]["speedup_vs_unsplit"] = speedup
+    # acceptance: the reuse-factor knob must buy real long-context
+    # decode latency — >=1.5x tok/s over the serial page chain
+    assert speedup >= 1.5, \
+        (f"split-KV shows no long-context win (speedup {speedup:.2f} "
+         f"at kv_split={s_auto}, pages_per_step={t_auto})")
+    return rows
+
+
 #: prompt seeds whose tiled patterns the smoke model continues with
 #: strongly repetitive greedy streams — the workload class speculation
 #: targets (code/template/extraction-style continuations, where most
@@ -381,6 +461,7 @@ def run():
     rows.extend(run_prefill())
     rows.extend(run_decode())
     rows.extend(run_paged())
+    rows.extend(run_long_context())
     rows.extend(run_spec())
     return rows
 

@@ -6,17 +6,31 @@ exists (CPU-relative), and every other measured quantity folded into the
 paper-scale table) live in the dry-run artifacts; ``--with-roofline``
 appends their summary lines if artifacts/dryrun exists.
 
-``--json PATH`` additionally writes the SAME rows machine-readably:
-one ``BENCH_<name>.json`` per bench module (``BENCH_serving.json``
-among them) plus a combined ``BENCH_all.json``, all under PATH.  CI's
-full job runs this and uploads the directory, so the bench trajectory
-is an artifact instead of scrollback.
+JSON artifacts are written BY DEFAULT: one ``BENCH_<name>.json`` per
+bench module (``BENCH_serving.json`` among them) plus a combined
+``BENCH_all.json``, all at the repo root — so every bench run (local or
+CI) lands in-repo and the perf trajectory accumulates in version
+control instead of scrollback.  When a previous ``BENCH_<name>.json``
+exists, per-row deltas against it are printed before it is overwritten
+(``delta,<bench>/<name>,<key>,<old>-><new>,<pct>``).  ``--json PATH``
+redirects the artifacts; ``--json none`` disables them.
 """
 
 import argparse
 import glob
 import json
 import os
+
+#: default artifact directory: the repo root (parent of benchmarks/)
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: keys whose drift is worth a delta line (measured quantities, not
+#: configuration echoes)
+_DELTA_KEYS = ("us_per_call", "tok_per_s", "prompt_tok_per_s",
+               "admitted_tok_per_s", "ms_total", "jit_calls_per_token",
+               "speedup_vs_unsplit", "speedup_vs_fused_loop",
+               "accepted_per_step", "capacity_vs_dense", "mean_row_fill",
+               "greedy_agreement_vs_fp32")
 
 
 def _fmt_derived(row):
@@ -32,16 +46,45 @@ def _fmt_derived(row):
     return ";".join(parts)
 
 
+def _print_deltas(path, rows):
+    """Compare fresh rows against the previous artifact at ``path``.
+
+    One line per drifted measured key — the in-repo perf trajectory's
+    diff view: a regression shows up in the bench output (and the git
+    diff of the artifact) without opening either JSON.
+    """
+    try:
+        with open(path) as f:
+            prev = {(r.get("bench"), r.get("name")): r for r in json.load(f)}
+    except (OSError, ValueError):
+        return
+    for row in rows:
+        old = prev.get((row.get("bench"), row.get("name")))
+        if not old:
+            continue
+        for k in _DELTA_KEYS:
+            a, b = old.get(k), row.get(k)
+            if not (isinstance(a, (int, float)) and isinstance(b, (int, float))):
+                continue
+            if b == a:
+                continue
+            pct = (b - a) / a * 100 if a else float("inf")
+            print(f"delta,{row['bench']}/{row['name']},{k},"
+                  f"{a:.6g}->{b:.6g},{pct:+.1f}%")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     ap.add_argument("--with-roofline", action="store_true")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write BENCH_<name>.json per bench plus a "
-                         "combined BENCH_all.json under PATH (created if "
-                         "missing) — the CSV rows, machine-readable")
+    ap.add_argument("--json", default=_REPO_ROOT, metavar="PATH",
+                    help="where BENCH_<name>.json per bench + combined "
+                         "BENCH_all.json land (default: the repo root, so "
+                         "runs accumulate in-repo); 'none' disables")
     args, _ = ap.parse_known_args()
+    if args.json == "none":
+        args.json = None
 
     from . import (bench_backends, bench_lut_tables, bench_qmatmul,
                    bench_quant_accuracy, bench_reuse_factor, bench_serving)
@@ -69,12 +112,23 @@ def main() -> None:
             us = f"{us:.3f}" if isinstance(us, float) else ""
             print(f"{row['bench']}/{row['name']},{us},{_fmt_derived(row)}")
         if args.json:
-            with open(os.path.join(args.json,
-                                   f"BENCH_{name}.json"), "w") as f:
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            _print_deltas(path, rows)
+            with open(path, "w") as f:
                 json.dump(rows, f, indent=2, default=float)
     if args.json:
-        with open(os.path.join(args.json, "BENCH_all.json"), "w") as f:
-            json.dump(all_rows, f, indent=2, default=float)
+        # merge into the existing combined artifact: a --only run must
+        # refresh its selected benches without dropping the committed
+        # trajectory of the unselected ones
+        all_path = os.path.join(args.json, "BENCH_all.json")
+        try:
+            with open(all_path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+        merged.update(all_rows)
+        with open(all_path, "w") as f:
+            json.dump(merged, f, indent=2, default=float)
 
     if args.with_roofline and os.path.isdir("artifacts/dryrun"):
         for fn in sorted(glob.glob("artifacts/dryrun/*.json")):

@@ -21,6 +21,15 @@ indirection or page-gather overhead and a lone request cannot benefit
 from pooling — page in when traffic is mixed and concurrent, not for a
 single stream.
 
+Split-KV paged attention (``--kv-split`` / ``--pages-per-step``,
+default ``auto``): the kernel-side reuse-factor knob for long-context
+decode — each slot's page chain is cut into ``kv_split`` parallel
+flash-decoding partitions (merged by a log-sum-exp combine) and each
+grid step fetches a ``pages_per_step``-page tile, double-buffered.
+``auto`` resolves both from a cached cost model per cache geometry;
+the exit stats table prints the resolved pair.  ``--kv-split 1
+--pages-per-step 1`` reproduces the pre-split kernel byte-for-byte.
+
 Speculative decoding (``--spec``): a drafter proposes ``--spec-k``
 tokens per round (prompt-lookup by default; ``--spec-draft <arch>``
 uses a second model) and the target verifies them all with ONE forward
@@ -64,6 +73,13 @@ if __name__ == "__main__":
               "--batch", "8", "--prompt-len", "16", "--gen-len", "16",
               "--decode-block", "8", "--paged", "--page-size", "8",
               "--num-pages", "17"])
+        print("\n== paged + split-KV: auto-resolved reuse-factor knob "
+              "(see 'kv split / pages per step' in the stats table) ==")
+        main(["--arch", "gemma-2b", "--smoke", "--requests", "8",
+              "--batch", "8", "--prompt-len", "16", "--gen-len", "16",
+              "--decode-block", "8", "--paged", "--page-size", "4",
+              "--num-pages", "34", "--kv-split", "auto",
+              "--pages-per-step", "auto"])
         print("\n== speculative decoding: prompt-lookup drafts, "
               "one verify pass per round ==")
         main(["--arch", "gemma-2b", "--smoke", "--requests", "8",

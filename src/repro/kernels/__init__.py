@@ -5,10 +5,17 @@ Each kernel ships three artifacts (per the de-specialization discipline):
 * ``<name>.py`` — the Pallas lowering (``pl.pallas_call`` + BlockSpec),
 * ``ref.py``    — the pure-jnp oracle (numerics contract + CPU fallback),
 * ``ops.py``    — the backend-dispatched public wrapper.
+
+The split-KV helpers (``choose_kv_split``, ``auto_pages_per_step``,
+``combine_splits``) are exported alongside the ops: they are the
+reuse-factor knob's cost model and the partial-merge formula shared
+between the Pallas lowering and the ref oracle.
 """
 
-from .ops import (attention, lut_activation, paged_attention, qmatmul,
+from .ops import (attention, auto_pages_per_step, choose_kv_split,
+                  combine_splits, lut_activation, paged_attention, qmatmul,
                   sample_tokens, verify_tokens)
 
-__all__ = ["attention", "lut_activation", "paged_attention", "qmatmul",
+__all__ = ["attention", "auto_pages_per_step", "choose_kv_split",
+           "combine_splits", "lut_activation", "paged_attention", "qmatmul",
            "sample_tokens", "verify_tokens"]

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from ..core.registry import get_impl, register_op
 from ..core.tables import TableSpec
 from . import ref as _ref
-from .flash_attention import flash_attention_pallas, paged_attention_pallas
+from .flash_attention import (flash_attention_pallas, paged_attention_pallas,
+                              paged_attention_xla)
 from .lut_activation import lut_activation_pallas
 from .qmatmul import qmatmul_pallas
 from .sampling import sample_tokens_fused
@@ -72,6 +73,13 @@ register_op("attention", "ref")(_ref.flash_attention_ref)
 
 register_op("paged_attention", "ref")(_ref.paged_attention_ref)
 
+# third lowering: the split-KV *schedule* (scan over page tiles,
+# partition axis batched, log-sum-exp combine) through plain XLA — the
+# portable way to run/measure the flash-decoding schedule on non-TPU
+# hosts, and the serial-chain baseline (split=1, tile=1) the
+# long-context bench compares against.
+register_op("paged_attention", "xla")(paged_attention_xla)
+
 
 @register_op("paged_attention", "pallas")
 def _paged_attention_pallas(q, k_pages, v_pages, block_tables, qpos, *,
@@ -79,6 +87,12 @@ def _paged_attention_pallas(q, k_pages, v_pages, block_tables, qpos, *,
     return paged_attention_pallas(q, k_pages, v_pages, block_tables, qpos,
                                   softmax_scale=softmax_scale,
                                   interpret=_interpret(), **kw)
+
+
+#: re-exported tuning helpers (the reuse-factor knob's cost model and
+#: the split-merge formula shared with the ref oracle)
+from .flash_attention import (auto_pages_per_step, choose_kv_split,  # noqa: E402
+                              combine_splits)
 
 
 @register_op("attention", "pallas")
@@ -120,8 +134,9 @@ def attention(q, k, v, *, causal: bool = True, softmax_scale=None,
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, qpos, *,
-                    softmax_scale=None, backend: Optional[str] = None,
-                    **kw) -> jnp.ndarray:
+                    softmax_scale=None, kv_split: Optional[int] = None,
+                    pages_per_step: Optional[int] = None,
+                    backend: Optional[str] = None, **kw) -> jnp.ndarray:
     """Attention over a block-table-indexed KV page pool.
 
     q (B, Hq, S, D) against k/v pages (P, Hkv, page_size, D) addressed
@@ -130,7 +145,20 @@ def paged_attention(q, k_pages, v_pages, block_tables, qpos, *,
     the decode step, S > 1 a chunked-prefill step — one op serves both,
     which is what lets the serving engine admit mixed prefill/decode
     batches over one shared pool.
+
+    ``kv_split`` / ``pages_per_step`` — the kernel-level reuse-factor
+    knob (see :func:`repro.kernels.flash_attention.choose_kv_split`):
+    the Pallas lowering cuts each slot's block table into ``kv_split``
+    parallel flash-decoding partitions merged by a log-sum-exp combine,
+    fetching ``pages_per_step`` pages per grid step.  ``None`` = pick
+    from the cached cost model.  The ``ref`` backend is knob-invariant
+    by construction: it only switches to the explicit split recurrence
+    when a knob is set > 1 (the oracle the kernel is tested against).
     """
+    if kv_split is not None:
+        kw["kv_split"] = kv_split
+    if pages_per_step is not None:
+        kw["pages_per_step"] = pages_per_step
     return get_impl("paged_attention", backend)(
         q, k_pages, v_pages, block_tables, qpos,
         softmax_scale=softmax_scale, **kw)

@@ -18,7 +18,8 @@ import numpy as np
 from ..core.tables import TableSpec, get_table, table_lookup
 
 __all__ = ["lut_activation_ref", "qmatmul_ref", "flash_attention_ref",
-           "paged_attention_ref", "sample_tokens_ref", "verify_tokens_ref"]
+           "paged_attention_ref", "paged_attention_split_ref",
+           "sample_tokens_ref", "verify_tokens_ref"]
 
 
 def lut_activation_ref(x: jnp.ndarray, spec: TableSpec) -> jnp.ndarray:
@@ -57,10 +58,116 @@ def qmatmul_ref(a_data: jnp.ndarray, b_data: jnp.ndarray,
     return y.astype(out_dtype)
 
 
+def paged_attention_split_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray,
+                              block_tables: jnp.ndarray,
+                              qpos: jnp.ndarray, *,
+                              softmax_scale: Optional[float] = None,
+                              kv_split: int = 1,
+                              pages_per_step: int = 1) -> jnp.ndarray:
+    """Split-KV oracle: the flash-decoding recurrence, op for op.
+
+    Mirrors :func:`repro.kernels.flash_attention._paged_split_kernel`
+    exactly — same tile order, same ``-1e30`` masking, same online
+    ``(m, l, acc)`` update per multi-page tile, and the SAME
+    :func:`~repro.kernels.flash_attention.combine_splits` merge (the
+    shared-formula rule: a re-derived merge — say log-space addition —
+    would drift far beyond ulps) — so the interpret-mode kernel must
+    match it to f32 ulp precision (rtol 3e-7, ~100x tighter than the
+    kernel suite's 2e-5 tolerance) at every ``(kv_split,
+    pages_per_step)`` point.  Bitwise identity is NOT promised across
+    the pair: XLA contracts the exp/multiply-add chains differently in
+    separately compiled programs, worth ~1 ulp.  Where the kernel
+    *skips* a fully-invisible tile, this oracle computes it and masks:
+    the update then degenerates to the exact identity (``alpha =
+    exp(0)``, all-zero probabilities), which is the property the skip
+    relies on.
+
+    The (b, h) python loops make it an eager-test oracle, not a
+    serving path; :func:`paged_attention_ref` (the registered ``ref``
+    backend) stays the vectorized softmax formula, which this function
+    must agree with to tolerance (asserted in tests/test_split_kv.py).
+    """
+    from .flash_attention import combine_splits
+    b, hq, s, d = q.shape
+    p_, hkv, ps, _ = k_pages.shape
+    np_ = block_tables.shape[1]
+    group = hq // hkv
+    assert hq % hkv == 0
+    rows = group * s
+    scale = (softmax_scale if softmax_scale is not None
+             else float(1.0 / np.sqrt(d)))
+
+    t = max(1, min(int(pages_per_step), np_))
+    tiles = -(-np_ // t)
+    split = max(1, min(int(kv_split), tiles))
+    nt = -(-tiles // split)
+    np_pad = split * nt * t
+    bt = jnp.asarray(block_tables, jnp.int32)
+    if np_pad > np_:
+        bt = jnp.pad(bt, ((0, 0), (0, np_pad - np_)))
+    qf = q.reshape(b, hkv, group, s, d).reshape(b, hkv, rows, d)
+    qpos = jnp.asarray(qpos, jnp.int32)
+
+    acc_p = np.empty((split, b, hkv), dtype=object)
+    m_p = np.empty((split, b, hkv), dtype=object)
+    l_p = np.empty((split, b, hkv), dtype=object)
+    for sp in range(split):
+        for bi in range(b):
+            for hi in range(hkv):
+                qbh = qf[bi, hi].astype(jnp.float32) * scale
+                m = jnp.full((rows, 1), -1e30, jnp.float32)
+                l = jnp.zeros((rows, 1), jnp.float32)
+                acc = jnp.zeros((rows, d), jnp.float32)
+                for it in range(nt):
+                    base = (sp * nt + it) * t
+                    k = jnp.concatenate(
+                        [k_pages[bt[bi, base + j], hi].astype(jnp.float32)
+                         for j in range(t)], axis=0)
+                    logits = jax.lax.dot_general(
+                        qbh, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    r = jax.lax.broadcasted_iota(jnp.int32, (rows, t * ps),
+                                                 0)
+                    qp = qpos[bi] + jax.lax.rem(r, s)
+                    kvpos = base * ps + jax.lax.broadcasted_iota(
+                        jnp.int32, (rows, t * ps), 1)
+                    mask = kvpos <= qp
+                    logits = jnp.where(mask, logits, -1e30)
+                    m_new = jnp.maximum(
+                        m, jnp.max(logits, axis=1, keepdims=True))
+                    p = jnp.exp(logits - m_new)
+                    p = jnp.where(mask, p, 0.0)
+                    alpha = jnp.exp(m - m_new)
+                    l = alpha * l + jnp.sum(p, axis=1, keepdims=True)
+                    v = jnp.concatenate(
+                        [v_pages[bt[bi, base + j], hi].astype(jnp.float32)
+                         for j in range(t)], axis=0)
+                    acc = alpha * acc + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    m = m_new
+                acc_p[sp, bi, hi], m_p[sp, bi, hi], l_p[sp, bi, hi] = \
+                    acc, m, l
+
+    def stack(cells):
+        return jnp.stack([jnp.stack([jnp.stack(list(cells[sp, bi]))
+                                     for bi in range(b)])
+                          for sp in range(split)])
+
+    acc_star, _, l_star = combine_splits(stack(acc_p), stack(m_p),
+                                         stack(l_p))
+    out = acc_star / jnp.maximum(l_star, 1e-30)
+    return out.astype(q.dtype).reshape(b, hkv, group, s, d) \
+              .reshape(b, hq, s, d)
+
+
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                         qpos: jnp.ndarray, *,
-                        softmax_scale: Optional[float] = None) -> jnp.ndarray:
+                        softmax_scale: Optional[float] = None,
+                        kv_split: Optional[int] = None,
+                        pages_per_step: Optional[int] = None) -> jnp.ndarray:
     """Block-table-indexed attention oracle (decode and chunked prefill).
 
     The de-specialized serving layout: K/V live in a shared pool of
@@ -85,7 +192,19 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     (exactly-zero softmax weight), so garbage in unallocated /
     not-yet-written page rows can never leak — including freshly
     recycled pages still holding a previous request's KV.
+
+    ``kv_split``/``pages_per_step`` > 1 route through
+    :func:`paged_attention_split_ref` — the explicit flash-decoding
+    recurrence + log-sum-exp combine that the split Pallas kernel must
+    match bit-for-bit.  Unset (None/1) keeps this function's one-shot
+    softmax formula: the ``ref`` backend never needs the latency knob,
+    only the semantics.
     """
+    if (kv_split or 1) > 1 or (pages_per_step or 1) > 1:
+        return paged_attention_split_ref(
+            q, k_pages, v_pages, block_tables, qpos,
+            softmax_scale=softmax_scale, kv_split=kv_split or 1,
+            pages_per_step=pages_per_step or 1)
     b, hq, s, d = q.shape
     p_, hkv, page_size, _ = k_pages.shape
     np_ = block_tables.shape[1]

@@ -44,6 +44,16 @@ realized at framework level, as a fused quantized dense pipeline:
   Dense mode still wins at tiny batches (no gather/table indirection,
   one request never fragments); paged mode wins the moment mixed-length
   traffic leaves dense slots half empty.
+* **Split-KV flash decoding** (``--kv-split`` / ``--pages-per-step``) —
+  the reuse-factor knob applied to the last serial hot path: on the
+  kernel path each slot's page chain is cut into ``kv_split`` parallel
+  online-softmax partitions (merged by a log-sum-exp combine) and each
+  grid step DMAs a ``pages_per_step``-page tile, double-buffered —
+  long-context decode latency stops scaling with the page chain.
+  ``auto`` (default) picks both from a cached rule4ml-style cost model
+  (:func:`repro.kernels.flash_attention.choose_kv_split`); the resolved
+  pair is reported in ``Engine.stats()``.  ``--kv-split 1
+  --pages-per-step 1`` is byte-identical to the pre-split kernel.
 * **Speculative decoding** (``--spec``) — the draft→verify pipeline on
   top of the de-specialized attention path: a drafter proposes
   ``--spec-k`` tokens per live slot (prompt-lookup self-speculation by
@@ -73,6 +83,7 @@ Usage (CPU-scale)::
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from collections import deque
 from typing import Dict, List, Optional
@@ -133,7 +144,8 @@ class Engine:
     def __init__(self, cfg, ctx, params, mesh, *, batch: int, max_len: int,
                  kv_bits=None, prefill_chunk: int = 16, eos_id: int = -1,
                  seed: int = 0, paged: bool = False, page_size: int = 16,
-                 num_pages: Optional[int] = None, spec: bool = False,
+                 num_pages: Optional[int] = None, kv_split="auto",
+                 pages_per_step="auto", spec: bool = False,
                  spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
                  drafter_fn=None):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
@@ -187,6 +199,31 @@ class Engine:
         else:
             self.cache = fam.init_cache(cfg, batch, max_len + margin,
                                         cache_dtype)
+        # split-KV reuse-factor knob: resolve once per cache geometry
+        # (explicit engine kwarg > ctx setting > cached cost model) and
+        # thread through the context so the fused decode loop AND the
+        # speculative verify pass hand the same split to the kernel.
+        # On non-TPU hosts the paged model path is gather+einsum, so
+        # the knob is telemetry-only there — but it is resolved
+        # identically so `Engine.stats()` reports what a TPU run of
+        # this exact geometry would execute.
+        self.kv_split = self.pages_per_step = None
+        if self.paged:
+            from ..kernels.flash_attention import _resolve_knobs
+            width = self.block_tables.shape[1]
+            req_t = (int(pages_per_step)
+                     if pages_per_step not in (None, "auto")
+                     else ctx.pages_per_step)
+            req_s = (int(kv_split) if kv_split not in (None, "auto")
+                     else ctx.kv_split)
+            hkv = getattr(cfg, "n_kv_heads", 0) or getattr(
+                cfg, "n_heads", 1)
+            t, split = _resolve_knobs(width, ps, max(1, hkv), batch,
+                                      req_s, req_t)
+            self.kv_split, self.pages_per_step = split, t
+            ctx = dataclasses.replace(ctx, kv_split=split,
+                                      pages_per_step=t)
+            self.ctx = ctx
         c_sh = named(cache_specs(self.cache, mesh), mesh)
         self.cache = jax.device_put(self.cache, c_sh)
         self.decode = jax.jit(build_serve_step(cfg, ctx))
@@ -785,6 +822,11 @@ class Engine:
             out["verify_steps"] = c["verify_steps"]
             out["accepted_per_step"] = (c["draft_accepted"]
                                         / max(c["verify_steps"], 1))
+        if self.paged:
+            # the resolved split-KV reuse factor this geometry runs
+            # with (cost-model choice unless pinned by flag/ctx)
+            out["kv_split"] = self.kv_split
+            out["pages_per_step"] = self.pages_per_step
         return out
 
 
@@ -829,6 +871,16 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page-pool size (default: batch*max_len/page_size, "
                          "the dense-equivalent HBM budget)")
+    ap.add_argument("--kv-split", default="auto",
+                    help="split-KV paged attention: number of parallel "
+                         "flash-decoding partitions per slot (the kernel-"
+                         "side reuse factor; 1 = today's serial page "
+                         "chain, byte-identical). 'auto' picks from a "
+                         "cached cost model (default)")
+    ap.add_argument("--pages-per-step", default="auto",
+                    help="KV pages DMA'd per grid step (multi-page tile, "
+                         "double-buffered); 'auto' sizes the tile to a "
+                         "~128-row MXU operand (default)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -877,11 +929,18 @@ def main(argv=None):
                 jax.random.PRNGKey(args.seed + 1), d_cfg)
             spec_draft = (d_cfg, d_params, ctx)
         max_len = args.prompt_len + args.gen_len + 1
+
+        def knob(v):
+            return "auto" if v == "auto" else int(v)
+
         eng = Engine(cfg, ctx, params, mesh, batch=args.batch,
                      max_len=max_len, kv_bits=args.kv_bits,
                      prefill_chunk=args.prefill_chunk, seed=args.seed,
                      paged=args.paged, page_size=args.page_size,
-                     num_pages=args.num_pages, spec=args.spec,
+                     num_pages=args.num_pages,
+                     kv_split=knob(args.kv_split),
+                     pages_per_step=knob(args.pages_per_step),
+                     spec=args.spec,
                      spec_k=args.spec_k, spec_draft=spec_draft,
                      spec_ngram=args.spec_ngram)
 
@@ -905,7 +964,9 @@ def main(argv=None):
         eng.retire_finished()
         dt = time.perf_counter() - t0
         paged_note = (f" paged(ps={eng.allocator.page_size},"
-                      f"pages={eng.allocator.num_pages})"
+                      f"pages={eng.allocator.num_pages},"
+                      f"kv_split={eng.kv_split},"
+                      f"pages_per_step={eng.pages_per_step})"
                       if args.paged else " dense")
         spec_note = (f" spec(k={eng.spec_k},"
                      f"draft={args.spec_draft or 'ngram'})"
@@ -932,6 +993,9 @@ def print_stats_table(st: dict) -> None:
         rows.append(("verify rounds", f"{st['verify_steps']}"))
         rows.append(("drafts accepted/round",
                      f"{st['accepted_per_step']:.2f}"))
+    if "kv_split" in st:
+        rows.append(("kv split / pages per step",
+                     f"{st['kv_split']} / {st['pages_per_step']}"))
     width = max(len(k) for k, _ in rows)
     print("-- serving stats " + "-" * (width + 8))
     for k, v in rows:

@@ -9,6 +9,13 @@ point* gets its own KV cache during decode (weights shared, state not).
 Deviation from upstream (documented DESIGN.md): zamba2 concatenates the
 original embedding to the shared-block input and uses per-application LoRA
 deltas; we use a plain residual stream and exact weight sharing.
+
+Paged serving note: only the shared-block KV caches page (the engine's
+block table is broadcast across the G application points); mamba state
+stays dense per slot.  On the kernel path each application point's
+attention therefore runs the same split-KV flash-decoding as the lm
+family — ``ctx.kv_split``/``ctx.pages_per_step`` thread through
+``gqa_apply`` unchanged, G times per step.
 """
 
 from __future__ import annotations

@@ -6,6 +6,13 @@ the homogeneous body — each run of identical blocks is one ``lax.scan``
 over stacked params, so the HLO is depth-independent.  Decode maintains a
 per-layer KV cache scanned alongside the params (MLA uses the latent cache;
 GQA the standard (B, Hkv, S, Dh) pair).
+
+Paged decode rides the split-KV kernel: every layer's ``gqa_apply`` call
+resolves ``ctx.kv_split``/``ctx.pages_per_step`` against its block table,
+so one engine-level knob tunes the whole stack (and speculative
+verification, which is just an S = k+1 call of the same path).  MLA's
+absorbed decode scores against the gathered latent instead — the latent
+has no per-head pages to split (the paged MLA pool is (P, ps, lora)).
 """
 
 from __future__ import annotations

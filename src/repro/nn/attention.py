@@ -9,6 +9,11 @@ Three execution regimes per module:
   paper's LUT-exp is exercised end to end.
 * **decode** — single-token step against a pre-allocated KV cache
   (``dynamic_update_slice`` at ``pos``); O(S) einsums, no kernel needed.
+  The *paged* decode regime scatters K/V through per-slot block tables
+  instead and, on the kernel path, runs split-KV flash-decoding: the
+  ``ctx.kv_split``/``ctx.pages_per_step`` knob partitions each slot's
+  page chain into parallel online-softmax lanes merged by a
+  log-sum-exp combine (``repro.kernels.flash_attention``).
 * **cross** — encoder-decoder attention (whisper, llama-vision); KV come
   from the encoder stream and are position-encoding-free.
 
@@ -373,13 +378,22 @@ def gqa_apply(p, x: jnp.ndarray, d: AttnDims, ctx: QuantContext = DEFAULT_CTX,
         else:
             pages = {"k": _paged_write(pages["k"], page, row, k),
                      "v": _paged_write(pages["v"], page, row, v)}
-            if (ctx.backend == "pallas" and jax.default_backend() == "tpu"
-                    and d.causal):
+            use_kernel = (ctx.backend == "pallas"
+                          and jax.default_backend() == "tpu") \
+                or ctx.force_paged_kernel
+            if use_kernel and d.causal:
                 # TPU path: block-table-indexed flash kernel — pages are
-                # DMA'd on demand, the contiguous view never exists
+                # DMA'd on demand, the contiguous view never exists.
+                # ctx.kv_split / ctx.pages_per_step ride through here:
+                # the kernel partitions the block table into parallel
+                # flash-decoding lanes (None = cost-model auto).
+                # ``force_paged_kernel`` drives the same kernel in
+                # interpret mode off-TPU (CPU conformance suites).
                 from ..kernels.ops import paged_attention
                 y = paged_attention(q, pages["k"], pages["v"], bt, zeros,
-                                    backend=ctx.backend)
+                                    kv_split=ctx.kv_split,
+                                    pages_per_step=ctx.pages_per_step,
+                                    backend="pallas")
             else:
                 ck = _paged_gather(pages["k"], bt)
                 cv = _paged_gather(pages["v"], bt)

@@ -59,12 +59,31 @@ class QuantContext:
     #: quantization aimed at the dominant decode memory term); None = the
     #: cache dtype passed to init_cache (bf16 default).
     kv_cache_bits: Optional[int] = None
+    #: split-KV paged attention — the kernel-side reuse-factor pair.
+    #: ``kv_split`` cuts each slot's block table into that many parallel
+    #: flash-decoding partitions (merged by a log-sum-exp combine);
+    #: ``pages_per_step`` is the multi-page DMA tile per grid step.
+    #: None = resolve from the cached cost model
+    #: (:func:`repro.kernels.flash_attention.choose_kv_split`); 1/1 is
+    #: byte-for-byte the pre-split kernel.
+    kv_split: Optional[int] = None
+    pages_per_step: Optional[int] = None
+    #: route the paged f32 decode path through the Pallas kernel even
+    #: off-TPU (interpret mode) — the CPU conformance hook that lets the
+    #: engine suites drive the real block-table kernel end to end; never
+    #: set in production serving (interpret mode is orders of magnitude
+    #: slower than the gather/einsum CPU path).
+    force_paged_kernel: bool = False
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(f"mode must be one of {_MODES}")
         if self.reuse_factor < 1:
             raise ValueError("reuse_factor >= 1")
+        for knob in ("kv_split", "pages_per_step"):
+            v = getattr(self, knob)
+            if v is not None and v < 1:
+                raise ValueError(f"{knob} must be >= 1 (or None = auto)")
 
     @property
     def scan_unroll(self) -> int:

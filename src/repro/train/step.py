@@ -150,7 +150,12 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
       admission (the engine allocates a request's whole token budget up
       front), so the device loop never calls back into the allocator —
       each step's KV write resolves ``pos`` through the table it was
-      launched with, and dead lanes resolve to the trash page.
+      launched with, and dead lanes resolve to the trash page.  The
+      split-KV knob (``ctx.kv_split``/``ctx.pages_per_step``) is
+      *static* loop configuration the same way: the builder closes
+      over ``ctx``, so every scanned step runs the kernel at the
+      engine-resolved split — no per-step re-dispatch, one compiled
+      loop per (block size, split) point.
     * ``live`` (B,) bool — slots that are generating; dead slots are
       frozen (token/pos held, emissions masked) exactly as the per-token
       engine freezes them, so a block is bit-equivalent to N single
@@ -215,9 +220,12 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
     ONCE over all k + 1 block positions (the de-specialization payoff:
     verification *is* a k+1-token chunked-prefill call — the dense
     einsum path or ``paged_attention`` handle S > 1 natively, so no
-    bespoke verify forward exists), accepts the longest agreeing prefix
-    via the :func:`repro.kernels.ops.verify_tokens` op, and advances
-    each slot by its accepted length.  Greedy slots emit the target's
+    bespoke verify forward exists; on the kernel path that call runs at
+    the same ``ctx.kv_split``/``ctx.pages_per_step`` split-KV point as
+    plain decode, closed over from the builder's ``ctx``), accepts the
+    longest agreeing prefix via the
+    :func:`repro.kernels.ops.verify_tokens` op, and advances each slot
+    by its accepted length.  Greedy slots emit the target's
     exact argmax stream (byte-identical to the non-speculative engine);
     sampled slots preserve the temperature/top-k distribution through
     point-mass rejection sampling.

@@ -1,0 +1,483 @@
+"""Split-KV paged attention conformance: kernel ≡ oracle ≡ schedule.
+
+The flash-decoding tentpole has three artifacts that must agree:
+
+* ``paged_attention_pallas(kv_split, pages_per_step)`` — the Pallas
+  lowering (interpret mode here): parallel per-partition online-softmax
+  partials, multi-page DMA tiles, log-sum-exp combine;
+* ``paged_attention_split_ref`` — the explicit recurrence oracle,
+  op-for-op the kernel's formulas (shared ``combine_splits``), matched
+  to f32 ulp precision (rtol 3e-7 — ~100x tighter than the kernel
+  suite's 2e-5; bitwise identity across separately compiled programs is
+  not promised, XLA contracts elementwise chains differently);
+* ``paged_attention_xla`` — the same schedule through plain XLA scan
+  (the CPU-measurable lowering the long-context bench times).
+
+Plus the engine-level contracts: ``kv_split=1, pages_per_step=1`` IS
+the pre-split kernel (same code path, byte-for-byte), engine streams
+are knob-invariant end to end (chunked prefill, fused decode,
+spec-decode verify rounds, dead lanes on the trash page), and the
+poisoned-garbage isolation of test_paged_attention.py holds at every
+``kv_split``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import (_paged_attention_unsplit,
+                                           auto_pages_per_step,
+                                           choose_kv_split, combine_splits,
+                                           paged_attention_pallas,
+                                           paged_attention_xla)
+from repro.kernels.ref import paged_attention_ref, paged_attention_split_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+#: the fused≡ref contract for the split kernel: f32 ulp precision
+ULP = dict(rtol=3e-7, atol=1e-6)
+
+
+def _case(b, hq, hkv, s, d, ps, num_pages, table_width, seed=0):
+    rs = np.random.RandomState(seed)
+    q = jnp.asarray(rs.randn(b, hq, s, d), jnp.float32)
+    kp = jnp.asarray(rs.randn(num_pages, hkv, ps, d), jnp.float32)
+    vp = jnp.asarray(rs.randn(num_pages, hkv, ps, d), jnp.float32)
+    bt = np.stack([rs.permutation(num_pages)[:table_width]
+                   for _ in range(b)])
+    return q, kp, vp, jnp.asarray(bt, jnp.int32)
+
+
+# ===========================================================================
+class TestSplitEqualsUnsplit:
+    def test_knob_1_1_is_the_legacy_kernel_bitwise(self):
+        """kv_split=1, pages_per_step=1 must route through the original
+        one-page-per-step kernel unchanged — byte-for-byte, not just
+        close (the dispatcher's no-regression contract)."""
+        q, kp, vp, bt = _case(3, 4, 2, 2, 16, ps=4, num_pages=12,
+                              table_width=5)
+        qpos = jnp.asarray([0, 6, 17], jnp.int32)
+        got = paged_attention_pallas(q, kp, vp, bt, qpos, kv_split=1,
+                                     pages_per_step=1, interpret=True)
+        legacy = _paged_attention_unsplit(q, kp, vp, bt, qpos,
+                                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+    def test_kv_split_1_alone_is_the_legacy_kernel_bitwise(self):
+        """An explicit kv_split=1 with the tile left on auto is the
+        documented regression baseline ('1 = today's serial page
+        chain') — the auto tile must collapse to 1 rather than routing
+        through the split kernel's different float association."""
+        q, kp, vp, bt = _case(2, 4, 2, 1, 16, ps=4, num_pages=12,
+                              table_width=5, seed=13)
+        qpos = jnp.asarray([9, 18], jnp.int32)
+        got = paged_attention_pallas(q, kp, vp, bt, qpos, kv_split=1,
+                                     interpret=True)
+        legacy = _paged_attention_unsplit(q, kp, vp, bt, qpos,
+                                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(legacy))
+
+    @pytest.mark.parametrize("split,tile", [(2, 1), (3, 1), (2, 2),
+                                            (4, 2), (5, 3)])
+    def test_split_matches_unsplit_oracle(self, split, tile):
+        """Any knob point must agree with the one-shot softmax oracle
+        (semantic equivalence of the whole split+combine pipeline)."""
+        q, kp, vp, bt = _case(3, 4, 2, 1, 16, ps=4, num_pages=16,
+                              table_width=6, seed=1)
+        qpos = jnp.asarray([2, 11, 23], jnp.int32)
+        got = paged_attention_pallas(q, kp, vp, bt, qpos, kv_split=split,
+                                     pages_per_step=tile, interpret=True)
+        want = paged_attention_ref(q, kp, vp, bt, qpos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_auto_knobs_match_oracle(self):
+        """The cost-model auto point (kv_split=None) is just another
+        knob value — same numerics contract."""
+        q, kp, vp, bt = _case(2, 4, 2, 1, 16, ps=4, num_pages=20,
+                              table_width=12, seed=2)
+        qpos = jnp.asarray([40, 17], jnp.int32)
+        got = paged_attention_pallas(q, kp, vp, bt, qpos, interpret=True)
+        want = paged_attention_ref(q, kp, vp, bt, qpos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ===========================================================================
+class TestKernelVsSplitOracle:
+    """Interpret-mode kernel vs the explicit recurrence, at ULP."""
+
+    def _check(self, q, kp, vp, bt, qpos, split, tile):
+        qpos = jnp.asarray(qpos, jnp.int32)
+        got = paged_attention_pallas(q, kp, vp, bt, qpos, kv_split=split,
+                                     pages_per_step=tile, interpret=True)
+        want = paged_attention_split_ref(q, kp, vp, bt, qpos,
+                                         kv_split=split,
+                                         pages_per_step=tile)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **ULP)
+        # and the split oracle itself agrees with the one-shot softmax
+        base = paged_attention_ref(q, kp, vp, bt, qpos)
+        np.testing.assert_allclose(np.asarray(want), np.asarray(base),
+                                   **TOL)
+
+    @pytest.mark.parametrize("split", [2, 3, 4])
+    def test_ragged_last_partition(self, split):
+        """Table width not divisible by split*tile: the last partition
+        holds fewer real tiles (pad entries must stay invisible)."""
+        q, kp, vp, bt = _case(3, 4, 2, 1, 16, ps=4, num_pages=14,
+                              table_width=7, seed=3)
+        self._check(q, kp, vp, bt, [27, 9, 0], split, 2)
+
+    @pytest.mark.parametrize("split,tile", [(2, 1), (3, 2), (4, 1)])
+    def test_partition_straddles_partial_last_page(self, split, tile):
+        """qpos lands mid-page inside a middle partition: everything
+        after it (same page, later pages, later partitions) is dead."""
+        ps, width = 8, 6
+        q, kp, vp, bt = _case(2, 4, 2, 1, 16, ps=ps, num_pages=12,
+                              table_width=width, seed=4)
+        # row 0: mid-page within partition 1; row 1: exactly a boundary
+        self._check(q, kp, vp, bt, [2 * ps + 3, 3 * ps], split, tile)
+
+    @pytest.mark.parametrize("hq,hkv", [(4, 1), (8, 2), (6, 6)])
+    def test_gqa_group_folding(self, hq, hkv):
+        """Hq folds onto Hkv groups inside each partition; pages are
+        fetched per (batch, kv head), never broadcast to Hq."""
+        q, kp, vp, bt = _case(2, hq, hkv, 1, 8, ps=4, num_pages=12,
+                              table_width=6, seed=5)
+        self._check(q, kp, vp, bt, [13, 22], 3, 2)
+
+    @pytest.mark.parametrize("s", [2, 5])
+    def test_chunked_prefill_queries(self, s):
+        """S > 1 (spec-decode verify / prefill chunks): within-chunk
+        causality must hold inside and across partitions."""
+        q, kp, vp, bt = _case(3, 4, 2, s, 8, ps=4, num_pages=16,
+                              table_width=8, seed=6)
+        self._check(q, kp, vp, bt, [0, 9, 21], 2, 2)
+
+    @pytest.mark.slow
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 5),
+           st.integers(2, 6), st.integers(1, 6), st.integers(1, 4),
+           st.integers(0, 2 ** 16))
+    def test_shape_sweep(self, b, group, s, ps, split, tile, seed):
+        """Random (batch, group, chunk, page, split, tile) sweep with
+        qpos drawn over every fill level."""
+        hkv = 2
+        rs = np.random.RandomState(seed)
+        table_width = int(rs.randint(1, 7))
+        num_pages = max(table_width + 1, int(rs.randint(2, 12)))
+        q, kp, vp, bt = _case(b, group * hkv, hkv, s, 8, ps=ps,
+                              num_pages=num_pages,
+                              table_width=table_width, seed=seed)
+        hi = max(table_width * ps - s, 0)
+        qpos = rs.randint(0, hi + 1, (b,))
+        self._check(q, kp, vp, bt, qpos, split, tile)
+
+
+# ===========================================================================
+class TestCombineProperties:
+    """Property sweeps of the log-sum-exp combine itself."""
+
+    def _partials(self, rs, split, rows, cols, d):
+        """Per-partition online-softmax partials of a random attention
+        problem, plus the unsplit answer.  Columns are dealt to
+        partitions contiguously, mirroring the kernel's layout; some
+        partitions may be fully masked (dead)."""
+        logits = rs.randn(rows, split * cols).astype(np.float32)
+        v = rs.randn(split * cols, d).astype(np.float32)
+        mask = rs.rand(rows, split * cols) < 0.8
+        mask[:, 0] = True                      # at least one live column
+        lg = np.where(mask, logits, -1e30)
+        accs, ms, ls = [], [], []
+        for sp in range(split):
+            sl = slice(sp * cols, (sp + 1) * cols)
+            m = np.max(lg[:, sl], axis=1, keepdims=True)
+            m = np.maximum(m, -1e30)
+            p = np.exp(lg[:, sl] - m) * mask[:, sl]
+            ls.append(np.sum(p, axis=1, keepdims=True))
+            accs.append(p @ v[sl])
+            ms.append(m)
+        # unsplit reference: one softmax over all columns
+        m_all = np.max(lg, axis=1, keepdims=True)
+        p_all = np.exp(lg - m_all) * mask
+        out = (p_all @ v) / np.maximum(p_all.sum(1, keepdims=True), 1e-30)
+        return (jnp.asarray(np.stack(accs)), jnp.asarray(np.stack(ms)),
+                jnp.asarray(np.stack(ls)), out)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 6), st.integers(1, 8), st.integers(1, 8),
+           st.integers(1, 16), st.integers(0, 2 ** 16))
+    def test_merge_of_partials_equals_unsplit(self, split, rows, cols, d,
+                                              seed):
+        rs = np.random.RandomState(seed)
+        acc, m, l, want = self._partials(rs, split, rows, cols, d)
+        acc_s, _, l_s = combine_splits(acc, m, l)
+        got = np.asarray(acc_s / jnp.maximum(l_s, 1e-30))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 6), st.integers(1, 8), st.integers(1, 8),
+           st.integers(0, 2 ** 16))
+    def test_partition_order_invariance(self, split, rows, cols, seed):
+        """The combine must not care which partition was which — the
+        grid's parallel lanes complete in arbitrary order."""
+        rs = np.random.RandomState(seed)
+        acc, m, l, _ = self._partials(rs, split, rows, cols, 8)
+        perm = rs.permutation(split)
+        a1, _, l1 = combine_splits(acc, m, l)
+        a2, _, l2 = combine_splits(acc[perm], m[perm], l[perm])
+        np.testing.assert_allclose(
+            np.asarray(a1 / jnp.maximum(l1, 1e-30)),
+            np.asarray(a2 / jnp.maximum(l2, 1e-30)), rtol=1e-6, atol=1e-6)
+
+    def test_all_dead_partitions_yield_zero(self):
+        """Every partition at init state (nothing visible — e.g. a
+        dead lane whose table is all trash): the combined output must
+        be exactly 0, the unsplit kernel's dead-lane convention."""
+        split, rows, d = 3, 4, 8
+        acc = jnp.zeros((split, rows, d), jnp.float32)
+        m = jnp.full((split, rows, 1), -1e30, jnp.float32)
+        l = jnp.zeros((split, rows, 1), jnp.float32)
+        acc_s, _, l_s = combine_splits(acc, m, l)
+        out = np.asarray(acc_s / jnp.maximum(l_s, 1e-30))
+        assert np.all(out == 0.0) and np.all(np.isfinite(out))
+
+
+# ===========================================================================
+class TestDeadLaneAudit:
+    """Trash-page / dead-lane isolation at every kv_split.
+
+    Extends test_paged_attention.py's poisoned-garbage test: garbage in
+    any row beyond the visible prefix — recycled pages, unwritten tail
+    rows, the whole trash page of a dead or mid-block-finished lane —
+    must not move ANY partition's partial sum, for every knob point.
+    """
+
+    @pytest.mark.parametrize("split", [1, 2, 3, 4])
+    @pytest.mark.parametrize("tile", [1, 2])
+    def test_poison_beyond_qpos_never_leaks(self, split, tile):
+        ps, width, s = 4, 5, 2
+        q, kp, vp, _ = _case(2, 4, 2, s, 8, ps=ps, num_pages=10,
+                             table_width=width, seed=7)
+        perm = np.random.RandomState(8).permutation(10)
+        bt = jnp.asarray(perm.reshape(2, width), jnp.int32)
+        qpos = jnp.asarray([5, 9], jnp.int32)
+        want = paged_attention_pallas(q, kp, vp, bt, qpos, kv_split=split,
+                                      pages_per_step=tile, interpret=True)
+
+        kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+        bt_np = np.asarray(bt)
+        for b in range(2):
+            first_hidden = int(qpos[b]) + s
+            for t in range(first_hidden, width * ps):
+                pg, row = bt_np[b, t // ps], t % ps
+                kp2[pg, :, row] = 1e4
+                vp2[pg, :, row] = -1e4
+        got = paged_attention_pallas(q, jnp.asarray(kp2),
+                                     jnp.asarray(vp2), bt, qpos,
+                                     kv_split=split, pages_per_step=tile,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=0, atol=0)
+
+    @pytest.mark.parametrize("split", [1, 2, 4])
+    def test_dead_lane_on_trash_page(self, split):
+        """A dead lane (engine convention: block table all trash,
+        qpos=0) next to a live lane: poisoning the trash page must not
+        move the live lane, and the dead lane's output must stay
+        finite (it is masked downstream, but NaN/inf would poison the
+        whole fused-loop batch through XLA's NaN propagation)."""
+        ps, width, npg = 4, 4, 9
+        trash = npg - 1
+        q, kp, vp, _ = _case(2, 4, 2, 1, 8, ps=ps, num_pages=npg,
+                             table_width=width, seed=9)
+        live_pages = np.arange(width)
+        bt = jnp.asarray(np.stack([live_pages,
+                                   np.full(width, trash)]), jnp.int32)
+        qpos = jnp.asarray([11, 0], jnp.int32)
+        want = paged_attention_pallas(q, kp, vp, bt, qpos, kv_split=split,
+                                      interpret=True)
+        kp2, vp2 = np.asarray(kp).copy(), np.asarray(vp).copy()
+        kp2[trash], vp2[trash] = 1e4, -1e4
+        got = paged_attention_pallas(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                                     bt, qpos, kv_split=split,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                                   rtol=0, atol=0)
+        assert np.all(np.isfinite(np.asarray(got[1])))
+
+
+# ===========================================================================
+class TestXlaScheduleLowering:
+    """paged_attention_xla (the CPU-measurable schedule) vs the oracle."""
+
+    @pytest.mark.parametrize("split,tile", [(1, 1), (2, 1), (3, 2),
+                                            (4, 4)])
+    def test_matches_oracle(self, split, tile):
+        q, kp, vp, bt = _case(3, 4, 2, 1, 16, ps=4, num_pages=16,
+                              table_width=7, seed=10)
+        qpos = jnp.asarray([0, 12, 26], jnp.int32)
+        got = paged_attention_xla(q, kp, vp, bt, qpos, kv_split=split,
+                                  pages_per_step=tile)
+        want = paged_attention_ref(q, kp, vp, bt, qpos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    @pytest.mark.parametrize("s", [2, 4])
+    def test_chunked_queries(self, s):
+        q, kp, vp, bt = _case(2, 4, 2, s, 8, ps=4, num_pages=12,
+                              table_width=6, seed=11)
+        qpos = jnp.asarray([3, 15], jnp.int32)
+        got = paged_attention_xla(q, kp, vp, bt, qpos, kv_split=3,
+                                  pages_per_step=2)
+        want = paged_attention_ref(q, kp, vp, bt, qpos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_registered_backend(self):
+        from repro.kernels.ops import paged_attention
+        q, kp, vp, bt = _case(2, 4, 2, 1, 8, ps=4, num_pages=8,
+                              table_width=4, seed=12)
+        qpos = jnp.asarray([6, 13], jnp.int32)
+        got = paged_attention(q, kp, vp, bt, qpos, backend="xla",
+                              kv_split=2, pages_per_step=2)
+        want = paged_attention_ref(q, kp, vp, bt, qpos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ===========================================================================
+class TestChooseKvSplit:
+    def test_deterministic_and_cached(self):
+        a = choose_kv_split(512, 64, 1, batch=4, pages_per_step=16)
+        b = choose_kv_split(512, 64, 1, batch=4, pages_per_step=16)
+        assert a == b and a >= 1
+
+    def test_single_tile_never_splits(self):
+        assert choose_kv_split(64, 4, 2, batch=2, pages_per_step=4) == 1
+
+    def test_long_context_splits(self):
+        """At >=64 pages the cost model must actually use the knob —
+        otherwise the latency story is vacuous."""
+        assert choose_kv_split(512, 64, 1, batch=1,
+                               pages_per_step=8) > 1
+
+    def test_auto_pages_per_step_targets_mxu_rows(self):
+        assert auto_pages_per_step(8, 64) == 16     # 128-row operand
+        assert auto_pages_per_step(256, 64) == 1    # page already > 128
+        assert auto_pages_per_step(8, 2) == 2       # capped by the table
+
+
+# ===========================================================================
+def _make_engine_env(seed=0):
+    from repro.configs import get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.api import get_family
+    from repro.nn.context import QuantContext
+
+    cfg = get_config("gemma-2b").smoke()
+    fam = get_family(cfg)
+    mesh = make_local_mesh()
+    params = fam.init(jax.random.PRNGKey(seed), cfg)
+    ctx = QuantContext(compute_dtype=jnp.float32)
+    return cfg, ctx, fam, mesh, params
+
+
+def _serve(cfg, ctx, params, mesh, prompts, *, gen_len=8, block=4,
+           engine_kw=None):
+    from repro.dist.constrain import use_mesh
+    from repro.launch.serve import Engine
+
+    with use_mesh(mesh):
+        eng = Engine(cfg, ctx, params, mesh, batch=len(prompts),
+                     max_len=24, **(engine_kw or {}))
+        eng.add_requests(dict(enumerate(prompts)), gen_len=gen_len)
+        while eng.live.any():
+            eng.step_many(block)
+        return [list(eng.outputs[s]) for s in range(len(prompts))], eng
+
+
+class TestEngineConformance:
+    """End-to-end knob invariance through the serving engine."""
+
+    def _prompts(self, cfg, n=3, plen=13):
+        from repro.data.pipeline import SyntheticLM
+        src = SyntheticLM(cfg.vocab, seed=0)
+        return [src.tokens(s, 1, plen + 1)[0, :-1] for s in range(n)]
+
+    def test_kv_split_1_stream_byte_identical(self):
+        """kv_split=1 must serve byte-identical streams to the current
+        engine (knob plumbed, numerics untouched)."""
+        cfg, ctx, fam, mesh, params = _make_engine_env()
+        prompts = self._prompts(cfg)
+        kw = dict(paged=True, page_size=4)
+        base, _ = _serve(cfg, ctx, params, mesh, prompts, engine_kw=kw)
+        got, eng = _serve(cfg, ctx, params, mesh, prompts,
+                          engine_kw=dict(kw, kv_split=1, pages_per_step=1))
+        assert got == base
+        st = eng.stats()
+        assert st["kv_split"] == 1 and st["pages_per_step"] == 1
+
+    def test_stats_reports_resolved_auto_knobs(self):
+        cfg, ctx, fam, mesh, params = _make_engine_env()
+        prompts = self._prompts(cfg, n=2)
+        _, eng = _serve(cfg, ctx, params, mesh, prompts,
+                        engine_kw=dict(paged=True, page_size=4))
+        st = eng.stats()
+        assert st["kv_split"] >= 1 and st["pages_per_step"] >= 1
+        # auto tile targets the MXU operand bound (capped by the table)
+        width = eng.block_tables.shape[1]
+        assert st["pages_per_step"] == min(128 // 4, width)
+
+    def test_forced_kernel_split_streams_byte_identical(self):
+        """The real stack through the real kernel: gather/einsum
+        baseline vs the interpret-mode split kernel end to end — same
+        prompts, chunked prefill (prompt > chunk), fused decode blocks,
+        dead lanes between finish and refill.  Byte-identical greedy
+        streams at unsplit AND split knob points."""
+        from repro.nn.context import QuantContext
+        cfg, ctx, fam, mesh, params = _make_engine_env()
+        prompts = self._prompts(cfg)
+        kw = dict(paged=True, page_size=4, prefill_chunk=5)
+        base, _ = _serve(cfg, ctx, params, mesh, prompts, engine_kw=kw)
+        fctx = QuantContext(compute_dtype=jnp.float32,
+                            force_paged_kernel=True)
+        unsplit, _ = _serve(cfg, fctx, params, mesh, prompts,
+                            engine_kw=dict(kw, kv_split=1,
+                                           pages_per_step=1))
+        split, _ = _serve(cfg, fctx, params, mesh, prompts,
+                          engine_kw=dict(kw, kv_split=3,
+                                         pages_per_step=2))
+        assert unsplit == base
+        assert split == base
+
+    @pytest.mark.slow
+    def test_spec_decode_through_split_kernel(self):
+        """Speculative verify rounds are k+1-token chunked calls of the
+        same paged path: greedy streams through the forced split
+        kernel must stay byte-identical to the plain engine."""
+        from repro.nn.context import QuantContext
+        cfg, ctx, fam, mesh, params = _make_engine_env()
+        prompts = [np.tile(np.random.RandomState(s).randint(
+            0, cfg.vocab, (4,)), 3) for s in (0, 9)]
+        kw = dict(paged=True, page_size=4)
+        base, _ = _serve(cfg, ctx, params, mesh, prompts, gen_len=10,
+                         engine_kw=kw)
+        fctx = QuantContext(compute_dtype=jnp.float32,
+                            force_paged_kernel=True)
+        spec, eng = _serve(cfg, fctx, params, mesh, prompts, gen_len=10,
+                           block=2,
+                           engine_kw=dict(kw, spec=True, spec_k=3,
+                                          kv_split=2, pages_per_step=2))
+        assert spec == base
+        assert eng.stats()["kv_split"] == 2
+
+
+# ===========================================================================
+class TestLongContextPerf:
+    @pytest.mark.slow
+    def test_split_kv_speedup_at_64_pages(self):
+        """The CI perf smoke: ≥1.5x decode tok/s over the serial page
+        chain at ≥64 pages/slot (asserted inside the bench too)."""
+        from benchmarks.bench_serving import run_long_context
+        rows = run_long_context(iters=30)
+        by = {r["name"]: r for r in rows}
+        assert by["split_kv"]["speedup_vs_unsplit"] >= 1.5
+        assert by["split_kv"]["kv_split"] > 1
