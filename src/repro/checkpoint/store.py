@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_state", "restore_state", "latest_step", "CheckpointManager"]
+__all__ = ["save_state", "restore_state", "latest_step", "save_blob",
+           "load_blob", "CheckpointManager"]
 
 _SEP = "."
 
@@ -73,6 +74,36 @@ def save_state(state, directory: str, step: int) -> str:
         shutil.rmtree(final)
     os.replace(tmp, final)
     return final
+
+
+def save_blob(obj, directory: str, step: int, *, name: str = "blob") -> str:
+    """Atomically persist an arbitrary host-side object snapshot.
+
+    The per-leaf .npy format above needs a template to restore into;
+    engine snapshots carry ragged host state (queues, partial-output
+    lists, spilled page payloads) whose structure only the snapshot
+    itself knows, so they go down as ONE object-pickled .npy under the
+    same ``step_%08d`` layout and the same tmp + ``os.replace``
+    atomics — ``latest_step`` and retention apply unchanged.  Only for
+    trusted self-written state (pickle), like every checkpoint here."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arr = np.empty((), dtype=object)
+    arr[()] = obj
+    np.save(os.path.join(tmp, name + ".npy"), arr, allow_pickle=True)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "blob": name + ".npy"}, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def load_blob(directory: str, step: int, *, name: str = "blob"):
+    """Load a :func:`save_blob` snapshot."""
+    path = os.path.join(directory, f"step_{step:08d}", name + ".npy")
+    return np.load(path, allow_pickle=True)[()]
 
 
 def latest_step(directory: str) -> Optional[int]:

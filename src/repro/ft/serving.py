@@ -1,0 +1,116 @@
+"""Serving-side fault injection: deterministic chaos for the engine.
+
+The training stack already validates itself under perturbation
+(``FaultInjector`` + ``ResilientLoop``); this module is the serving
+counterpart.  A :class:`ServingFaultInjector` carries a *deterministic*
+schedule keyed by the engine's decode-block round counter, so a chaos
+run is exactly reproducible: the conformance suite asserts that every
+scheduled fault sequence yields token streams byte-identical to the
+fault-free run (the hls4ml codesign loop's validate-under-perturbation
+step, applied to our own engine).
+
+Fault kinds and their detection paths:
+
+* ``"raise"`` — a step exception before the block runs (worker crash /
+  transient runtime error).  Nothing was mutated; the engine replays
+  the block from its pre-block snapshot.
+* ``"nan"`` — every float leaf of the serving cache is poisoned with
+  NaN *before* the block.  Detection is device-side: the fused decode
+  loop's fault lane (``train.step``) watches for non-finite logits and
+  freezes the affected slot, so the host learns about the corruption
+  from the block result itself — no out-of-band signal.
+* ``"corrupt"`` — page-pool / cache leaves are overwritten with large
+  *finite* garbage before the block, and the injector raises
+  :class:`PageCorruptionError` after it (the stand-in for a delayed
+  integrity report — ECC / checksum — since finite garbage is
+  undetectable from logits alone).  The block's results are discarded
+  and replayed from the snapshot.
+* ``"slow"`` — the injector sleeps before the block (a straggler step).
+  No recovery: the wired-in ``StragglerMonitor`` flags the block and
+  the event surfaces in ``Engine.stats()``.
+
+Each scheduled fault fires exactly once (like the training injector's
+``fired`` set), so a recovered replay of the same round runs clean.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable, Tuple, Union
+
+__all__ = ["ServingFaultInjector", "InjectedFault", "PageCorruptionError",
+           "FAULT_KINDS"]
+
+FAULT_KINDS = ("raise", "nan", "corrupt", "slow")
+
+
+class InjectedFault(RuntimeError):
+    """A scheduled step exception (transient worker failure)."""
+
+
+class PageCorruptionError(RuntimeError):
+    """Delayed integrity report for finite page-pool corruption."""
+
+
+class ServingFaultInjector:
+    """Deterministic fault schedule over decode-block rounds.
+
+    ``schedule`` maps a 1-based block round to a fault kind (or is an
+    iterable of ``(round, kind)`` pairs — rounds may repeat across
+    kinds but each (round, kind) fires once).  The engine calls
+    ``before_block``/``after_block`` around every fused block; the
+    injector mutates engine state or raises per the schedule.
+    """
+
+    def __init__(self, schedule: Union[Dict[int, str],
+                                       Iterable[Tuple[int, str]]],
+                 *, slow_s: float = 0.0):
+        items = (schedule.items() if isinstance(schedule, dict)
+                 else list(schedule))
+        self.schedule = {}
+        for rnd, kind in items:
+            if kind not in FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {kind!r} "
+                                 f"(have {FAULT_KINDS})")
+            self.schedule.setdefault(int(rnd), []).append(kind)
+        self.slow_s = float(slow_s)
+        self.fired = set()
+        #: (round, kind) log of every fault actually injected
+        self.events = []
+
+    # -- engine hooks -------------------------------------------------------
+    def before_block(self, rnd: int, engine) -> None:
+        """Runs before the round's fused block; may corrupt or raise."""
+        for kind in list(self.schedule.get(rnd, ())):
+            key = (rnd, kind)
+            if key in self.fired:
+                continue
+            if kind in ("nan", "corrupt") and not engine.live.any():
+                # poison with nothing decoding would go undetected (no
+                # logits carry it to the fault lane / integrity check)
+                # and outlive the recovery snapshot — defer one round
+                self.schedule[rnd].remove(kind)
+                self.schedule.setdefault(rnd + 1, []).append(kind)
+                continue
+            self.fired.add(key)
+            self.events.append(key)
+            if kind == "raise":
+                raise InjectedFault(f"injected step fault at block {rnd}")
+            if kind == "slow":
+                if self.slow_s > 0:
+                    time.sleep(self.slow_s)
+                # slow_s == 0: the engine's clock seam makes the block
+                # *appear* slow instead (deterministic CI straggler)
+                engine._injected_slow = True
+            elif kind == "nan":
+                engine._poison_cache(float("nan"))
+            elif kind == "corrupt":
+                engine._poison_cache(1e30)
+                self._pending_corruption = rnd
+
+    def after_block(self, rnd: int, engine) -> None:
+        """Runs after the block: delayed detection of finite corruption."""
+        if getattr(self, "_pending_corruption", None) == rnd:
+            self._pending_corruption = None
+            raise PageCorruptionError(
+                f"page-pool integrity check failed after block {rnd}")

@@ -1,0 +1,116 @@
+"""Request lifecycle for the serving engine: states, records, deadlines.
+
+The de-specialization thesis applied to *failure* shapes: one request
+abstraction has to survive every way a request can leave the engine,
+not just the happy path.  A request moves through
+
+::
+
+    QUEUED ──> RUNNING ──> COMPLETED
+       │          │ ├────> CANCELLED   (cancel(req_id))
+       │          │ ├────> TIMED_OUT   (deadline passed at a block boundary)
+       │          │ ├────> FAILED      (device fault lane, no recovery path)
+       │          │ └────> PREEMPTED ──> QUEUED   (pages spilled to host)
+       ├────────> CANCELLED
+       └────────> TIMED_OUT
+
+Every terminal transition returns whatever tokens the request committed
+so far (``Engine.results[req_id]``) instead of raising — exceptions are
+reserved for caller errors (bad input at ``submit``) and for genuinely
+unrecoverable engine faults.  ``PREEMPTED`` is the one non-terminal
+exit: the request's pages are copied to host memory and it re-enters
+the queue carrying its full restart state (position, held token,
+partial outputs, drafting history, spilled page payloads, recurrent
+lane), so resumption is a restore, never a recompute.
+"""
+
+from __future__ import annotations
+
+import enum
+import time
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["RequestStatus", "TERMINAL_STATUSES", "validate_request"]
+
+
+class RequestStatus(str, enum.Enum):
+    """Where a request is in its lifecycle (str-valued for JSON/stats)."""
+
+    QUEUED = "queued"
+    RUNNING = "running"
+    PREEMPTED = "preempted"
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+
+
+#: statuses a request never leaves
+TERMINAL_STATUSES = frozenset({
+    RequestStatus.COMPLETED, RequestStatus.CANCELLED,
+    RequestStatus.TIMED_OUT, RequestStatus.FAILED,
+})
+
+
+def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
+                     deadline_s: Optional[float] = None) -> np.ndarray:
+    """Admission-time input validation; returns the prompt as int32.
+
+    Garbage that used to flow straight into the embedding gather is
+    rejected at the API boundary instead:
+
+    * non-integer token ids (a float array with fractional values would
+      silently truncate to different tokens than the caller sent),
+    * out-of-vocab ids (negative, or >= vocab: the gather would read a
+      neighbouring row — worse than an error, a *wrong answer*),
+    * negative ``temperature`` (<= 0 means greedy by engine convention,
+      but a negative value is always a caller bug: it would flip the
+      distribution toward the *least* likely tokens),
+    * negative ``top_k`` (0 disables the filter; negative has no
+      meaning), and
+    * non-positive ``deadline_s`` (the request could never run).
+
+    ``temperature``/``top_k`` accept the same scalar-or-``{slot: v}``
+    forms ``add_requests`` does; every value is checked.
+    """
+    p = np.asarray(prompt)
+    if p.ndim > 1:
+        p = p.reshape(-1)
+    if p.size and not np.issubdtype(p.dtype, np.integer):
+        if not (np.issubdtype(p.dtype, np.floating)
+                and np.all(np.isfinite(p)) and np.all(p == np.floor(p))):
+            raise ValueError(
+                f"prompt token ids must be integers (got dtype {p.dtype} "
+                f"with non-integral values); refusing to truncate")
+    p = p.astype(np.int64, copy=False)
+    if p.size and (int(p.min()) < 0 or int(p.max()) >= vocab):
+        bad = p[(p < 0) | (p >= vocab)][0]
+        raise ValueError(
+            f"prompt contains out-of-vocab token id {int(bad)} "
+            f"(vocab={vocab}); the embedding gather would read garbage")
+
+    def each(v, name):
+        vals = v.values() if isinstance(v, dict) else [v]
+        for x in vals:
+            if x is None:
+                continue
+            yield name, x
+
+    for name, x in each(temperature, "temperature"):
+        if float(x) < 0:
+            raise ValueError(
+                f"negative temperature {x} (0 = greedy; negative would "
+                f"invert the sampling distribution)")
+    for name, x in each(top_k, "top_k"):
+        if int(x) < 0:
+            raise ValueError(f"negative top_k {x} (0 disables the filter)")
+    if deadline_s is not None and float(deadline_s) <= 0:
+        raise ValueError(f"deadline_s must be positive (got {deadline_s})")
+    return p.astype(np.int32)
+
+
+def now() -> float:
+    """Engine wall clock (monkeypatchable seam for deadline tests)."""
+    return time.perf_counter()

@@ -60,6 +60,12 @@ class PageAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
+    def pages_of(self, owner) -> List[int]:
+        """The pages currently assigned to ``owner``, in allocation
+        order (dict insertion order — the same order the engine's block
+        table holds them)."""
+        return [p for p, o in self._owner.items() if o == owner]
+
     # -- alloc / free -------------------------------------------------------
     def alloc(self, n: int, owner=None) -> List[int]:
         """Take ``n`` pages off the free list (raises if short).
@@ -78,9 +84,69 @@ class PageAllocator:
         return pages
 
     def free(self, pages: List[int]) -> None:
-        """Return pages to the pool; immediately reusable, O(pages)."""
+        """Return pages to the pool; immediately reusable, O(pages).
+
+        Atomic: the whole list is validated before any page is freed, so
+        a double-free (or a duplicate within the call) raises without
+        half-freeing — the guard that keeps a preempt/restore cycle from
+        ever putting one page on the free list twice.
+        """
+        pages = list(pages)
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate page ids in free(): {pages}")
         for p in pages:
             if p not in self._owner:
                 raise ValueError(f"page {p} is not allocated")
+        for p in pages:
             del self._owner[p]
             self._free.append(p)
+
+    # -- preempt / restore --------------------------------------------------
+    def spill(self, owner) -> List[int]:
+        """Free every page ``owner`` holds; returns them in allocation
+        order.  The preemption primitive: the engine copies the returned
+        pages' payload to host memory *before* calling this, then the
+        ids rejoin the free list exactly as a normal ``free`` would —
+        a later :meth:`alloc` for the resumed request hands out whatever
+        physical ids are free *then* (restore re-targets the payload,
+        it does not pin physical ids)."""
+        pages = self.pages_of(owner)
+        self.free(pages)
+        return pages
+
+    def adopt(self, pages: List[int], owner=None) -> None:
+        """Claim *specific* free page ids for ``owner``.
+
+        The restore-side primitive: re-attaching allocator state from an
+        engine snapshot (or migrating pages between pools) must mark the
+        exact ids a request held, not whatever the LIFO head offers.
+        Atomic: every id is validated free (and unique) before any is
+        claimed."""
+        pages = list(pages)
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate page ids in adopt(): {pages}")
+        free_set = set(self._free)
+        for p in pages:
+            if p in self._owner:
+                raise ValueError(f"page {p} is already assigned")
+            if p not in free_set:
+                raise ValueError(f"page {p} is not a valid free page")
+        taken = set(pages)
+        self._free = [p for p in self._free if p not in taken]
+        for p in pages:
+            self._owner[p] = owner
+
+    # -- snapshot / restore -------------------------------------------------
+    def state(self) -> dict:
+        """Host-copyable allocator state (free-list ORDER included —
+        allocation determinism after a restore depends on it)."""
+        return {"free": list(self._free), "owner": dict(self._owner)}
+
+    def load_state(self, state: dict) -> None:
+        """Restore :meth:`state` output; validates the page-id partition
+        (every id exactly once across free + owned)."""
+        free, owner = list(state["free"]), dict(state["owner"])
+        ids = free + list(owner)
+        if sorted(ids) != list(range(self.num_pages)):
+            raise ValueError("allocator state does not partition the pool")
+        self._free, self._owner = free, owner

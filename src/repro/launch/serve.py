@@ -96,12 +96,15 @@ from ..configs import get_config
 from ..data.pipeline import SyntheticLM
 from ..dist.constrain import use_mesh
 from ..dist.sharding import cache_specs, named, param_specs
+from ..ft import StragglerMonitor
 from ..models.api import (get_family, init_paged_cache_fn, invalidate_fn,
-                          merge_slot_fn, set_block_table,
-                          supports_chunked_prefill)
+                          merge_slot_fn, set_block_table, spec_restore_fn,
+                          spec_state_fn, supports_chunked_prefill)
 from ..nn.context import QuantContext
 from ..train.step import (build_decode_loop, build_prefill_step,
                           build_serve_step, build_spec_decode_loop)
+from .lifecycle import RequestStatus, validate_request
+from .lifecycle import now as _now
 from .mesh import make_local_mesh
 from .paging import PageAllocator
 from .train import build_ctx
@@ -120,6 +123,28 @@ def _snap(a: np.ndarray) -> jnp.ndarray:
     safe regardless of whether jax aliases or copies it.
     """
     return jnp.asarray(a.copy())
+
+
+class DeviceFault(RuntimeError):
+    """The fused block's fault lane flagged slots (non-finite logits on
+    device — poisoned cache, kernel NaN).  Raised inside ``step_many``
+    so the recovery loop can restore-and-replay; without a recovery
+    path the flagged slots are failed with their valid prefix."""
+
+    def __init__(self, slots):
+        slots = tuple(int(s) for s in slots)
+        super().__init__(f"device fault lane flagged slots {list(slots)}")
+        self.slots = slots
+
+
+def _copy_record(r: dict) -> dict:
+    """Queue-record copy for snapshots: the mutable ``outputs`` list is
+    deep-copied; spilled page payloads / recurrent lanes are immutable
+    after the spill and ride by reference."""
+    r2 = dict(r)
+    if r2.get("outputs"):
+        r2["outputs"] = list(r2["outputs"])
+    return r2
 
 
 class Engine:
@@ -147,7 +172,10 @@ class Engine:
                  num_pages: Optional[int] = None, kv_split="auto",
                  pages_per_step="auto", spec: bool = False,
                  spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
-                 drafter_fn=None):
+                 drafter_fn=None, preempt: bool = False,
+                 preempt_after: int = 2, shed_threshold=None,
+                 fault_injector=None, recover=None, max_replays: int = 8,
+                 straggler=None, clock=None):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
         self.prefill_chunk = max(1, prefill_chunk)
@@ -226,6 +254,9 @@ class Engine:
             self.ctx = ctx
         c_sh = named(cache_specs(self.cache, mesh), mesh)
         self.cache = jax.device_put(self.cache, c_sh)
+        #: cache sharding, kept for snapshot restore (the fused loops
+        #: donate their cache argument, so restore re-device_puts)
+        self._cache_sh = c_sh
         self.decode = jax.jit(build_serve_step(cfg, ctx))
         self.prefill = jax.jit(build_prefill_step(cfg, ctx))
         #: per-block-size cache of jitted fused decode loops
@@ -302,10 +333,44 @@ class Engine:
         #: per-request rows land in ``request_log`` — see :meth:`stats`
         self.counters = {"peak_live": 0, "admitted": 0, "gen_tokens": 0,
                          "decode_s": 0.0, "verify_steps": 0,
-                         "draft_accepted": 0}
+                         "draft_accepted": 0, "preemptions": 0,
+                         "cancellations": 0, "timeouts": 0, "failures": 0,
+                         "replays": 0, "spilled_pages": 0,
+                         "shed_spec_rounds": 0, "straggler_blocks": 0}
         #: one dict per retired request: ttft_s, gen_tokens, decode_s
         self.request_log: List[dict] = []
         self._req_meta: Dict[int, dict] = {}    # slot -> live request row
+        # -- request-lifecycle robustness layer -------------------------
+        self.preempt = bool(preempt)
+        if self.preempt and not self.paged:
+            raise ValueError(
+                "preempt=True needs the paged cache: preempt-and-spill "
+                "is a page-pool mechanism (dense slots have nothing to "
+                "spill — every lane already owns its max_len rows)")
+        if self.preempt and self.draft is not None:
+            raise ValueError(
+                "preempt=True with a model drafter is unsupported: the "
+                "draft cache is a dense lane that cannot be spilled "
+                "through the page pool (use ngram self-speculation)")
+        self.preempt_after = max(1, int(preempt_after))
+        self.shed_threshold = (None if shed_threshold is None
+                               else float(shed_threshold))
+        self.fault_injector = fault_injector
+        #: restore-and-replay on block faults; defaults on whenever a
+        #: fault injector is attached (chaos runs want recovery)
+        self._recover = (bool(recover) if recover is not None
+                         else fault_injector is not None)
+        self.max_replays = int(max_replays)
+        self.straggler = (StragglerMonitor() if straggler is None
+                          else straggler)
+        self.clock = _now if clock is None else clock
+        #: terminal request outcomes: req_id -> {"status", "tokens"}
+        self.results: Dict[int, dict] = {}
+        self._next_id = 0
+        self._round = 0             # decode-block counter (chaos schedule)
+        self._injected_slow = False
+        self._slow_penalty = 1.0    # synthetic straggler seconds (CI)
+        self._head_blocked = (None, 0)  # (req id, blocked admission sweeps)
 
     # -- request admission --------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray, **kw):
@@ -314,7 +379,8 @@ class Engine:
 
     def add_requests(self, requests: Dict[int, np.ndarray], *,
                      gen_len: Optional[int] = None,
-                     temperature=None, top_k=None, _t_submit=None):
+                     temperature=None, top_k=None, deadline_s=None,
+                     _t_submit=None, _ids=None, _deadlines=None):
         """Prefill several fresh slots together (batched chunked prefill).
 
         Prompts are ingested in full-batch chunks of ``prefill_chunk``
@@ -330,15 +396,31 @@ class Engine:
 
         A prompt longer than ``max_len`` is rejected (ValueError): the
         cache cannot hold it, and clamp-writing its tail into the last
-        rows would silently serve a truncated request.  In paged mode
-        the request's full token budget (``min(prompt_len + gen_len,
-        max_len)`` rows) is allocated here; direct calls raise
+        rows would silently serve a truncated request; every prompt and
+        sampling parameter passes :func:`~.lifecycle.validate_request`
+        (out-of-vocab / non-integer token ids, negative temperature or
+        top_k are caller bugs, rejected at the boundary).  In paged
+        mode the request's full token budget (``min(prompt_len +
+        gen_len, max_len)`` rows) is allocated here; direct calls raise
         MemoryError when the pool is short — queue through
-        :meth:`submit` to wait for pages instead.
+        :meth:`submit` to wait for pages instead (with ``preempt=True``
+        running victims are spilled first and MemoryError is the last
+        resort).
+
+        ``deadline_s`` (scalar or ``{slot: v}``) sets a TTL from now;
+        the request times out at the first block boundary past it,
+        returning its partial output with status TIMED_OUT.
         """
-        t_call = time.perf_counter()
-        reqs = {int(s): np.asarray(p, np.int32).reshape(-1)
+        t_call = self.clock()
+        reqs = {int(s): validate_request(p, vocab=self.cfg.vocab,
+                                         temperature=temperature,
+                                         top_k=top_k)
                 for s, p in requests.items()}
+        if deadline_s is not None:
+            validate_request([], vocab=self.cfg.vocab,
+                             deadline_s=(min(deadline_s.values())
+                                         if isinstance(deadline_s, dict)
+                                         else deadline_s))
         for s, p in reqs.items():
             if p.shape[0] > self.max_len:
                 raise ValueError(
@@ -368,6 +450,12 @@ class Engine:
             needs = {s: self.allocator.pages_for(stop_of(s, p.shape[0]))
                      for s, p in reqs.items()}
             recyclable = sum(len(self._slot_pages.get(s, ())) for s in reqs)
+            if (sum(needs.values()) > self.allocator.free_pages + recyclable
+                    and self.preempt):
+                # graceful degradation instead of MemoryError: spill
+                # running victims until the admission fits
+                self._preempt_until(sum(needs.values()) - recyclable,
+                                    exclude=set(reqs))
             if sum(needs.values()) > self.allocator.free_pages + recyclable:
                 raise MemoryError(
                     f"page pool exhausted: admission needs "
@@ -409,7 +497,7 @@ class Engine:
             first = self._prefill_looped(reqs)
         if self.spec and self.draft is not None:
             self._prefill_draft(reqs)
-        t_first = time.perf_counter()
+        t_first = self.clock()
         for s, p in reqs.items():
             self.pos[s] = p.shape[0]
             self.live[s] = True
@@ -425,8 +513,16 @@ class Engine:
             self.hist[s, :] = 0
             self.hist[s, :p.shape[0]] = p
             t_sub = (_t_submit or {}).get(s, t_call)
-            self._req_meta[s] = {"ttft_s": t_first - t_sub,
-                                 "t_admit": t_first}
+            rid = (_ids or {}).get(s)
+            if rid is None:
+                rid = self._mint_id()
+            if _deadlines is not None and s in _deadlines:
+                dl = _deadlines[s]
+            else:
+                d = per_slot(deadline_s, s, None)
+                dl = None if d is None else t_call + float(d)
+            self._req_meta[s] = {"id": rid, "ttft_s": t_first - t_sub,
+                                 "t_admit": t_first, "deadline": dl}
         self.counters["admitted"] += len(reqs)
         self.counters["peak_live"] = max(self.counters["peak_live"],
                                          int(self.live.sum()))
@@ -443,23 +539,43 @@ class Engine:
         self._bt_dirty = False
 
     # -- admission queue ----------------------------------------------------
+    def _mint_id(self) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        return rid
+
     def submit(self, prompt: np.ndarray, *, gen_len: Optional[int] = None,
-               temperature: float = 0.0, top_k: int = 0) -> int:
-        """Queue a request; returns its position in the FIFO.
+               temperature: float = 0.0, top_k: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue a request; returns its request id.
+
+        The id keys every later lifecycle interaction —
+        :meth:`cancel`, :meth:`status`, and the terminal entry in
+        ``results`` (status + whatever tokens the request committed).
 
         Admission happens inside :meth:`step_many` (and via
         :meth:`try_admit`): a request leaves the queue the moment a
         lane is free AND — in paged mode — the free list covers its
         token budget, i.e. the instant earlier requests' freed pages
-        add up, not when a whole dense slot's ``max_len`` would."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        add up, not when a whole dense slot's ``max_len`` would.
+
+        ``deadline_s`` is a TTL from submission: past it, the request
+        is timed out at the next block boundary (queued or running)
+        and its partial output lands in ``results`` — no exception.
+        """
+        prompt = validate_request(prompt, vocab=self.cfg.vocab,
+                                  temperature=temperature, top_k=top_k,
+                                  deadline_s=deadline_s)
         if prompt.shape[0] > self.max_len:
             raise ValueError(
                 f"prompt of {prompt.shape[0]} tokens does not fit the "
                 f"cache (max_len={self.max_len})")
-        req = {"prompt": prompt, "gen_len": gen_len,
+        t = self.clock()
+        req = {"id": self._mint_id(), "prompt": prompt, "gen_len": gen_len,
                "temperature": temperature, "top_k": top_k,
-               "t_submit": time.perf_counter()}
+               "t_submit": t,
+               "deadline": None if deadline_s is None
+               else t + float(deadline_s)}
         if self.paged:
             need = self.allocator.pages_for(self._budget(req))
             if need > self.allocator.num_pages:
@@ -469,7 +585,72 @@ class Engine:
                     f"{self.allocator.num_pages}; raise num_pages or "
                     f"lower gen_len")
         self.waiting.append(req)
-        return len(self.waiting) - 1
+        return req["id"]
+
+    def status(self, req_id: int):
+        """Lifecycle status of a request id (None = unknown id)."""
+        if req_id in self.results:
+            return self.results[req_id]["status"]
+        for r in self.waiting:
+            if r["id"] == req_id:
+                return (RequestStatus.PREEMPTED if r.get("resume")
+                        else RequestStatus.QUEUED)
+        for m in self._req_meta.values():
+            if m["id"] == req_id:
+                return RequestStatus.RUNNING
+        return None
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel by request id, wherever the request currently is.
+
+        Queued (fresh or preempted): removed from the queue, terminal
+        CANCELLED with whatever tokens it had committed (a preempted
+        record's spilled payload is simply dropped).  Running: its lane
+        finishes NOW with the partial output — pages freed, the lane
+        admits the next request at the coming block boundary.  Unknown
+        or already-terminal ids return False."""
+        for i, r in enumerate(self.waiting):
+            if r["id"] == req_id:
+                del self.waiting[i]
+                self._finalize_queued(r, RequestStatus.CANCELLED)
+                return True
+        for s, m in list(self._req_meta.items()):
+            if m["id"] == req_id:
+                self.live[s] = False
+                self.finish(s, status=RequestStatus.CANCELLED)
+                return True
+        return False
+
+    def _finalize_queued(self, rec: dict, status: RequestStatus) -> None:
+        """Terminal outcome for a request that never (re)occupied a
+        lane: results entry only — ``done`` tracks lane streams."""
+        self.results[rec["id"]] = {"status": status,
+                                   "tokens": list(rec.get("outputs") or [])}
+        if status is RequestStatus.TIMED_OUT:
+            self.counters["timeouts"] += 1
+        elif status is RequestStatus.CANCELLED:
+            self.counters["cancellations"] += 1
+
+    def _sweep_deadlines(self) -> None:
+        """TTL check at the block boundary — the engine's only safe
+        cancellation point (slots change hands between blocks, never
+        inside one).  Expired queued requests finalize without a lane;
+        expired running ones finish with their partial output."""
+        t = self.clock()
+        expired = [r for r in self.waiting
+                   if r.get("deadline") is not None and t >= r["deadline"]]
+        if expired:
+            gone = {id(r) for r in expired}
+            self.waiting = deque(r for r in self.waiting
+                                 if id(r) not in gone)
+            for r in expired:
+                self._finalize_queued(r, RequestStatus.TIMED_OUT)
+        for s in range(self.batch):
+            m = self._req_meta.get(s)
+            if (m is not None and m.get("deadline") is not None
+                    and self.live[s] and t >= m["deadline"]):
+                self.live[s] = False
+                self.finish(s, status=RequestStatus.TIMED_OUT)
 
     def _token_budget(self, plen: int, gen_len: Optional[int]) -> int:
         """A request's cache-row budget — its final ``stop_pos``.
@@ -503,30 +684,222 @@ class Engine:
         Strict FIFO (no head-of-line skipping): a big request at the
         head waits for pages rather than being starved by smaller ones
         behind it — admission order is therefore deterministic, which
-        the cross-backend conformance suite relies on.  All admissions
-        of one call share a single batched prefill."""
+        the cross-backend conformance suite relies on.  All fresh
+        admissions of one call share a single batched prefill;
+        preempted records resume individually (page payload + lane
+        restore, no prefill at all).
+
+        With ``preempt=True``, a head that stays page-blocked for
+        ``preempt_after`` consecutive admission sweeps escalates:
+        running victims (see :meth:`_victim_order`) are spilled until
+        the head fits — head-of-line blocking becomes time slicing."""
         free = [s for s in range(self.batch)
                 if self.outputs[s] is None and not self.live[s]]
         admit, kw = {}, {"gen_len": {}, "temperature": {}, "top_k": {},
-                         "_t_submit": {}}
+                         "_t_submit": {}, "_ids": {}, "_deadlines": {}}
         planned = 0
+        resumed = 0
+        placed: set = set()
         while self.waiting and free:
             req = self.waiting[0]
             if self.paged:
-                need = self.allocator.pages_for(self._budget(req))
+                need = (req["n_pages"] if req.get("resume")
+                        else self.allocator.pages_for(self._budget(req)))
                 if not self.allocator.can_alloc(planned + need):
+                    if self._maybe_preempt(req, planned + need, free,
+                                           exclude=placed):
+                        continue        # victims spilled; recheck head
                     break
-                planned += need
-            s = free.pop(0)
             self.waiting.popleft()
+            self._head_blocked = (None, 0)
+            s = free.pop(0)
+            placed.add(s)
+            if req.get("resume"):
+                # resume allocates immediately (not via ``planned``)
+                self._resume(s, req)
+                resumed += 1
+                continue
+            if self.paged:
+                planned += need
             admit[s] = req["prompt"]
             kw["gen_len"][s] = req["gen_len"]
             kw["temperature"][s] = req["temperature"]
             kw["top_k"][s] = req["top_k"]
             kw["_t_submit"][s] = req["t_submit"]
+            kw["_ids"][s] = req["id"]
+            kw["_deadlines"][s] = req["deadline"]
         if admit:
             self.add_requests(admit, **kw)
-        return len(admit)
+        return len(admit) + resumed
+
+    # -- preempt-and-spill ---------------------------------------------------
+    def _victim_order(self, exclude=()) -> List[int]:
+        """Spill order under pressure: requests WITHOUT deadlines yield
+        first (nobody's SLO pays for the spill), then most-slack
+        deadlines; ties break latest-admitted first — LIFO time
+        slicing, the oldest work keeps its pages."""
+        cands = [s for s in range(self.batch)
+                 if self.live[s] and s in self._req_meta
+                 and s not in exclude]
+
+        def rank(s):
+            m = self._req_meta[s]
+            dl = m.get("deadline")
+            return (dl is not None, -(dl or 0.0), -m["t_admit"], -s)
+
+        return sorted(cands, key=rank)
+
+    def _preempt_until(self, target_free: int, exclude=()) -> None:
+        """Spill victims until ``free_pages`` covers ``target_free``
+        (or no victims remain — the caller re-checks and degrades)."""
+        for v in self._victim_order(exclude):
+            if self.allocator.free_pages >= target_free:
+                break
+            self._preempt(v)
+
+    def _maybe_preempt(self, req, need: int, free: List[int],
+                       exclude=()) -> bool:
+        """Escalating head-of-line response inside try_admit: only
+        after the SAME head has been page-blocked ``preempt_after``
+        consecutive sweeps do victims spill (a transient shortfall one
+        retire sweep would fix must not thrash the pool)."""
+        if not self.preempt:
+            return False
+        head_id, rounds = self._head_blocked
+        rounds = rounds + 1 if head_id == req["id"] else 1
+        self._head_blocked = (req["id"], rounds)
+        if rounds < self.preempt_after:
+            return False
+        progressed = False
+        for v in self._victim_order(exclude):
+            if self.allocator.can_alloc(need):
+                break
+            self._preempt(v)
+            free.append(v)          # the victim's lane is admittable now
+            progressed = True
+        return progressed and self.allocator.can_alloc(need)
+
+    def _page_payload(self, pages: List[int]) -> Dict[str, np.ndarray]:
+        """Host copy of the pool pages' payload, keyed by cache path.
+
+        Every page-pool leaf carries the page axis at position 1 —
+        (layers_or_groups, num_pages+1, …) — so one gather rule covers
+        lm dense/moe KV, hybrid attention, and int8 scale leaves alike.
+        Families without page leaves (ssm: dense recurrent state, pool
+        meters admission only) yield an empty payload."""
+        ids = jnp.asarray(pages, jnp.int32)
+        out = {}
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.cache)[0]:
+            if any(getattr(k, "key", None) == "pages" for k in path):
+                out[jax.tree_util.keystr(path)] = np.asarray(leaf[:, ids])
+        return out
+
+    def _write_pages(self, payload: Dict[str, np.ndarray],
+                     pages: List[int]) -> None:
+        """Scatter a spilled payload into (new) physical pages."""
+        ids = jnp.asarray(pages, jnp.int32)
+
+        def put(path, leaf):
+            data = payload.get(jax.tree_util.keystr(path))
+            if data is None:
+                return leaf
+            return leaf.at[:, ids].set(jnp.asarray(data))
+
+        self.cache = jax.tree_util.tree_map_with_path(put, self.cache)
+
+    def _lane_state(self, slot: int):
+        """Host copy of ``slot``'s recurrent lane (None for pure-KV
+        families) via the same batch-leading view speculative rollback
+        uses — preemption reuses the spec_state machinery instead of
+        growing a second per-family state protocol."""
+        rec = spec_state_fn(self.cache, self.cfg)
+        if rec is None:
+            return None
+        return jax.tree_util.tree_map(lambda t: np.asarray(t[slot]), rec)
+
+    def _write_lane(self, slot: int, lane) -> None:
+        if lane is None:
+            return
+        rec = spec_state_fn(self.cache, self.cfg)
+        rec = jax.tree_util.tree_map(
+            lambda c, s: c.at[slot].set(jnp.asarray(s)), rec, lane)
+        self.cache = spec_restore_fn(self.cache, rec, self.cfg)
+
+    def _preempt(self, slot: int) -> None:
+        """Spill ``slot``'s request to host memory and re-queue it.
+
+        O(pages) + one lane gather: page payloads device_get through
+        the shared axis-1 page indexing, the recurrent lane (ssm /
+        hybrid) rides the spec_state hooks, the allocator takes the
+        pages back atomically, and the block-table row points at the
+        trash page.  The record re-enters the queue at the BACK —
+        time slicing, not a livelock where the resumed head instantly
+        re-preempts its own victim."""
+        meta = self._req_meta.pop(slot)
+        pages = self._slot_pages.pop(slot, [])
+        payload = self._page_payload(pages) if pages else {}
+        lane = self._lane_state(slot)
+        spilled = self.allocator.spill(slot)
+        assert sorted(spilled) == sorted(pages), \
+            "allocator/engine page maps diverged"
+        self.block_tables[slot, :] = self._trash
+        self._bt_dirty = True
+        rec = {"resume": True, "id": meta["id"], "meta": meta,
+               "deadline": meta.get("deadline"),
+               "n_pages": len(pages), "payload": payload, "lane": lane,
+               "outputs": self.outputs[slot],
+               "pos": int(self.pos[slot]),
+               "token": int(self.tokens[slot, 0]),
+               "hist": self.hist[slot].copy(),
+               "temperature": float(self.temperature[slot]),
+               "top_k": int(self.top_k[slot]),
+               "stop_pos": int(self.stop_pos[slot])}
+        self.outputs[slot] = None
+        self.live[slot] = False
+        self.pos[slot] = 0
+        self.tokens[slot, 0] = 0
+        self.temperature[slot] = 0.0
+        self.top_k[slot] = 0
+        self.stop_pos[slot] = self.max_len
+        self.cache = self._invalidate(self.cache, jnp.int32(slot))
+        self._clean[slot] = True
+        self.waiting.append(rec)
+        self.counters["preemptions"] += 1
+        self.counters["spilled_pages"] += len(pages)
+
+    def _resume(self, slot: int, rec: dict) -> None:
+        """Re-admit a preempted request: restore, never recompute.
+
+        Fresh physical pages receive the spilled payload and the block
+        table re-targets them (restore does not pin physical ids);
+        ``pos``, the held token, partial outputs and drafting history
+        pick up exactly where the spill happened — a resumed greedy
+        stream is byte-identical to an unpreempted one."""
+        pages = self.allocator.alloc(rec["n_pages"], owner=slot)
+        self._slot_pages[slot] = pages
+        self.block_tables[slot, :] = self._trash
+        self.block_tables[slot, :len(pages)] = pages
+        self._flush_block_tables()
+        if not self._clean[slot]:
+            # the idle lane decayed under decode blocks since its last
+            # occupant — recurrent families need the zeroing
+            self.cache = self._invalidate(self.cache, jnp.int32(slot))
+        if rec["payload"]:
+            self._write_pages(rec["payload"], pages)
+        self._write_lane(slot, rec["lane"])
+        self.pos[slot] = rec["pos"]
+        self.tokens[slot, 0] = rec["token"]
+        self.live[slot] = True
+        self.outputs[slot] = rec["outputs"]
+        self.hist[slot] = rec["hist"]
+        self.temperature[slot] = rec["temperature"]
+        self.top_k[slot] = rec["top_k"]
+        self.stop_pos[slot] = rec["stop_pos"]
+        self._clean[slot] = False
+        self._req_meta[slot] = rec["meta"]
+        self.counters["peak_live"] = max(self.counters["peak_live"],
+                                         int(self.live.sum()))
 
     def _prefill_chunked(self, reqs) -> Dict[int, int]:
         chunk = self.prefill_chunk
@@ -642,19 +1015,69 @@ class Engine:
         (n * (spec_k + 1), B) and each live slot commits between 1 and
         spec_k + 1 tokens per round.  Greedy streams remain
         byte-identical to the non-speculative engine's.
+
+        Robustness path: every block boundary sweeps deadlines, applies
+        the pressure-shedding policy, and — when recovery is on (a
+        fault injector is attached, or ``recover=True``) — snapshots
+        the engine first.  A faulted block (injected exception, device
+        fault lane, corruption report) restores the snapshot and
+        replays: the injector fires once per (round, kind), so the
+        replay runs clean and commits the exact tokens the fault-free
+        run would.  Without recovery, device-flagged slots finish
+        FAILED with their valid prefix; host-side faults propagate.
         """
+        self._round += 1
+        self._sweep_deadlines()
+        n_eff, spec_now = self._shed_policy(n)
         if self.paged and self._bt_dirty:
             self._flush_block_tables()
-        t0 = time.perf_counter()
-        if self.spec:
-            block, block_live = self._block_spec(n)
-        else:
-            block, block_live = self._block_decode(n)
-        self._gen_step += n
+        snap = self.snapshot() if self._recover else None
+        pos_before = self.pos.copy()
+        injector = self.fault_injector
+        attempt = 0
+        fault_slots: tuple = ()
+        while True:
+            try:
+                self._injected_slow = False
+                if injector is not None:
+                    injector.before_block(self._round, self)
+                t0 = self.clock()
+                if spec_now:
+                    block, block_live, fault = self._block_spec(n_eff)
+                else:
+                    block, block_live, fault = self._block_decode(n_eff)
+                if injector is not None:
+                    injector.after_block(self._round, self)
+                t1 = self.clock()
+                if fault.any():
+                    raise DeviceFault(np.where(fault)[0])
+                break
+            except (RuntimeError, FloatingPointError) as e:
+                if snap is not None and attempt < self.max_replays:
+                    attempt += 1
+                    self.restore(snap)
+                    self.counters["replays"] += 1
+                    continue
+                if isinstance(e, DeviceFault):
+                    # no recovery path: keep the block's committed
+                    # prefix and fail the flagged slots below
+                    fault_slots = e.slots
+                    break
+                raise
+        self._gen_step += n_eff
         self._clean[:] = False              # decode advanced every lane
-        t1 = time.perf_counter()
         self.counters["decode_s"] += t1 - t0
         self.counters["gen_tokens"] += int(block_live.sum())
+        # per-block straggler telemetry: wall time per fused step; the
+        # injector's deterministic slow flag adds a synthetic penalty
+        # so CI chaos runs flag stragglers without real sleeps
+        dur = (t1 - t0) / max(1, n_eff)
+        if self._injected_slow:
+            dur += self._slow_penalty
+            self._injected_slow = False
+        if (self.straggler is not None
+                and self.straggler.record(self._round, dur)):
+            self.counters["straggler_blocks"] += 1
         # stamp generation end the moment a slot's live drops: finish()
         # may run much later (deferred retirement), and the idle gap
         # must not count against the request's decode throughput
@@ -665,6 +1088,20 @@ class Engine:
             if self.outputs[s] is not None:
                 self.outputs[s].extend(
                     int(t) for t in block[block_live[:, s], s])
+        if self.spec and not spec_now:
+            # a shed (plain) block still has to feed the drafting
+            # corpus: commit its tokens into hist at their absolute
+            # positions (the device spec loop does this on-device)
+            for s in range(self.batch):
+                col = block[:, s][block_live[:, s]]
+                if col.size:
+                    p0 = int(pos_before[s])
+                    end = min(p0 + col.size, self.hist.shape[1])
+                    self.hist[s, p0:end] = col[:end - p0]
+        for s in fault_slots:
+            if self.outputs[s] is not None:
+                self.live[s] = False
+                self.finish(s, status=RequestStatus.FAILED)
         # continuous batching: with requests waiting, retire finished
         # slots NOW and admit whatever the freed lanes/pages cover —
         # admission latency is one block, not one drained batch
@@ -672,6 +1109,23 @@ class Engine:
             self.retire_finished()
             self.try_admit()
         return block, block_live
+
+    def _shed_policy(self, n: int):
+        """Pressure shedding: past ``shed_threshold`` pool occupancy,
+        halve the fused block (admission/retire checks come twice as
+        often) and drop speculation for the block (verify waste stops
+        competing with admissions).  Both knobs are block-shape
+        changes, not sampling changes — greedy streams are unaffected
+        by construction.  Returns (block size, run speculative?)."""
+        if (self.shed_threshold is None or not self.paged
+                or self.allocator.num_pages == 0):
+            return n, self.spec
+        occ = self.allocator.used_pages / self.allocator.num_pages
+        if occ < self.shed_threshold:
+            return n, self.spec
+        if self.spec:
+            self.counters["shed_spec_rounds"] += 1
+        return max(1, n // 2), False
 
     def _block_decode(self, n: int):
         """One fused plain-decode block (n single-token steps)."""
@@ -688,7 +1142,7 @@ class Engine:
         # all-greedy batches skip the top-k sorts / noise generation
         # (greedy consumes no PRNG state, so the stream is unaffected)
         key = self._key if (self.temperature > 0).any() else None
-        self.cache, tokens, pos, live, block, block_live = loop(
+        self.cache, tokens, pos, live, block, block_live, fault = loop(
             self.params, self.cache, _snap(self.tokens), _snap(self.pos),
             _snap(self.live), _snap(self.stop_pos), sample_params,
             key, jnp.int32(self._gen_step), jnp.int32(self.eos_id))
@@ -700,7 +1154,7 @@ class Engine:
         self.tokens = np.asarray(tokens).copy()
         self.pos = np.asarray(pos).copy()
         self.live = np.asarray(live).copy()
-        return block, block_live
+        return block, block_live, np.asarray(fault)
 
     def _block_spec(self, n: int):
         """One fused speculative block (n draft→verify rounds).
@@ -738,7 +1192,7 @@ class Engine:
         else:
             out = loop(*common, _snap(self.hist))
         (self.cache, tokens, pos, live, aux, block, block_live,
-         accepted) = out
+         accepted, fault) = out
         block = np.asarray(block)
         block_live = np.asarray(block_live)
         accepted = np.asarray(accepted)
@@ -755,22 +1209,37 @@ class Engine:
                                        self.batch)[:, 0]
         self.counters["verify_steps"] += int(step_live.sum())
         self.counters["draft_accepted"] += int(accepted[step_live].sum())
-        return block, block_live
+        return block, block_live, np.asarray(fault)
 
     def step(self):
         """Per-token decode: the n=1 decode loop (baseline path)."""
         self.step_many(1)
 
-    def finish(self, slot: int):
+    def finish(self, slot: int,
+               status: RequestStatus = RequestStatus.COMPLETED):
+        """Retire ``slot`` with a terminal ``status``.
+
+        Whatever the slot committed lands in ``results[req_id]`` — a
+        cancelled/timed-out/failed request returns its partial output
+        with the status, never an exception (exceptions are for caller
+        bugs and unrecoverable engine faults)."""
         meta = self._req_meta.pop(slot, None)
         if meta is not None:
-            done = meta.get("t_done", time.perf_counter())
+            done = meta.get("t_done", self.clock())
             dt = done - meta["t_admit"]
             gen = len(self.outputs[slot] or [])
             self.request_log.append({
                 "ttft_s": meta["ttft_s"], "gen_tokens": gen,
-                "decode_s": dt,
+                "decode_s": dt, "status": status.value,
                 "tok_per_s": gen / dt if dt > 0 else 0.0})
+            self.results[meta["id"]] = {
+                "status": status, "tokens": list(self.outputs[slot] or [])}
+            if status is RequestStatus.CANCELLED:
+                self.counters["cancellations"] += 1
+            elif status is RequestStatus.TIMED_OUT:
+                self.counters["timeouts"] += 1
+            elif status is RequestStatus.FAILED:
+                self.counters["failures"] += 1
         self.done.append(self.outputs[slot])
         self.outputs[slot] = None
         self.live[slot] = False
@@ -795,6 +1264,116 @@ class Engine:
             self.block_tables[slot, :] = self._trash
             self._bt_dirty = True
         self._clean[slot] = True
+
+    # -- snapshot / restore --------------------------------------------------
+    def snapshot(self) -> dict:
+        """Copy-complete engine snapshot in host memory.
+
+        Everything a block can mutate is captured — the device cache(s),
+        slot arrays, allocator free-list ORDER, block tables, queue,
+        outputs, results, counters, and the PRNG round (``_gen_step``)
+        — so :meth:`restore` rewinds the engine to this exact block
+        boundary and a replay consumes identical randomness.  The
+        device cache crosses via ``device_get``: the fused loops donate
+        their cache argument, so holding a device reference would alias
+        freed buffers."""
+        snap = {
+            "cache": jax.device_get(self.cache),
+            "pos": self.pos.copy(), "tokens": self.tokens.copy(),
+            "live": self.live.copy(), "clean": self._clean.copy(),
+            "temperature": self.temperature.copy(),
+            "top_k": self.top_k.copy(),
+            "stop_pos": self.stop_pos.copy(), "hist": self.hist.copy(),
+            "gen_step": self._gen_step, "round": self._round,
+            "next_id": self._next_id,
+            "head_blocked": self._head_blocked,
+            "outputs": [None if o is None else list(o)
+                        for o in self.outputs],
+            "done": list(self.done),
+            "waiting": [_copy_record(r) for r in self.waiting],
+            "req_meta": {s: dict(m) for s, m in self._req_meta.items()},
+            "results": {k: {"status": v["status"],
+                            "tokens": list(v["tokens"])}
+                        for k, v in self.results.items()},
+            "counters": dict(self.counters),
+            "request_log": [dict(r) for r in self.request_log],
+        }
+        if self.paged:
+            snap["allocator"] = self.allocator.state()
+            snap["block_tables"] = self.block_tables.copy()
+            snap["bt_dirty"] = self._bt_dirty
+            snap["slot_pages"] = {s: list(p)
+                                  for s, p in self._slot_pages.items()}
+        if self.draft is not None:
+            snap["draft_cache"] = jax.device_get(self.draft_cache)
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Rewind the engine to :meth:`snapshot` state; the snapshot
+        stays pristine (everything mutable is re-copied), so one
+        snapshot survives any number of replays."""
+        self.cache = jax.device_put(snap["cache"], self._cache_sh)
+        self.pos = snap["pos"].copy()
+        self.tokens = snap["tokens"].copy()
+        self.live = snap["live"].copy()
+        self._clean = snap["clean"].copy()
+        self.temperature = snap["temperature"].copy()
+        self.top_k = snap["top_k"].copy()
+        self.stop_pos = snap["stop_pos"].copy()
+        self.hist = snap["hist"].copy()
+        self._gen_step = snap["gen_step"]
+        self._round = snap["round"]
+        self._next_id = snap["next_id"]
+        self._head_blocked = snap["head_blocked"]
+        self.outputs = [None if o is None else list(o)
+                        for o in snap["outputs"]]
+        self.done = list(snap["done"])
+        self.waiting = deque(_copy_record(r) for r in snap["waiting"])
+        self._req_meta = {s: dict(m) for s, m in snap["req_meta"].items()}
+        self.results = {k: {"status": v["status"],
+                            "tokens": list(v["tokens"])}
+                        for k, v in snap["results"].items()}
+        self.counters = dict(snap["counters"])
+        self.request_log = [dict(r) for r in snap["request_log"]]
+        if self.paged:
+            self.allocator.load_state(snap["allocator"])
+            self.block_tables = snap["block_tables"].copy()
+            self._bt_dirty = snap["bt_dirty"]
+            self._slot_pages = {s: list(p)
+                                for s, p in snap["slot_pages"].items()}
+        if self.draft is not None and "draft_cache" in snap:
+            self.draft_cache = jax.device_put(snap["draft_cache"])
+
+    def save_snapshot(self, directory: str, step: int = 0) -> str:
+        """Persist :meth:`snapshot` to disk with the checkpoint store's
+        atomics (write to ``.tmp``, ``os.replace``): a crash mid-save
+        can never corrupt the newest complete snapshot."""
+        from ..checkpoint.store import save_blob
+        return save_blob(self.snapshot(), directory, step)
+
+    def load_snapshot(self, directory: str,
+                      step: Optional[int] = None) -> None:
+        """Restore the newest (or given) on-disk snapshot."""
+        from ..checkpoint.store import latest_step, load_blob
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no engine snapshot under "
+                                        f"{directory}")
+        self.restore(load_blob(directory, step))
+
+    def _poison_cache(self, value: float) -> None:
+        """Chaos hook: overwrite every float leaf of the serving cache.
+
+        Block tables and integer page payloads stay intact — injected
+        corruption models bad page *contents*; a structurally broken
+        table is an allocator bug, tested separately."""
+        val = float(value)
+        self.cache = jax.tree_util.tree_map(
+            lambda leaf: (jnp.full_like(leaf, val)
+                          if jnp.issubdtype(leaf.dtype, jnp.floating)
+                          else leaf),
+            self.cache)
 
     # -- telemetry -----------------------------------------------------------
     def stats(self) -> dict:
@@ -827,6 +1406,16 @@ class Engine:
             # with (cost-model choice unless pinned by flag/ctx)
             out["kv_split"] = self.kv_split
             out["pages_per_step"] = self.pages_per_step
+        # lifecycle / robustness counters (see the PR 6 layer): how many
+        # requests left through each non-happy path, and what the
+        # degradation machinery did about pressure and faults
+        out["queued"] = len(self.waiting)
+        for k in ("preemptions", "cancellations", "timeouts", "failures",
+                  "replays", "spilled_pages", "shed_spec_rounds",
+                  "straggler_blocks"):
+            out[k] = c[k]
+        out["straggler_events"] = (len(self.straggler.events)
+                                   if self.straggler is not None else 0)
         return out
 
 
@@ -901,6 +1490,19 @@ def main(argv=None):
                          "prompt-lookup self-speculation, no second model")
     ap.add_argument("--spec-ngram", type=int, default=2,
                     help="context length of the prompt-lookup match")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preempt-and-spill (paged mode): under page "
+                         "pressure spill a running victim's pages to "
+                         "host memory and resume it later — graceful "
+                         "degradation instead of head-of-line blocking")
+    ap.add_argument("--shed-threshold", type=float, default=None,
+                    help="page-pool occupancy (0..1) past which the "
+                         "engine sheds pressure: halves the decode "
+                         "block and skips speculation for the block")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL from submission; past it the "
+                         "request times out at the next block boundary "
+                         "and returns its partial output")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -942,7 +1544,8 @@ def main(argv=None):
                      pages_per_step=knob(args.pages_per_step),
                      spec=args.spec,
                      spec_k=args.spec_k, spec_draft=spec_draft,
-                     spec_ngram=args.spec_ngram)
+                     spec_ngram=args.spec_ngram, preempt=args.preempt,
+                     shed_threshold=args.shed_threshold)
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
@@ -956,7 +1559,8 @@ def main(argv=None):
         # cover, one block's latency after they free up
         for p in prompts:
             eng.submit(p, gen_len=args.gen_len,
-                       temperature=args.temperature, top_k=args.top_k)
+                       temperature=args.temperature, top_k=args.top_k,
+                       deadline_s=args.deadline_s)
         eng.try_admit()
         while eng.live.any() or eng.waiting:
             _, block_live = eng.step_many(block)
@@ -996,6 +1600,16 @@ def print_stats_table(st: dict) -> None:
     if "kv_split" in st:
         rows.append(("kv split / pages per step",
                      f"{st['kv_split']} / {st['pages_per_step']}"))
+    for key, label in (("preemptions", "preemptions"),
+                       ("spilled_pages", "pages spilled"),
+                       ("cancellations", "cancellations"),
+                       ("timeouts", "timeouts"),
+                       ("failures", "failures"),
+                       ("replays", "fault replays"),
+                       ("shed_spec_rounds", "spec rounds shed"),
+                       ("straggler_blocks", "straggler blocks")):
+        if st.get(key):
+            rows.append((label, f"{st[key]}"))
     width = max(len(k) for k, _ in rows)
     print("-- serving stats " + "-" * (width + 8))
     for k, v in rows:

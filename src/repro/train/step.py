@@ -141,7 +141,7 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
 
         decode_loop(params, cache, tokens, pos, live, stop_pos,
                     sample_params, key, step0, eos_id)
-            -> (cache, tokens, pos, live, block_tokens, block_live)
+            -> (cache, tokens, pos, live, block_tokens, block_live, fault)
 
     * ``tokens`` (B, 1) i32 — each slot's next input token.
     * ``pos`` (B,) i32 — current cache position per slot.  With a
@@ -177,6 +177,15 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
     ``block_tokens``/``block_live`` (steps, B): the token each slot
     *emitted* at each step (its input token, matching ``Engine.step``'s
     append-then-advance order) and whether the slot was live then.
+
+    ``fault`` (B,) bool is the abort/status lane: a live slot whose
+    logits come back non-finite (poisoned cache, kernel NaN) is frozen
+    *on device* — its faulted step commits nothing (position/token held,
+    emission masked) and the flag rides back with the block, so the host
+    engine learns of device-side corruption from the block result itself
+    and can restore-and-replay or fail the slot with its valid prefix.
+    For finite logits the lane is identically False and the emitted
+    stream is unchanged.
     """
     from ..kernels.ops import sample_tokens
     from ..models.api import decode_fn
@@ -187,24 +196,27 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
         top_k = sample_params["top_k"]
 
         def body(carry, i):
-            cache, tok, pos, live = carry
+            cache, tok, pos, live, fault = carry
             logits, new_cache = decode_fn(params, tok, cache, pos, cfg, ctx)
+            last = logits[:, -1].astype(jnp.float32)
+            bad = live & ~jnp.all(jnp.isfinite(last), axis=-1)
+            ok = live & ~bad
             step_key = (None if key is None
                         else jax.random.fold_in(key, step0 + i))
-            nxt = sample_tokens(logits[:, -1].astype(jnp.float32),
-                                temperature, top_k, step_key,
+            nxt = sample_tokens(last, temperature, top_k, step_key,
                                 backend=ctx.backend)
-            emitted, emit_live = tok[:, 0], live
-            new_pos = jnp.where(live, pos + 1, pos)
-            new_tok = jnp.where(live, nxt, tok[:, 0])[:, None]
-            new_live = live & (nxt != eos_id) & (new_pos < stop_pos)
-            return (new_cache, new_tok, new_pos, new_live), \
+            emitted, emit_live = tok[:, 0], ok
+            new_pos = jnp.where(ok, pos + 1, pos)
+            new_tok = jnp.where(ok, nxt, tok[:, 0])[:, None]
+            new_live = ok & (nxt != eos_id) & (new_pos < stop_pos)
+            return (new_cache, new_tok, new_pos, new_live, fault | bad), \
                 (emitted, emit_live)
 
-        (cache, tokens, pos, live), (block_tokens, block_live) = \
-            jax.lax.scan(body, (cache, tokens, pos, live),
+        fault0 = jnp.zeros_like(live)
+        (cache, tokens, pos, live, fault), (block_tokens, block_live) = \
+            jax.lax.scan(body, (cache, tokens, pos, live, fault0),
                          jnp.arange(steps, dtype=jnp.int32))
-        return cache, tokens, pos, live, block_tokens, block_live
+        return cache, tokens, pos, live, block_tokens, block_live, fault
 
     return decode_loop
 
@@ -263,7 +275,12 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
         spec_loop(params, cache, tokens, pos, live, stop_pos,
                   sample_params, key, step0, eos_id, hist)
             -> (cache, tokens, pos, live, hist,
-                block_tokens, block_live, accepted)
+                block_tokens, block_live, accepted, fault)
+
+    ``fault`` (B,) is the same abort/status lane as the plain decode
+    loop: a round whose verify logits are non-finite commits nothing
+    for the affected slot (position/token held, emissions and history
+    writes masked, accepted = 0) and flags it for the host.
 
     model drafter replaces the trailing ``hist`` with
     ``(draft_params, draft_cache)`` and returns the advanced (rolled
@@ -347,7 +364,7 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
         jdraft = jnp.arange(k)
 
         def body(carry, i):
-            cache, tok, pos, live, aux = carry
+            cache, tok, pos, live, aux, fault = carry
             # -- draft ------------------------------------------------
             if model_draft:
                 drafts, aux, dckpts = draft_with_model(draft_params, aux,
@@ -361,6 +378,9 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
             seq = jnp.concatenate([tok, drafts], axis=1)     # (B, k+1)
             logits, new_cache, ckpts = spec_forward(params, seq, cache,
                                                     pos)
+            bad = live & ~jnp.all(jnp.isfinite(logits.astype(jnp.float32)),
+                                  axis=(1, 2))
+            ok = live & ~bad
             step_key = (None if key is None
                         else jax.random.fold_in(key, step0 + i))
             next_tok, n_adv = verify_tokens(
@@ -391,27 +411,30 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
                 widx = jnp.clip(pos[:, None] + 1 + jdraft[None, :],
                                 0, aux.shape[1] - 1)
                 held = jnp.take_along_axis(aux, widx, axis=1)
-                wmask = live[:, None] & (jdraft[None, :]
-                                         < n_fin[:, None] - 1)
+                wmask = ok[:, None] & (jdraft[None, :]
+                                       < n_fin[:, None] - 1)
                 aux = aux.at[lane[:, None], widx].set(
                     jnp.where(wmask, drafts, held))
             committed = jnp.arange(s_blk)[None, :] < n_fin[:, None]
-            emit_live = live[:, None] & committed            # (B, k+1)
-            new_pos = jnp.where(live, pos + n_fin, pos)
-            new_tok = jnp.where(live, next_tok, tok[:, 0])[:, None]
-            new_live = live & (next_tok != eos_id) & (new_pos < stop_pos)
-            accepted = jnp.where(live, n_fin - 1, 0)
-            return (new_cache, new_tok, new_pos, new_live, aux), \
-                (seq, emit_live, accepted)
+            emit_live = ok[:, None] & committed              # (B, k+1)
+            new_pos = jnp.where(ok, pos + n_fin, pos)
+            new_tok = jnp.where(ok, next_tok, tok[:, 0])[:, None]
+            new_live = ok & (next_tok != eos_id) & (new_pos < stop_pos)
+            accepted = jnp.where(ok, n_fin - 1, 0)
+            return (new_cache, new_tok, new_pos, new_live, aux,
+                    fault | bad), (seq, emit_live, accepted)
 
-        (cache, tokens, pos, live, carry_aux), (toks, emits, accepted) = \
-            jax.lax.scan(body, (cache, tokens, pos, live, carry_aux),
+        fault0 = jnp.zeros_like(live)
+        (cache, tokens, pos, live, carry_aux, fault), \
+            (toks, emits, accepted) = \
+            jax.lax.scan(body, (cache, tokens, pos, live, carry_aux,
+                                fault0),
                          jnp.arange(steps, dtype=jnp.int32))
         # (steps, B, k+1) -> chronological (steps*(k+1), B)
         block_tokens = toks.transpose(0, 2, 1).reshape(steps * s_blk, -1)
         block_live = emits.transpose(0, 2, 1).reshape(steps * s_blk, -1)
         return (cache, tokens, pos, live, carry_aux,
-                block_tokens, block_live, accepted)
+                block_tokens, block_live, accepted, fault)
 
     return spec_loop
 

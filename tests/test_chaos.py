@@ -1,0 +1,359 @@
+"""Chaos conformance: faulted serving runs ≡ fault-free runs, byte for byte.
+
+The engine's recovery loop (pre-block snapshot → detect → restore →
+replay) must make every injected fault *observationally invisible*:
+for a deterministic fault schedule, the token streams equal the
+fault-free run's exactly — the validate-under-perturbation discipline
+the training stack already applies (``ft.FaultInjector``), turned on
+the serving engine itself.
+
+Also here: snapshot/restore round-trips (in-memory and on-disk via the
+checkpoint store's atomics), the no-recovery FAILED path, and the
+preempt-and-spill degradation that replaces the seed's MemoryError on
+over-committed pools.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dist.constrain import use_mesh
+from repro.ft import (FAULT_KINDS, InjectedFault, PageCorruptionError,
+                      ServingFaultInjector)
+from repro.launch.lifecycle import RequestStatus
+from repro.launch.serve import Engine
+
+from test_paged_serving import _prompts, _serve, _setup
+
+#: one of each fault kind, early enough that every cell's drain hits all
+#: four rounds: a step exception, NaN cache poison (device fault lane),
+#: finite corruption (delayed integrity report), and a straggler block
+FULL_SCHEDULE = {1: "raise", 2: "nan", 3: "corrupt", 4: "slow"}
+
+
+def _mode_kw(mode, spec):
+    kw = {}
+    if mode == "paged":
+        kw.update(paged=True, page_size=8)
+    if spec:
+        kw.update(spec=True)
+    return kw
+
+
+# ===========================================================================
+class TestChaosConformance:
+    """Every (family × cache layout × speculation) cell: streams under
+    the full fault schedule equal the fault-free run's."""
+
+    @pytest.mark.parametrize("family,mode,spec", [
+        ("lm", "dense", False),
+        ("lm", "paged", False),
+        ("lm", "paged", True),
+        pytest.param("lm", "dense", True, marks=pytest.mark.slow),
+        pytest.param("ssm", "dense", False, marks=pytest.mark.slow),
+        pytest.param("ssm", "paged", False, marks=pytest.mark.slow),
+        pytest.param("ssm", "dense", True, marks=pytest.mark.slow),
+        pytest.param("ssm", "paged", True, marks=pytest.mark.slow),
+        pytest.param("hybrid", "dense", False, marks=pytest.mark.slow),
+        pytest.param("hybrid", "paged", False, marks=pytest.mark.slow),
+        pytest.param("hybrid", "dense", True, marks=pytest.mark.slow),
+        pytest.param("hybrid", "paged", True, marks=pytest.mark.slow),
+    ])
+    def test_faulted_run_matches_fault_free(self, family, mode, spec):
+        setup = _setup(family, "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3))
+        kw = _mode_kw(mode, spec)
+        block = 1 if spec else 2          # spec blocks count verify rounds
+        clean = _serve(setup, prompts, gen_len=6, block=block, **kw)
+        injector = ServingFaultInjector(FULL_SCHEDULE)
+        chaos = _serve(setup, prompts, gen_len=6, block=block,
+                       fault_injector=injector, **kw)
+        assert chaos.done == clean.done
+        assert all(r["status"] is RequestStatus.COMPLETED
+                   for r in chaos.results.values())
+        # raise/nan/corrupt each cost exactly one replay; slow costs none
+        assert chaos.counters["replays"] == 3
+        assert sorted(k for _, k in injector.events) == sorted(FAULT_KINDS)
+
+    def test_each_kind_alone_is_invisible(self):
+        """Per-kind isolation: any single fault recovers on its own."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5), seed=8)
+        clean = _serve(setup, prompts, gen_len=6, block=2,
+                       paged=True, page_size=8)
+        for kind in FAULT_KINDS:
+            injector = ServingFaultInjector({2: kind})
+            chaos = _serve(setup, prompts, gen_len=6, block=2,
+                           paged=True, page_size=8,
+                           fault_injector=injector)
+            assert chaos.done == clean.done, kind
+            assert injector.events == [(2, kind)]
+
+    @pytest.mark.slow
+    def test_randomized_seeded_schedules_conform(self):
+        """Longer sweep: random (round, kind) schedules, every one must
+        still produce the fault-free streams — seeded, so a failure is
+        exactly reproducible from the printed seed."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=9)
+        clean = _serve(setup, prompts, gen_len=6, block=2,
+                       paged=True, page_size=8)
+        for seed in range(6):
+            rs = np.random.RandomState(seed)
+            sched = [(int(rs.randint(1, 9)),
+                      FAULT_KINDS[rs.randint(len(FAULT_KINDS))])
+                     for _ in range(rs.randint(2, 5))]
+            sched = list({rk: None for rk in sched})     # dedup, keep order
+            injector = ServingFaultInjector(sched)
+            chaos = _serve(setup, prompts, gen_len=6, block=2,
+                           paged=True, page_size=8, fault_injector=injector)
+            assert chaos.done == clean.done, f"seed={seed} sched={sched}"
+
+    def test_int8_weights_chaos(self):
+        setup = _setup("lm", "int8")
+        prompts = _prompts(setup[0], (9, 5), seed=10)
+        clean = _serve(setup, prompts, gen_len=6, block=2,
+                       paged=True, page_size=8)
+        chaos = _serve(setup, prompts, gen_len=6, block=2,
+                       paged=True, page_size=8,
+                       fault_injector=ServingFaultInjector(FULL_SCHEDULE))
+        assert chaos.done == clean.done
+
+
+# ===========================================================================
+class TestSnapshotRestore:
+    def test_in_memory_round_trip_replays_identically(self):
+        """snapshot → keep decoding → restore → decode again: the two
+        futures from the same snapshot are byte-identical, including
+        allocator free-list order and block tables."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (9, 5, 12), seed=11)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                         paged=True, page_size=4, recover=True)
+            for p in prompts:
+                eng.submit(p, gen_len=6)
+            eng.try_admit()
+            eng.step_many(2)
+            snap = eng.snapshot()
+
+            def run_out():
+                while eng.live.any() or eng.waiting:
+                    eng.step_many(2)
+                eng.retire_finished()
+                return (list(eng.done),
+                        {k: (v["status"], tuple(v["tokens"]))
+                         for k, v in eng.results.items()},
+                        eng.allocator.state(), eng.block_tables.copy(),
+                        eng.pos.copy(), eng._gen_step)
+
+            first = run_out()
+            eng.restore(snap)
+            # restore rewinds the observable state to the snapshot
+            assert np.array_equal(eng.pos, snap["pos"])
+            assert eng.allocator.state() == snap["allocator"]
+            assert len(eng.waiting) == len(snap["waiting"])
+            second = run_out()
+        assert first[0] == second[0]
+        assert first[1] == second[1]
+        assert first[2] == second[2]
+        assert np.array_equal(first[3], second[3])
+        assert np.array_equal(first[4], second[4])
+        assert first[5] == second[5]
+
+    def test_disk_snapshot_resumes_in_fresh_engine(self, tmp_path):
+        """save_snapshot mid-stream, load into a NEW engine built from
+        the same constructor args: the continuation equals the original
+        engine's — a process restart is invisible to the streams."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (9, 5, 12), seed=12)
+        kw = dict(batch=2, max_len=24, paged=True, page_size=4)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, **kw)
+            for p in prompts:
+                eng.submit(p, gen_len=6)
+            eng.try_admit()
+            eng.step_many(2)
+            eng.save_snapshot(str(tmp_path), step=7)
+            while eng.live.any() or eng.waiting:
+                eng.step_many(2)
+            eng.retire_finished()
+
+            eng2 = Engine(cfg, ctx, params, mesh, **kw)
+            eng2.load_snapshot(str(tmp_path))        # newest = step 7
+            while eng2.live.any() or eng2.waiting:
+                eng2.step_many(2)
+            eng2.retire_finished()
+        assert eng2.done == eng.done
+        assert {k: v["tokens"] for k, v in eng2.results.items()} \
+            == {k: v["tokens"] for k, v in eng.results.items()}
+        assert eng2.allocator.used_pages == 0
+
+    def test_load_snapshot_missing_raises(self, tmp_path):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24)
+            with pytest.raises(FileNotFoundError):
+                eng.load_snapshot(str(tmp_path / "nope"))
+
+
+# ===========================================================================
+class TestNoRecoveryPath:
+    def test_device_fault_fails_slots_with_partial_output(self):
+        """recover=False: a NaN-poisoned block freezes the affected
+        slots on device (commits nothing for the faulted step) and the
+        host finishes them FAILED with their valid prefix — no
+        exception escapes step_many."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (9, 5), seed=13)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                         fault_injector=ServingFaultInjector({2: "nan"}),
+                         recover=False)
+            ids = [eng.submit(p, gen_len=6) for p in prompts]
+            eng.try_admit()
+            eng.step_many(2)                 # round 1: clean, 2 tokens
+            eng.step_many(2)                 # round 2: poisoned
+        for rid in ids:
+            assert eng.status(rid) is RequestStatus.FAILED
+            assert eng.results[rid]["tokens"] != []
+            assert len(eng.results[rid]["tokens"]) == 2
+        assert eng.counters["failures"] == 2
+        assert eng.counters["replays"] == 0
+
+    def test_host_fault_propagates_without_recovery(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                         fault_injector=ServingFaultInjector({1: "raise"}),
+                         recover=False)
+            eng.submit(_prompts(cfg, (6,))[0], gen_len=4)
+            eng.try_admit()
+            with pytest.raises(InjectedFault):
+                eng.step_many(2)
+
+    def test_corruption_report_propagates_without_recovery(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                         fault_injector=ServingFaultInjector({1: "corrupt"}),
+                         recover=False)
+            eng.submit(_prompts(cfg, (6,))[0], gen_len=4)
+            eng.try_admit()
+            with pytest.raises(PageCorruptionError):
+                eng.step_many(2)
+
+
+# ===========================================================================
+class TestPreemptAndSpill:
+    """Over-committed pools degrade gracefully instead of raising."""
+
+    def test_seed_path_raises_where_preempt_completes(self):
+        """The acceptance contrast: direct admission onto an exhausted
+        pool raises MemoryError without preemption; with preempt=True
+        the same admission spills a victim, serves the newcomer, then
+        resumes the victim — and every stream still matches a run on an
+        uncontended pool."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (10, 10, 10), seed=14)
+        kw = dict(batch=3, max_len=24, paged=True, page_size=4,
+                  num_pages=8)        # 4 pages per request: pool fits two
+        with use_mesh(mesh):
+            seed_eng = Engine(cfg, ctx, params, mesh, **kw)
+            seed_eng.add_requests({0: prompts[0], 1: prompts[1]}, gen_len=6)
+            with pytest.raises(MemoryError, match="exhausted"):
+                seed_eng.add_requests({2: prompts[2]}, gen_len=6)
+
+            eng = Engine(cfg, ctx, params, mesh, preempt=True, **kw)
+            eng.add_requests({0: prompts[0], 1: prompts[1]}, gen_len=6)
+            eng.add_requests({2: prompts[2]}, gen_len=6)   # spills a victim
+            assert eng.counters["preemptions"] == 1
+            assert len(eng.waiting) == 1        # the victim, re-queued
+            while eng.live.any() or eng.waiting:
+                eng.step_many(2)
+            eng.retire_finished()
+
+            ample = _serve(setup, prompts, gen_len=6, max_len=24, batch=3,
+                           paged=True, page_size=4, num_pages=12, block=2)
+        assert sorted(map(tuple, eng.done)) \
+            == sorted(map(tuple, ample.done))
+        assert all(r["status"] is RequestStatus.COMPLETED
+                   for r in eng.results.values())
+        assert eng.allocator.used_pages == 0
+
+    @pytest.mark.parametrize("family", [
+        "lm",
+        pytest.param("ssm", marks=pytest.mark.slow),
+        pytest.param("hybrid", marks=pytest.mark.slow),
+    ])
+    def test_bursty_overcommit_streams_are_byte_identical(self, family):
+        """A burst of submits over an under-provisioned pool completes
+        through preempt-and-spill with every stream equal to the
+        uncontended reference — resumed requests pick up exactly where
+        their spilled pages and recurrent lanes left off (no
+        recompute)."""
+        setup = _setup(family, "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (10, 10, 10, 10), seed=15)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=3, max_len=24,
+                         paged=True, page_size=4, num_pages=8,
+                         preempt=True, preempt_after=2)
+            ids = [eng.submit(p, gen_len=6) for p in prompts]
+            eng.try_admit()
+            seen = set()
+            while eng.live.any() or eng.waiting:
+                eng.step_many(2)
+                seen.update(eng.status(i) for i in ids)
+            eng.retire_finished()
+        assert eng.counters["preemptions"] > 0
+        assert eng.counters["spilled_pages"] > 0
+        assert RequestStatus.PREEMPTED in seen       # observable mid-run
+        assert all(eng.status(i) is RequestStatus.COMPLETED for i in ids)
+
+        # _serve submits in the same order, so ids mint identically
+        reference = _serve(setup, prompts, gen_len=6, max_len=24, batch=3,
+                           paged=True, page_size=4, num_pages=16, block=2)
+        for rid in ids:
+            assert eng.results[rid]["tokens"] \
+                == reference.results[rid]["tokens"]
+
+    def test_preempt_requires_paged(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            with pytest.raises(ValueError, match="paged"):
+                Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                       preempt=True)
+
+    def test_preempt_under_chaos_still_conforms(self):
+        """Preemption and fault recovery compose: spills + replays in
+        the same run, streams still byte-identical to the uncontended
+        fault-free reference."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (10, 10, 10, 10), seed=16)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=3, max_len=24,
+                         paged=True, page_size=4, num_pages=8,
+                         preempt=True, preempt_after=2,
+                         fault_injector=ServingFaultInjector(
+                             {2: "raise", 3: "nan"}))
+            ids = [eng.submit(p, gen_len=6) for p in prompts]
+            eng.try_admit()
+            while eng.live.any() or eng.waiting:
+                eng.step_many(2)
+            eng.retire_finished()
+        assert eng.counters["replays"] == 2
+        assert eng.counters["preemptions"] > 0
+        reference = _serve(setup, prompts, gen_len=6, max_len=24, batch=3,
+                           paged=True, page_size=4, num_pages=16, block=2)
+        for rid in ids:
+            assert eng.results[rid]["tokens"] \
+                == reference.results[rid]["tokens"]

@@ -311,3 +311,105 @@ class TestPageAllocatorProperties:
         alloc.free(pages)
         with pytest.raises(ValueError):
             alloc.free(pages)
+
+    def test_failed_free_is_atomic(self):
+        """A free() mixing valid and already-free ids must raise WITHOUT
+        half-freeing the valid ones — the idempotent-double-free guard
+        that keeps preempt/restore cycles from listing a page twice."""
+        alloc = PageAllocator(8, 4)
+        held = alloc.alloc(4, owner="a")
+        freed = held[:2]
+        alloc.free(freed)
+        before = alloc.state()
+        with pytest.raises(ValueError, match="not allocated"):
+            alloc.free([held[2], freed[0]])          # valid + double-free
+        with pytest.raises(ValueError, match="duplicate"):
+            alloc.free([held[2], held[2]])           # in-call duplicate
+        assert alloc.state() == before               # untouched either way
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 48), st.integers(0, 2 ** 16))
+    def test_spill_adopt_interleavings_never_double_assign(
+            self, num_pages, seed):
+        """Preempt/resume as the allocator sees it: random alloc /
+        free / spill(owner) / adopt(spilled ids) interleavings.  The
+        invariants: a spill returns exactly the owner's pages, an adopt
+        claims exactly the requested free ids, and no page is ever
+        assigned to two owners at once across any cycle."""
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 4)
+        held: dict = {}                  # owner -> pages on the "device"
+        spilled: dict = {}               # owner -> pages copied to host
+        for step in range(80):
+            ops = ["alloc"]
+            if held:
+                ops += ["free", "spill"]
+            if spilled:
+                ops += ["adopt"]
+            op = ops[rs.randint(len(ops))]
+            if op == "alloc":
+                n = int(rs.randint(0, alloc.free_pages + 1))
+                pages = alloc.alloc(n, owner=("r", step))
+                if pages:
+                    held[("r", step)] = pages
+            elif op == "free":
+                owner = sorted(held)[rs.randint(len(held))]
+                alloc.free(held.pop(owner))
+            elif op == "spill":
+                owner = sorted(held)[rs.randint(len(held))]
+                pages = alloc.spill(owner)
+                assert sorted(pages) == sorted(held.pop(owner))
+                spilled[owner] = pages
+            else:                        # adopt: resume a spilled victim
+                owner = sorted(spilled)[rs.randint(len(spilled))]
+                pages = spilled.pop(owner)
+                free_set = set(alloc.state()["free"])
+                if set(pages) <= free_set:
+                    alloc.adopt(pages, owner=owner)
+                    held[owner] = pages
+                else:                    # ids re-issued meanwhile: the
+                    with pytest.raises(ValueError):  # claim must refuse
+                        alloc.adopt(pages, owner=owner)
+            # global invariant: held owners partition the used pages
+            used = [p for pages in held.values() for p in pages]
+            assert len(set(used)) == len(used)
+            assert alloc.used_pages == len(used)
+            for owner, pages in held.items():
+                assert sorted(alloc.pages_of(owner)) == sorted(pages)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 32), st.integers(0, 2 ** 16))
+    def test_state_round_trip_preserves_alloc_order(self, num_pages, seed):
+        """load_state(state()) must reproduce the free-list ORDER: the
+        next allocations after a restore hand out the same physical ids
+        the original would — engine replay determinism rests on it."""
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 4)
+        for step in range(12):
+            if rs.rand() < 0.5 and alloc.free_pages:
+                alloc.alloc(int(rs.randint(1, alloc.free_pages + 1)),
+                            owner=step)
+            else:
+                owners = {o for o in alloc.state()["owner"].values()}
+                if owners:
+                    alloc.spill(sorted(owners)[0])
+        saved = alloc.state()
+        twin = PageAllocator(num_pages, 4)
+        twin.load_state(saved)
+        n = min(3, alloc.free_pages)
+        assert twin.alloc(n, owner="x") == alloc.alloc(n, owner="x")
+
+    def test_load_state_rejects_non_partition(self):
+        alloc = PageAllocator(4, 4)
+        with pytest.raises(ValueError, match="partition"):
+            alloc.load_state({"free": [0, 1], "owner": {1: "a", 3: "b"}})
+
+    def test_adopt_rejects_assigned_or_unknown_ids(self):
+        alloc = PageAllocator(4, 4)
+        mine = alloc.alloc(2, owner="a")
+        before = alloc.state()
+        with pytest.raises(ValueError, match="already assigned"):
+            alloc.adopt([mine[0]], owner="b")
+        with pytest.raises(ValueError, match="not a valid free page"):
+            alloc.adopt([99], owner="b")
+        assert alloc.state() == before               # atomic: no change

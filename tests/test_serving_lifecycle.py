@@ -1,0 +1,353 @@
+"""Request-lifecycle robustness: validation, status, cancel, deadlines.
+
+Every request now moves through an explicit state machine (QUEUED →
+RUNNING → {COMPLETED, CANCELLED, TIMED_OUT, PREEMPTED, FAILED}) keyed
+by the id ``submit`` returns.  This suite pins the host-side contract:
+
+* malformed requests are rejected at ``submit()`` — one test per
+  rejection class — before they can poison a device batch;
+* ``status``/``cancel``/``results`` behave at every lifecycle stage,
+  and a cancelled lane recycles cleanly (the next request's stream is
+  byte-identical to a fresh engine's);
+* deadlines are TTLs checked at block boundaries against the engine's
+  injectable clock — expired requests finish TIMED_OUT with their
+  partial output instead of raising;
+* the wired-in StragglerMonitor flags slow blocks in ``stats()``;
+* pressure shedding changes block shape, never greedy streams.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dist.constrain import use_mesh
+from repro.ft import ServingFaultInjector, StragglerMonitor
+from repro.launch.lifecycle import RequestStatus, validate_request
+from repro.launch.serve import Engine
+
+from test_paged_serving import _prompts, _serve, _setup
+
+
+class FakeClock:
+    """Deterministic time source for the engine's ``clock`` seam."""
+
+    def __init__(self, t=0.0, tick=0.0):
+        self.t = float(t)
+        self.tick = float(tick)     # auto-advance per read (block timing)
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def advance(self, dt):
+        self.t += float(dt)
+
+
+def _engine(setup, **kw):
+    cfg, ctx, params, mesh = setup
+    kw.setdefault("batch", 2)
+    kw.setdefault("max_len", 24)
+    return Engine(cfg, ctx, params, mesh, **kw)
+
+
+def _drain(eng, block=4):
+    while eng.live.any() or eng.waiting:
+        eng.step_many(block)
+    eng.retire_finished()
+    return eng
+
+
+# ===========================================================================
+class TestInputValidation:
+    """One rejection test per malformed-request class: each must raise
+    at submit() and leave the queue untouched."""
+
+    def _eng(self):
+        return _engine(_setup("lm", "f32"))
+
+    def test_rejects_negative_temperature(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="temperature"):
+                eng.submit(_prompts(setup[0], (4,))[0], temperature=-0.5)
+            assert not eng.waiting
+
+    def test_rejects_negative_top_k(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="top_k"):
+                eng.submit(_prompts(setup[0], (4,))[0], top_k=-3)
+            assert not eng.waiting
+
+    def test_rejects_non_integer_token_ids(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="integer"):
+                eng.submit(np.array([1.0, 2.5, 3.0]))
+            assert not eng.waiting
+
+    def test_rejects_out_of_vocab_token_ids(self):
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="vocab"):
+                eng.submit(np.array([0, cfg.vocab], np.int32))
+            with pytest.raises(ValueError, match="vocab"):
+                eng.submit(np.array([-1, 0], np.int32))
+            assert not eng.waiting
+
+    def test_rejects_non_positive_deadline(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="deadline"):
+                eng.submit(_prompts(setup[0], (4,))[0], deadline_s=0.0)
+            assert not eng.waiting
+
+    def test_validate_request_accepts_and_canonicalizes(self):
+        out = validate_request([3, 1, 4], vocab=10, temperature=0.7,
+                               top_k=5, deadline_s=1.0)
+        assert out.dtype == np.int32 and out.tolist() == [3, 1, 4]
+        # per-slot dicts (the add_requests path) validate per entry
+        with pytest.raises(ValueError, match="temperature"):
+            validate_request([1], vocab=10, temperature={0: 0.5, 1: -1.0})
+
+    def test_direct_add_requests_validates_too(self):
+        """Slot-addressed admission goes through the same gate."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="vocab"):
+                eng.add_requests({0: np.array([setup[0].vocab], np.int32)},
+                                 gen_len=2)
+            assert not eng.live.any()
+
+
+# ===========================================================================
+class TestStatusAndResults:
+    def test_lifecycle_queued_running_completed(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (6, 6, 6))
+        with use_mesh(mesh):
+            eng = _engine(setup)
+            ids = [eng.submit(p, gen_len=4) for p in prompts]
+            assert ids == [0, 1, 2]                  # minted in order
+            assert all(eng.status(i) is RequestStatus.QUEUED for i in ids)
+            eng.try_admit()
+            # two lanes: first two run, third still queued
+            assert eng.status(ids[0]) is RequestStatus.RUNNING
+            assert eng.status(ids[2]) is RequestStatus.QUEUED
+            _drain(eng)
+        for i in ids:
+            assert eng.status(i) is RequestStatus.COMPLETED
+            assert eng.results[i]["status"] is RequestStatus.COMPLETED
+        # results carry exactly the per-request streams `done` has
+        assert [eng.results[i]["tokens"] for i in ids] == eng.done
+        assert eng.status(999) is None               # unknown id
+
+    def test_stats_surfaces_lifecycle_counters(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup)
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=2)
+            _drain(eng, block=2)
+        st = eng.stats()
+        for key in ("queued", "preemptions", "cancellations", "timeouts",
+                    "failures", "replays", "spilled_pages",
+                    "shed_spec_rounds", "straggler_blocks",
+                    "straggler_events"):
+            assert key in st
+        assert st["queued"] == 0
+
+
+# ===========================================================================
+class TestCancel:
+    def test_cancel_queued_request(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup)
+            rid = eng.submit(_prompts(setup[0], (4,))[0], gen_len=4)
+            assert eng.cancel(rid)
+            assert not eng.waiting
+        assert eng.status(rid) is RequestStatus.CANCELLED
+        assert eng.results[rid]["tokens"] == []
+        assert eng.counters["cancellations"] == 1
+        assert not eng.cancel(rid)                   # already terminal
+
+    def test_cancel_running_keeps_partial_output_and_recycles_lane(self):
+        """A mid-stream cancel finishes the lane NOW with the partial
+        tokens; the recycled lane must serve the next request exactly
+        as a fresh engine would (no stale-state leak)."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (8, 8), seed=4)
+        with use_mesh(mesh):
+            eng = _engine(setup, batch=1)
+            rid0 = eng.submit(prompts[0], gen_len=12)
+            rid1 = eng.submit(prompts[1], gen_len=6)
+            eng.try_admit()
+            eng.step_many(3)                         # partial progress
+            assert eng.cancel(rid0)
+            assert eng.status(rid0) is RequestStatus.CANCELLED
+            assert len(eng.results[rid0]["tokens"]) == 3
+            _drain(eng)
+
+            solo = _engine(setup, batch=1)
+            solo.submit(prompts[1], gen_len=6)
+            _drain(solo)
+        assert eng.results[rid1]["tokens"] == solo.done[0]
+        assert eng.status(rid1) is RequestStatus.COMPLETED
+
+    def test_cancel_running_paged_frees_pages(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup, paged=True, page_size=4, num_pages=12)
+            rid = eng.submit(_prompts(setup[0], (8,))[0], gen_len=8)
+            eng.try_admit()
+            assert eng.allocator.used_pages > 0
+            eng.step_many(2)
+            assert eng.cancel(rid)
+            assert eng.allocator.used_pages == 0
+
+    def test_cancel_unknown_id(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup)
+            assert not eng.cancel(123)
+
+
+# ===========================================================================
+class TestDeadlines:
+    def test_queued_request_times_out_without_a_lane(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        clock = FakeClock()
+        prompts = _prompts(cfg, (6, 6), seed=5)
+        with use_mesh(mesh):
+            eng = _engine(setup, batch=1, clock=clock)
+            rid0 = eng.submit(prompts[0], gen_len=8)
+            rid1 = eng.submit(prompts[1], gen_len=4, deadline_s=5.0)
+            eng.try_admit()                          # rid0 takes the lane
+            clock.advance(10.0)                      # rid1's TTL expires
+            eng.step_many(2)
+        assert eng.status(rid1) is RequestStatus.TIMED_OUT
+        assert eng.results[rid1]["tokens"] == []
+        assert eng.counters["timeouts"] == 1
+        assert eng.status(rid0) is RequestStatus.RUNNING  # unaffected
+
+    def test_running_request_times_out_with_partial_output(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        clock = FakeClock()
+        with use_mesh(mesh):
+            eng = _engine(setup, clock=clock)
+            rid = eng.submit(_prompts(cfg, (6,))[0], gen_len=16,
+                             deadline_s=5.0)
+            eng.try_admit()
+            eng.step_many(3)                         # 3 tokens committed
+            clock.advance(10.0)
+            eng.step_many(1)                         # boundary sweep fires
+        assert eng.status(rid) is RequestStatus.TIMED_OUT
+        # partial output is returned, not discarded: the 3 pre-expiry
+        # tokens (the sweep runs before the block decodes more)
+        assert len(eng.results[rid]["tokens"]) == 3
+        assert eng.counters["timeouts"] == 1
+
+    def test_no_deadline_means_no_timeout(self):
+        setup = _setup("lm", "f32")
+        clock = FakeClock()
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=clock)
+            rid = eng.submit(_prompts(setup[0], (6,))[0], gen_len=4)
+            clock.advance(1e6)
+            _drain(eng, block=2)
+        assert eng.status(rid) is RequestStatus.COMPLETED
+
+    def test_finished_unretired_slot_is_not_timed_out(self):
+        """A slot whose generation already ended but whose lane has not
+        retired yet must finish COMPLETED even if its TTL has passed —
+        the deadline governs decoding, not retirement latency."""
+        setup = _setup("lm", "f32")
+        clock = FakeClock()
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=clock)
+            rid = eng.submit(_prompts(setup[0], (6,))[0], gen_len=2,
+                             deadline_s=50.0)
+            eng.try_admit()
+            eng.step_many(4)              # generation ends inside block
+            assert not eng.live.any()
+            clock.advance(100.0)
+            eng.step_many(1)              # sweep sees a dead, done slot
+            eng.retire_finished()
+        assert eng.status(rid) is RequestStatus.COMPLETED
+
+
+# ===========================================================================
+class TestStraggler:
+    def test_injected_slow_block_is_flagged(self):
+        """The slow fault adds a deterministic synthetic penalty through
+        the clock seam; after a warmup history the monitor flags it and
+        the event lands in stats()."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(
+                setup,
+                fault_injector=ServingFaultInjector({8: "slow"}),
+                straggler=StragglerMonitor(window=8, ratio=1.5, patience=1))
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=12)
+            eng.try_admit()
+            for _ in range(12):
+                if not (eng.live.any() or eng.waiting):
+                    break
+                eng.step_many(1)
+        st = eng.stats()
+        assert eng.fault_injector.events == [(8, "slow")]
+        assert st["straggler_blocks"] >= 1
+        assert st["straggler_events"]
+        # flagged round recorded with its (inflated) duration
+        rounds = [r for r, _ in eng.straggler.events]
+        assert 8 in rounds
+
+    def test_clean_run_flags_nothing(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(
+                setup,
+                straggler=StragglerMonitor(window=8, ratio=100.0,
+                                           patience=1))
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=10)
+            _drain(eng, block=1)
+        assert eng.stats()["straggler_blocks"] == 0
+        assert not eng.straggler.events
+
+
+# ===========================================================================
+class TestShedding:
+    def test_shed_blocks_keep_streams_identical(self):
+        """Past the occupancy threshold the engine halves its block —
+        a shape change only: greedy streams must not move."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (8, 6, 9), seed=6)
+        base = _serve(setup, prompts, gen_len=6, max_len=24,
+                      paged=True, page_size=4, num_pages=12)
+        shed = _serve(setup, prompts, gen_len=6, max_len=24,
+                      paged=True, page_size=4, num_pages=12,
+                      shed_threshold=0.25)
+        assert shed.done == base.done
+
+    def test_shed_drops_speculation_under_pressure(self):
+        """With speculation on and the pool past threshold, spec rounds
+        are shed (counted) and the stream still matches the plain dense
+        engine byte for byte."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (8, 8), seed=7)
+        dense = _serve(setup, prompts, gen_len=6, max_len=24)
+        shed = _serve(setup, prompts, gen_len=6, max_len=24,
+                      paged=True, page_size=4, num_pages=8,
+                      spec=True, shed_threshold=0.1)
+        assert shed.done == dense.done
+        assert shed.counters["shed_spec_rounds"] > 0
