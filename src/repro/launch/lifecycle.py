@@ -32,7 +32,8 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["RequestStatus", "TERMINAL_STATUSES", "validate_request"]
+__all__ = ["RequestStatus", "TERMINAL_STATUSES", "validate_request",
+           "request_row"]
 
 
 class RequestStatus(str, enum.Enum):
@@ -109,6 +110,22 @@ def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
     if deadline_s is not None and float(deadline_s) <= 0:
         raise ValueError(f"deadline_s must be positive (got {deadline_s})")
     return p.astype(np.int32)
+
+
+def request_row(*, ttft_s: float, gen_tokens: int, decode_s: float,
+                status: RequestStatus) -> dict:
+    """One ``Engine.request_log`` row for a retired request.
+
+    ``tok_per_s`` is ``None`` — not ``0.0`` — when the decode interval
+    is not measurable (``decode_s == 0`` under fake clocks, or a request
+    that finished within the clock's resolution): a literal zero would
+    read as a stalled request and drag throughput means toward zero, so
+    aggregates must *skip* unmeasurable rows rather than average them.
+    """
+    return {"ttft_s": float(ttft_s), "gen_tokens": int(gen_tokens),
+            "decode_s": float(decode_s), "status": status.value,
+            "tok_per_s": (gen_tokens / decode_s) if decode_s > 0
+            else None}
 
 
 def now() -> float:

@@ -8,13 +8,23 @@ pages its token budget needs.  Admission is then limited by *used*
 tokens, not worst-case ones — the allocator answers "do the freed pages
 cover this prompt?" in O(1) and hands pages out in O(pages).
 
-The allocator is deliberately host-side and trivial: a LIFO free list.
-Every device-visible consequence of an allocation flows through the
-block tables the engine writes into the cache pytree — the allocator
-itself never touches device memory, so its invariants (no double
-assignment, freed pages immediately reusable, no spurious OOM while
-``free >= need``) are plain-Python checkable (see
-tests/test_paged_serving.py property sweeps).
+Pages are *reference counted*: one physical page can back many logical
+consumers (the reuse-factor move applied to cache memory — prefix
+caching maps one stored prefix into every request that shares it).
+``alloc``/``adopt`` create a page with refcount 1, :meth:`share` adds a
+reference, and :meth:`free`/:meth:`spill` drop one — a page returns to
+the free list only when its last reference is dropped.  A non-sharing
+caller sees exactly the old free-list semantics (every count is 1 and
+``free`` really frees).
+
+The allocator is deliberately host-side and trivial.  Every
+device-visible consequence of an allocation flows through the block
+tables the engine writes into the cache pytree — the allocator itself
+never touches device memory, so its invariants (no double assignment,
+freed pages immediately reusable, no spurious OOM while ``free >=
+need``, no page freed while references remain) are plain-Python
+checkable (see tests/test_paged_serving.py and tests/test_prefix_cache.py
+property sweeps).
 """
 
 from __future__ import annotations
@@ -25,7 +35,7 @@ __all__ = ["PageAllocator"]
 
 
 class PageAllocator:
-    """LIFO free-list allocator over page ids ``0 .. num_pages-1``.
+    """Refcounting LIFO free-list allocator over page ids ``0 .. num_pages-1``.
 
     A free list cannot fragment: any ``n <= len(free)`` request is
     satisfiable because pages are position-independent (the block table
@@ -33,6 +43,12 @@ class PageAllocator:
     *physical* page ids).  That is the property the dense layout lacks —
     a dense slot needs ``max_len`` contiguous rows whether or not the
     request uses them.
+
+    Each allocated page has exactly one *owner tag* (who to charge it
+    to — the engine uses slot indices, and the prefix index a sentinel)
+    plus a refcount counting every logical holder.  Sharing does not
+    move ownership; :meth:`transfer` does (the engine re-owns a page to
+    the prefix index when it is published).
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -43,6 +59,13 @@ class PageAllocator:
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         #: page id -> owner tag (engine: slot index); the double-assign guard
         self._owner: Dict[int, object] = {}
+        #: owner tag -> pages in allocation order.  Kept in lockstep with
+        #: ``_owner`` so :meth:`pages_of` is O(own pages), not an
+        #: O(num_pages) scan — ``spill`` calls it per victim, and a heavy
+        #: preemption sweep must not go quadratic in pool size.
+        self._pages: Dict[object, List[int]] = {}
+        #: page id -> reference count (>= 1 while allocated)
+        self._ref: Dict[int, int] = {}
 
     # -- queries ------------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -61,14 +84,23 @@ class PageAllocator:
         return n <= len(self._free)
 
     def pages_of(self, owner) -> List[int]:
-        """The pages currently assigned to ``owner``, in allocation
-        order (dict insertion order — the same order the engine's block
-        table holds them)."""
-        return [p for p, o in self._owner.items() if o == owner]
+        """The pages currently owned by ``owner``, in allocation order
+        (the same order the engine's block table holds them).  O(own
+        pages) via the per-owner list — never a pool-wide scan."""
+        return list(self._pages.get(owner, ()))
+
+    def refcount(self, page: int) -> int:
+        """References held on ``page`` (0 = not allocated)."""
+        return self._ref.get(int(page), 0)
+
+    def shared_pages(self) -> int:
+        """Number of allocated pages with more than one reference."""
+        return sum(1 for r in self._ref.values() if r > 1)
 
     # -- alloc / free -------------------------------------------------------
     def alloc(self, n: int, owner=None) -> List[int]:
-        """Take ``n`` pages off the free list (raises if short).
+        """Take ``n`` pages off the free list (raises if short), each
+        with refcount 1.
 
         ``free_pages >= n`` is the complete admission condition — there
         is no fragmentation failure mode to account for.
@@ -78,51 +110,99 @@ class PageAllocator:
                 f"page pool exhausted: need {n}, free {len(self._free)} "
                 f"of {self.num_pages}")
         pages = [self._free.pop() for _ in range(n)]
+        own = self._pages.setdefault(owner, [])
         for p in pages:
             assert p not in self._owner, f"page {p} double-assigned"
             self._owner[p] = owner
+            self._ref[p] = 1
+            own.append(p)
         return pages
 
-    def free(self, pages: List[int]) -> None:
-        """Return pages to the pool; immediately reusable, O(pages).
+    def share(self, pages: List[int]) -> None:
+        """Add one reference to each page (all must be allocated).
 
-        Atomic: the whole list is validated before any page is freed, so
-        a double-free (or a duplicate within the call) raises without
-        half-freeing — the guard that keeps a preempt/restore cycle from
-        ever putting one page on the free list twice.
+        Atomic: every id is validated before any count moves, so a
+        failed share changes nothing.  Sharing never touches ownership
+        or the free list — it is the O(pages) half of a prefix-cache
+        hit (the other half is a block-table edit on the engine side).
         """
-        pages = list(pages)
+        pages = [int(p) for p in pages]
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(f"page {p} is not allocated; cannot share")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; a page whose count reaches zero
+        returns to the pool (immediately reusable, O(pages)).
+
+        Atomic: the whole list is validated before any reference moves,
+        so a double-free (or a duplicate within the call) raises without
+        half-freeing — the guard that keeps a preempt/restore cycle from
+        ever putting one page on the free list twice.  A page still
+        referenced elsewhere (prefix-shared) survives the call with its
+        owner unchanged: *no page is freed while references remain*.
+        """
+        pages = [int(p) for p in pages]
         if len(set(pages)) != len(pages):
             raise ValueError(f"duplicate page ids in free(): {pages}")
         for p in pages:
             if p not in self._owner:
                 raise ValueError(f"page {p} is not allocated")
         for p in pages:
-            del self._owner[p]
+            self._ref[p] -= 1
+            if self._ref[p] > 0:
+                continue                      # other holders remain
+            del self._ref[p]
+            owner = self._owner.pop(p)
+            self._pages[owner].remove(p)
             self._free.append(p)
+
+    def transfer(self, pages: List[int], owner) -> None:
+        """Re-own allocated pages to ``owner`` (refcounts untouched).
+
+        The publication primitive: a page entering the prefix index is
+        charged to the index rather than the slot that computed it, so
+        ``pages_of(slot)``/``spill(slot)`` keep meaning "pages only this
+        slot holds".  Atomic like every other mutator."""
+        pages = [int(p) for p in pages]
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(f"page {p} is not allocated; "
+                                 f"cannot transfer")
+        dst = self._pages.setdefault(owner, [])
+        for p in pages:
+            old = self._owner[p]
+            if old == owner:
+                continue
+            self._pages[old].remove(p)
+            self._owner[p] = owner
+            dst.append(p)
 
     # -- preempt / restore --------------------------------------------------
     def spill(self, owner) -> List[int]:
-        """Free every page ``owner`` holds; returns them in allocation
-        order.  The preemption primitive: the engine copies the returned
-        pages' payload to host memory *before* calling this, then the
-        ids rejoin the free list exactly as a normal ``free`` would —
-        a later :meth:`alloc` for the resumed request hands out whatever
-        physical ids are free *then* (restore re-targets the payload,
-        it does not pin physical ids)."""
+        """Drop ``owner``'s reference on every page it owns; returns
+        them in allocation order.  The preemption primitive: the engine
+        copies the returned pages' payload to host memory *before*
+        calling this, then exclusively-held ids rejoin the free list
+        exactly as a normal ``free`` would — a later :meth:`alloc` for
+        the resumed request hands out whatever physical ids are free
+        *then* (restore re-targets the payload, it does not pin
+        physical ids)."""
         pages = self.pages_of(owner)
         self.free(pages)
         return pages
 
     def adopt(self, pages: List[int], owner=None) -> None:
-        """Claim *specific* free page ids for ``owner``.
+        """Claim *specific* free page ids for ``owner`` (refcount 1).
 
         The restore-side primitive: re-attaching allocator state from an
         engine snapshot (or migrating pages between pools) must mark the
         exact ids a request held, not whatever the LIFO head offers.
         Atomic: every id is validated free (and unique) before any is
         claimed."""
-        pages = list(pages)
+        pages = [int(p) for p in pages]
         if len(set(pages)) != len(pages):
             raise ValueError(f"duplicate page ids in adopt(): {pages}")
         free_set = set(self._free)
@@ -133,20 +213,48 @@ class PageAllocator:
                 raise ValueError(f"page {p} is not a valid free page")
         taken = set(pages)
         self._free = [p for p in self._free if p not in taken]
+        own = self._pages.setdefault(owner, [])
         for p in pages:
             self._owner[p] = owner
+            self._ref[p] = 1
+            own.append(p)
 
     # -- snapshot / restore -------------------------------------------------
     def state(self) -> dict:
         """Host-copyable allocator state (free-list ORDER included —
-        allocation determinism after a restore depends on it)."""
-        return {"free": list(self._free), "owner": dict(self._owner)}
+        allocation determinism after a restore depends on it — plus
+        per-page refcounts and the per-owner allocation order)."""
+        return {"free": list(self._free), "owner": dict(self._owner),
+                "ref": dict(self._ref),
+                "pages": {o: list(ps) for o, ps in self._pages.items()
+                          if ps}}
 
     def load_state(self, state: dict) -> None:
         """Restore :meth:`state` output; validates the page-id partition
-        (every id exactly once across free + owned)."""
+        (every id exactly once across free + owned) and that every
+        allocated page carries at least one reference."""
         free, owner = list(state["free"]), dict(state["owner"])
         ids = free + list(owner)
         if sorted(ids) != list(range(self.num_pages)):
             raise ValueError("allocator state does not partition the pool")
+        ref = dict(state.get("ref") or {p: 1 for p in owner})
+        if sorted(ref) != sorted(owner) or any(r < 1 for r in ref.values()):
+            raise ValueError("allocator refcounts do not cover the "
+                             "allocated pages (every owned page needs "
+                             ">= 1 reference)")
+        pages = state.get("pages")
+        if pages is None:
+            # legacy snapshots: reconstruct per-owner allocation order
+            # from the owner dict's insertion order (how pages_of used
+            # to derive it)
+            pages = {}
+            for p, o in owner.items():
+                pages.setdefault(o, []).append(p)
+        else:
+            pages = {o: list(ps) for o, ps in pages.items()}
+            flat = sorted(p for ps in pages.values() for p in ps)
+            if flat != sorted(owner):
+                raise ValueError("allocator per-owner lists do not match "
+                                 "the owner map")
         self._free, self._owner = free, owner
+        self._ref, self._pages = ref, pages

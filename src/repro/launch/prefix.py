@@ -1,0 +1,218 @@
+"""Prefix index: committed KV pages keyed by page-aligned token chunks.
+
+The reuse-factor move applied to cache *contents*: the block-table
+indirection (paging.py) already lets one physical page appear in many
+slots' tables, so a page holding the KV rows of a fully-committed,
+page-aligned token chunk is a reusable library component — any later
+request whose prompt starts with the same tokens can map it instead of
+recomputing it.  This module is the host-side catalogue of those pages.
+
+Keys are *hash chains*: for a prompt split into ``page_size``-token
+chunks ``t_0, t_1, ...``, chunk ``g`` is keyed by
+
+    key_g = sha256(key_{g-1} || t_g.tobytes()),   key_{-1} = ROOT
+
+so a key commits to the entire token history up to and including its
+chunk — two prompts share ``key_g`` only if they agree on the first
+``(g+1) * page_size`` tokens.  Entries additionally store their chunk's
+tokens and a link to the parent entry, and :meth:`match` re-verifies
+tokens exactly on the walk down, so a (vanishingly unlikely) sha256
+collision degrades to a cache miss, never to wrong KV.
+
+The index stores only *host metadata* (page ids + keys); the pages it
+references live in the engine's page pool with the index holding one
+refcount each (owner = :data:`PREFIX_OWNER`).  Eviction is LRU over
+entries whose page nobody else references, deepest-chunk-first within a
+tie so a chain is always dismantled leaf-to-root — an interior chunk is
+never dropped while a descendant remains matchable.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["PrefixIndex", "PREFIX_OWNER", "ROOT"]
+
+#: Allocator owner tag for pages held by the index.  Publication
+#: transfers a page's ownership from the computing slot to this
+#: sentinel, keeping ``pages_of(slot)`` = "pages only this slot holds".
+PREFIX_OWNER = "__prefix__"
+
+#: Chain key of the empty prefix.
+ROOT = b""
+
+
+class _Entry:
+    __slots__ = ("key", "parent", "tokens", "page", "depth", "used")
+
+    def __init__(self, key: bytes, parent: bytes, tokens: np.ndarray,
+                 page: int, depth: int, used: int):
+        self.key = key
+        self.parent = parent            # chain key of the previous chunk
+        self.tokens = tokens            # this chunk's tokens (int32, page_size)
+        self.page = page                # physical page id holding the KV rows
+        self.depth = depth              # chunk index (0 = first page)
+        self.used = used                # LRU tick of last match/publish
+
+
+class PrefixIndex:
+    """Host-side map ``chain key -> committed KV page``.
+
+    All token math is in int32; ``page_size`` must match the engine's
+    page size (one chunk = one page of KV rows).  The index never talks
+    to the device — callers move refcounts/ownership in the allocator
+    and rewrite block tables; this class only remembers which physical
+    page holds which token chunk.
+    """
+
+    def __init__(self, page_size: int):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.page_size = int(page_size)
+        self._by_key: Dict[bytes, _Entry] = {}
+        self._tick = 0                  # monotonic LRU clock (not wall time)
+
+    # -- keys ---------------------------------------------------------------
+    @staticmethod
+    def chain_key(parent: bytes, tokens: np.ndarray) -> bytes:
+        """``sha256(parent || tokens)`` over the chunk's int32 bytes."""
+        return hashlib.sha256(
+            parent + np.ascontiguousarray(tokens, np.int32).tobytes()
+        ).digest()
+
+    def keys_for(self, tokens: np.ndarray) -> List[bytes]:
+        """Chain keys for every *full* chunk of ``tokens`` (a prompt of
+        fewer than ``page_size`` tokens has no publishable chunk)."""
+        toks = np.asarray(tokens, np.int32)
+        keys, parent = [], ROOT
+        for g in range(len(toks) // self.page_size):
+            parent = self.chain_key(
+                parent, toks[g * self.page_size:(g + 1) * self.page_size])
+            keys.append(parent)
+        return keys
+
+    # -- queries ------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._by_key)
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._by_key
+
+    def page_of(self, key: bytes) -> int:
+        return self._by_key[key].page
+
+    def pages(self) -> List[int]:
+        """Every page the index currently holds a reference on."""
+        return [e.page for e in self._by_key.values()]
+
+    def match(self, tokens: np.ndarray) -> Tuple[int, List[int], bytes]:
+        """Longest indexed prefix of ``tokens``, walked chunk by chunk.
+
+        Returns ``(depth, pages, key)``: the number of matched full
+        chunks, their physical pages in chunk order, and the chain key
+        of the last matched chunk (``ROOT`` on a miss) — the parent a
+        subsequent publication of chunk ``depth`` will extend.  Every
+        hit re-verifies the stored tokens against the prompt, so a hash
+        collision is a miss, not corruption.  Matched entries' LRU
+        ticks are refreshed.
+        """
+        toks = np.asarray(tokens, np.int32)
+        pages: List[int] = []
+        parent = ROOT
+        hits: List[_Entry] = []
+        for g in range(len(toks) // self.page_size):
+            chunk = toks[g * self.page_size:(g + 1) * self.page_size]
+            key = self.chain_key(parent, chunk)
+            e = self._by_key.get(key)
+            if e is None or not np.array_equal(e.tokens, chunk):
+                break
+            pages.append(e.page)
+            hits.append(e)
+            parent = key
+        self._tick += 1
+        for e in hits:
+            e.used = self._tick
+        return len(pages), pages, parent
+
+    # -- mutation -----------------------------------------------------------
+    def put(self, key: bytes, parent: bytes, tokens: np.ndarray,
+            page: int, depth: int) -> None:
+        """Register ``page`` as the committed KV of the chunk ``key``.
+
+        The caller must already hold a reference for the index (share +
+        transfer to :data:`PREFIX_OWNER` in the allocator) — the index
+        itself is bookkeeping only.  Double-publication of a key is a
+        caller bug (probe with ``in`` / :meth:`touch` first)."""
+        if key in self._by_key:
+            raise ValueError("chain key already indexed")
+        self._tick += 1
+        self._by_key[key] = _Entry(
+            key, parent, np.ascontiguousarray(tokens, np.int32),
+            int(page), int(depth), self._tick)
+
+    def touch(self, key: bytes) -> bool:
+        """Refresh ``key``'s LRU tick; False if not indexed."""
+        e = self._by_key.get(key)
+        if e is None:
+            return False
+        self._tick += 1
+        e.used = self._tick
+        return True
+
+    def evict(self, allocator, want: int,
+              protect: Optional[set] = None) -> int:
+        """Free up to ``want`` pages by dropping index entries, oldest
+        first (deepest-first within an LRU tie, so chains dismantle
+        leaf-to-root).  Only entries whose page the index holds the
+        *sole* reference on are eligible — a page mapped into any live
+        slot (refcount > 1) or listed in ``protect`` stays.  Returns
+        the number of pages actually freed."""
+        if want <= 0:
+            return 0
+        protect = protect or set()
+        victims = sorted(
+            (e for e in self._by_key.values()
+             if allocator.refcount(e.page) == 1 and e.page not in protect),
+            key=lambda e: (e.used, -e.depth))
+        freed = 0
+        # One entry per page by construction, but a child may become
+        # sole-referenced only mid-sweep; the sort order guarantees a
+        # child is visited no later than its parent within a tie.
+        for e in victims:
+            if freed >= want:
+                break
+            del self._by_key[e.key]
+            allocator.free([e.page])
+            freed += 1
+        return freed
+
+    def drop(self, key: bytes, allocator) -> None:
+        """Remove one entry and release its index reference."""
+        e = self._by_key.pop(key)
+        allocator.free([e.page])
+
+    # -- snapshot / restore -------------------------------------------------
+    def state(self) -> dict:
+        return {
+            "page_size": self.page_size,
+            "tick": self._tick,
+            "entries": [
+                {"key": e.key, "parent": e.parent,
+                 "tokens": e.tokens.copy(), "page": e.page,
+                 "depth": e.depth, "used": e.used}
+                for e in self._by_key.values()],
+        }
+
+    def load_state(self, state: dict) -> None:
+        if int(state["page_size"]) != self.page_size:
+            raise ValueError("prefix index page_size mismatch")
+        self._tick = int(state["tick"])
+        self._by_key = {}
+        for d in state["entries"]:
+            self._by_key[d["key"]] = _Entry(
+                d["key"], d["parent"],
+                np.ascontiguousarray(d["tokens"], np.int32),
+                int(d["page"]), int(d["depth"]), int(d["used"]))

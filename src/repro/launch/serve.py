@@ -97,16 +97,18 @@ from ..data.pipeline import SyntheticLM
 from ..dist.constrain import use_mesh
 from ..dist.sharding import cache_specs, named, param_specs
 from ..ft import StragglerMonitor
-from ..models.api import (get_family, init_paged_cache_fn, invalidate_fn,
-                          merge_slot_fn, set_block_table, spec_restore_fn,
-                          spec_state_fn, supports_chunked_prefill)
+from ..models.api import (copy_pages_fn, get_family, init_paged_cache_fn,
+                          invalidate_fn, merge_slot_fn, set_block_table,
+                          spec_restore_fn, spec_state_fn,
+                          supports_chunked_prefill)
 from ..nn.context import QuantContext
 from ..train.step import (build_decode_loop, build_prefill_step,
                           build_serve_step, build_spec_decode_loop)
-from .lifecycle import RequestStatus, validate_request
+from .lifecycle import RequestStatus, request_row, validate_request
 from .lifecycle import now as _now
 from .mesh import make_local_mesh
 from .paging import PageAllocator
+from .prefix import PREFIX_OWNER, ROOT, PrefixIndex
 from .train import build_ctx
 
 
@@ -170,7 +172,8 @@ class Engine:
                  kv_bits=None, prefill_chunk: int = 16, eos_id: int = -1,
                  seed: int = 0, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, kv_split="auto",
-                 pages_per_step="auto", spec: bool = False,
+                 pages_per_step="auto", prefix_cache: bool = False,
+                 spec: bool = False,
                  spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
                  drafter_fn=None, preempt: bool = False,
                  preempt_after: int = 2, shed_threshold=None,
@@ -227,6 +230,35 @@ class Engine:
         else:
             self.cache = fam.init_cache(cfg, batch, max_len + margin,
                                         cache_dtype)
+        # -- prefix caching (the reuse-factor move on cache CONTENTS):
+        # committed, page-aligned prompt pages are published to a hash
+        # index and mapped read-only into later requests that share the
+        # prefix — admission of a hit allocates only the suffix's pages
+        # and prefills only the suffix's tokens.  Needs the page pool
+        # (sharing is block-table indirection) and chunkable prefill
+        # (a recurrent family's state is sequential: nothing can be
+        # skipped), so the flag is accepted everywhere but inert for
+        # ssm/hybrid — one engine API, no per-family forks.
+        self.prefix_cache = False
+        if prefix_cache:
+            if not self.paged:
+                raise ValueError(
+                    "prefix_cache=True needs the paged cache: prefix "
+                    "reuse IS page sharing (dense lanes have no pages "
+                    "to share)")
+            self.prefix_cache = self.chunked
+        if self.prefix_cache:
+            self.prefix_index = PrefixIndex(self.allocator.page_size)
+            #: slot -> index pages mapped read-only into its table
+            #: (the slot holds one refcount on each; table layout is
+            #: shared entries first, then the slot's private pages)
+            self._slot_shared: Dict[int, List[int]] = {}
+            #: slot -> (chunks published/matched so far, chain key of
+            #: the last one) — where _publish_committed resumes
+            self._pub: Dict[int, tuple] = {}
+            # donated like _invalidate: a CoW copy edits pages in place,
+            # it must not materialize a second full pool
+            self._copy_page = jax.jit(copy_pages_fn, donate_argnums=(0,))
         # split-KV reuse-factor knob: resolve once per cache geometry
         # (explicit engine kwarg > ctx setting > cached cost model) and
         # thread through the context so the fused decode loop AND the
@@ -336,7 +368,9 @@ class Engine:
                          "draft_accepted": 0, "preemptions": 0,
                          "cancellations": 0, "timeouts": 0, "failures": 0,
                          "replays": 0, "spilled_pages": 0,
-                         "shed_spec_rounds": 0, "straggler_blocks": 0}
+                         "shed_spec_rounds": 0, "straggler_blocks": 0,
+                         "prefix_hits": 0, "prefix_hit_pages": 0,
+                         "prefix_tokens_saved": 0, "cow_copies": 0}
         #: one dict per retired request: ttft_s, gen_tokens, decode_s
         self.request_log: List[dict] = []
         self._req_meta: Dict[int, dict] = {}    # slot -> live request row
@@ -380,7 +414,8 @@ class Engine:
     def add_requests(self, requests: Dict[int, np.ndarray], *,
                      gen_len: Optional[int] = None,
                      temperature=None, top_k=None, deadline_s=None,
-                     _t_submit=None, _ids=None, _deadlines=None):
+                     _t_submit=None, _ids=None, _deadlines=None,
+                     _prefix=None):
         """Prefill several fresh slots together (batched chunked prefill).
 
         Prompts are ingested in full-batch chunks of ``prefill_chunk``
@@ -440,6 +475,7 @@ class Engine:
         def stop_of(s, plen):
             return self._token_budget(plen, per_slot(gen_len, s, None))
 
+        prefix_of: Dict[int, dict] = {}
         if self.paged:
             # one page allocation covers the request's whole budget, so
             # the block table is static for its lifetime (the fused
@@ -447,16 +483,52 @@ class Engine:
             # Feasibility is checked for the whole group BEFORE touching
             # any allocator state, so a failed admission leaves the
             # engine exactly as it was.
+            held: Dict[int, List[int]] = {}
+            if self.prefix_cache:
+                # match each prompt's longest committed prefix and take
+                # a reference on the hit pages IMMEDIATELY (before any
+                # eviction/preemption below can run): a held page has
+                # refcount >= 2 and is untouchable by the eviction
+                # sweep.  try_admit matched+shared at pop time and
+                # passes its holds through ``_prefix``; either way this
+                # call owns them and must release them on failure.
+                for s, p in reqs.items():
+                    info = (_prefix or {}).get(s)
+                    h = None
+                    if info is None:
+                        info = self._match_prefix(p)
+                        h = info["shared"] + (
+                            [info["cow"]] if info["cow"] is not None
+                            else [])
+                        if h:
+                            self.allocator.share(h)
+                    prefix_of[s] = info
+                    held[s] = h if h is not None else (
+                        info["shared"] + ([info["cow"]]
+                                          if info["cow"] is not None
+                                          else []))
             needs = {s: self.allocator.pages_for(stop_of(s, p.shape[0]))
+                     - len(prefix_of[s]["shared"] if s in prefix_of else ())
                      for s, p in reqs.items()}
             recyclable = sum(len(self._slot_pages.get(s, ())) for s in reqs)
-            if (sum(needs.values()) > self.allocator.free_pages + recyclable
-                    and self.preempt):
+
+            def short():
+                return (sum(needs.values())
+                        - self.allocator.free_pages - recyclable)
+
+            if short() > 0 and self.prefix_cache:
+                # cold index entries yield before any running request
+                # does — dropping unreferenced cached prefixes is free
+                self.prefix_index.evict(self.allocator, short())
+            if short() > 0 and self.preempt:
                 # graceful degradation instead of MemoryError: spill
                 # running victims until the admission fits
                 self._preempt_until(sum(needs.values()) - recyclable,
                                     exclude=set(reqs))
-            if sum(needs.values()) > self.allocator.free_pages + recyclable:
+            if short() > 0:
+                for h in held.values():
+                    if h:
+                        self.allocator.free(h)      # release the match
                 raise MemoryError(
                     f"page pool exhausted: admission needs "
                     f"{sum(needs.values())} pages, free "
@@ -466,13 +538,40 @@ class Engine:
             for s in reqs:
                 # direct slot-addressed admission over a slot that still
                 # holds pages (no finish() in between) recycles them
+                if self.prefix_cache:
+                    self.allocator.free(self._slot_shared.pop(s, []))
+                    self._pub.pop(s, None)
                 if s in self._slot_pages:
                     self.allocator.free(self._slot_pages.pop(s))
             for s in reqs:
+                info = prefix_of.get(s)
+                shared = info["shared"] if info else []
                 pages = self.allocator.alloc(needs[s], owner=s)
                 self._slot_pages[s] = pages
                 self.block_tables[s, :] = self._trash
-                self.block_tables[s, :len(pages)] = pages
+                self.block_tables[s, :len(shared)] = shared
+                self.block_tables[s, len(shared):len(shared)
+                                  + len(pages)] = pages
+                if self.prefix_cache:
+                    self._slot_shared[s] = list(shared)
+                    self._pub[s] = ((info["depth"], info["key"])
+                                    if info else (0, ROOT))
+                if info and info["cow"] is not None:
+                    # full-prompt hit: the boundary page still receives
+                    # this slot's writes (last prompt row + decode), so
+                    # it is copy-on-write duplicated into the slot's
+                    # first private page before anything runs
+                    self.cache = self._copy_page(
+                        self.cache, jnp.int32(info["cow"]),
+                        jnp.int32(pages[0]))
+                    self.allocator.free([info["cow"]])
+                    self.counters["cow_copies"] += 1
+                if info and (info["shared"] or info["cow"] is not None):
+                    self.counters["prefix_hits"] += 1
+                    self.counters["prefix_hit_pages"] += (
+                        len(shared)
+                        + (1 if info["cow"] is not None else 0))
+                    self.counters["prefix_tokens_saved"] += info["start"]
             self._flush_block_tables()
 
         # a recycled slot may have idled for whole blocks since
@@ -491,8 +590,10 @@ class Engine:
                     # drafter's recurrent/KV lane is just as dirty
                     self.draft_cache = self._draft_invalidate(
                         self.draft_cache, jnp.int32(s))
+        starts = {s: info["start"] for s, info in prefix_of.items()
+                  if info["start"]}
         if self.chunked:
-            first = self._prefill_chunked(reqs)
+            first = self._prefill_chunked(reqs, starts)
         else:
             first = self._prefill_looped(reqs)
         if self.spec and self.draft is not None:
@@ -526,6 +627,11 @@ class Engine:
         self.counters["admitted"] += len(reqs)
         self.counters["peak_live"] = max(self.counters["peak_live"],
                                          int(self.live.sum()))
+        if self.prefix_cache:
+            # publish the fresh prompts' full pages NOW so requests
+            # admitted in the very next sweep already hit
+            for s in reqs:
+                self._publish_committed(s)
 
     def _flush_block_tables(self):
         """Write the host block tables into the cache pytree (one upload
@@ -537,6 +643,110 @@ class Engine:
         numpy buffer into the async transfer instead of copying it."""
         self.cache = set_block_table(self.cache, self.block_tables.copy())
         self._bt_dirty = False
+
+    # -- prefix caching ------------------------------------------------------
+    def _match_prefix(self, prompt: np.ndarray) -> dict:
+        """Plan a prompt's admission against the prefix index.
+
+        Returns ``start`` (first suffix token to prefill), ``shared``
+        (index pages to map read-only at table entries 0..len-1),
+        ``cow`` (an index page to duplicate into the slot's first
+        private page, or None), and ``depth``/``key`` (how far down the
+        chain the match reached — where this slot's own publication
+        will resume).  The planner does NOT move refcounts; callers
+        share the returned pages while the plan is in flight.
+
+        A full-prompt hit still prefills the last prompt token: the
+        engine needs its logits (the first generated token), and its
+        KV row — plus every decode write after it — lands in the final
+        matched page, so that page is planned as the CoW duplicate
+        rather than a read-only mapping.
+        """
+        ps = self.allocator.page_size
+        plen = int(prompt.shape[0])
+        m, pages, key = self.prefix_index.match(prompt)
+        if m == 0:
+            return {"start": 0, "shared": [], "cow": None,
+                    "depth": 0, "key": ROOT}
+        if m * ps == plen:
+            return {"start": plen - 1, "shared": pages[:-1],
+                    "cow": pages[-1], "depth": m, "key": key}
+        return {"start": m * ps, "shared": pages, "cow": None,
+                "depth": m, "key": key}
+
+    def _publish_committed(self, slot: int) -> None:
+        """Publish ``slot``'s fully-committed pages to the prefix index.
+
+        A page is publishable once every one of its rows is below the
+        slot's committed watermark — ``(depth+1)*page_size <= pos``.
+        Safe under speculative decode: rewind is a pos edit whose
+        accepted count is clipped to >= 1 (see build_spec_decode_loop),
+        so ``pos`` never decreases and the condition can only keep
+        holding — a published page is never un-committed.  Chunks whose
+        chain key is already indexed (a concurrent same-prefix stream
+        published first) are skipped; the slot's duplicate page simply
+        stays private.  Publication transfers allocator ownership to
+        :data:`PREFIX_OWNER` and moves the page to the slot's shared
+        list, so a later finish()/preempt() decrements instead of
+        freeing — O(new chunks), no device work.
+        """
+        ps = self.allocator.page_size
+        depth, parent = self._pub.get(slot, (0, ROOT))
+        pos = int(self.pos[slot])
+        while (depth + 1) * ps <= pos:
+            chunk = self.hist[slot, depth * ps:(depth + 1) * ps]
+            key = self.prefix_index.chain_key(parent, chunk)
+            if key in self.prefix_index:
+                self.prefix_index.touch(key)
+            else:
+                page = int(self.block_tables[slot, depth])
+                assert page != self._trash \
+                    and page in self._slot_pages.get(slot, ()), \
+                    "publishable chunk not backed by a private page"
+                self.allocator.share([page])
+                self.allocator.transfer([page], PREFIX_OWNER)
+                self._slot_pages[slot].remove(page)
+                self._slot_shared[slot].append(page)
+                self.prefix_index.put(key, parent, chunk, page, depth)
+            depth, parent = depth + 1, key
+        self._pub[slot] = (depth, parent)
+
+    def _cow_guard(self) -> None:
+        """Belt-and-braces copy-on-write sweep before a decode block.
+
+        By construction no block ever writes a shared page — decode and
+        spec-verify write at positions >= ``pos``, and every table entry
+        from ``pos // page_size`` on is slot-private (the suffix pages
+        allocated at admission; published pages all sit below the
+        committed watermark).  If a future writer path breaks that
+        proof, this sweep duplicates the offending page instead of
+        corrupting every other consumer, and the ``cow_copies`` counter
+        records that it fired.
+        """
+        ps = self.allocator.page_size
+        dirty = False
+        for s in range(self.batch):
+            if self.outputs[s] is None:
+                continue                    # empty lane: all-trash table
+            row = self.block_tables[s]
+            for e in range(int(self.pos[s]) // ps, row.shape[0]):
+                page = int(row[e])
+                if (page == self._trash
+                        or self.allocator.refcount(page) <= 1
+                        or page in self._slot_pages.get(s, ())):
+                    continue
+                fresh = self.allocator.alloc(1, owner=s)[0]
+                self.cache = self._copy_page(self.cache, jnp.int32(page),
+                                             jnp.int32(fresh))
+                self.block_tables[s, e] = fresh
+                self._slot_pages[s].append(fresh)
+                if page in self._slot_shared.get(s, ()):
+                    self._slot_shared[s].remove(page)
+                self.allocator.free([page])     # drop this slot's hold
+                self.counters["cow_copies"] += 1
+                dirty = True
+        if dirty:
+            self._flush_block_tables()
 
     # -- admission queue ----------------------------------------------------
     def _mint_id(self) -> int:
@@ -696,22 +906,52 @@ class Engine:
         free = [s for s in range(self.batch)
                 if self.outputs[s] is None and not self.live[s]]
         admit, kw = {}, {"gen_len": {}, "temperature": {}, "top_k": {},
-                         "_t_submit": {}, "_ids": {}, "_deadlines": {}}
+                         "_t_submit": {}, "_ids": {}, "_deadlines": {},
+                         "_prefix": {}}
         planned = 0
         resumed = 0
         placed: set = set()
         while self.waiting and free:
             req = self.waiting[0]
+            pre = None
             if self.paged:
-                need = (req["n_pages"] if req.get("resume")
-                        else self.allocator.pages_for(self._budget(req)))
+                if req.get("resume"):
+                    need = req["n_pages"]
+                else:
+                    need = self.allocator.pages_for(self._budget(req))
+                    if self.prefix_cache:
+                        # a hit's shared pages are mapped, not allocated:
+                        # admission costs only the suffix's fresh pages
+                        pre = self._match_prefix(req["prompt"])
+                        need -= len(pre["shared"])
                 if not self.allocator.can_alloc(planned + need):
+                    if self.prefix_cache:
+                        # drop cold cached prefixes before touching any
+                        # running request.  Pages already promised this
+                        # sweep are share()-held (refcount >= 2), so
+                        # the eviction cannot take them; the CURRENT
+                        # head's match is not held yet and is protected
+                        # explicitly.
+                        mine = set(pre["shared"]) if pre else set()
+                        if pre and pre["cow"] is not None:
+                            mine.add(pre["cow"])
+                        if self.prefix_index.evict(
+                                self.allocator,
+                                planned + need - self.allocator.free_pages,
+                                protect=mine):
+                            continue    # freed pages; recheck the head
                     if self._maybe_preempt(req, planned + need, free,
                                            exclude=placed):
                         continue        # victims spilled; recheck head
                     break
             self.waiting.popleft()
-            self._head_blocked = (None, 0)
+            if self._head_blocked[0] == req["id"]:
+                # reset the escalation counter only when the tracked
+                # blocked head itself got through — popping any OTHER
+                # record (a resume, a small admission) must not clobber
+                # a still-blocked head's count, or interleaved progress
+                # would keep it one sweep short of preempting forever
+                self._head_blocked = (None, 0)
             s = free.pop(0)
             placed.add(s)
             if req.get("resume"):
@@ -721,6 +961,15 @@ class Engine:
                 continue
             if self.paged:
                 planned += need
+            if pre is not None:
+                # hold the matched pages NOW: a later head's eviction
+                # (or a direct add elsewhere) must not free them while
+                # this admission is pending in ``admit``
+                h = pre["shared"] + ([pre["cow"]]
+                                     if pre["cow"] is not None else [])
+                if h:
+                    self.allocator.share(h)
+                kw["_prefix"][s] = pre
             admit[s] = req["prompt"]
             kw["gen_len"][s] = req["gen_len"]
             kw["temperature"][s] = req["temperature"]
@@ -837,17 +1086,32 @@ class Engine:
         time slicing, not a livelock where the resumed head instantly
         re-preempts its own victim."""
         meta = self._req_meta.pop(slot)
-        pages = self._slot_pages.pop(slot, [])
-        payload = self._page_payload(pages) if pages else {}
+        # the table row is the authoritative mapping: shared prefix
+        # pages first, then the slot's private pages.  ALL of them are
+        # payload-copied and ALL the slot's references dropped; resume
+        # restores into fresh private pages, which stays correct even
+        # if the index evicts the shared originals while the record
+        # waits in the queue.
+        row = self.block_tables[slot]
+        mapped = [int(p) for p in row[row != self._trash]]
+        payload = self._page_payload(mapped) if mapped else {}
         lane = self._lane_state(slot)
+        shared = (self._slot_shared.pop(slot, [])
+                  if self.prefix_cache else [])
+        if shared:
+            self.allocator.free(shared)         # drop this slot's holds
+        private = self._slot_pages.pop(slot, [])
         spilled = self.allocator.spill(slot)
-        assert sorted(spilled) == sorted(pages), \
+        assert sorted(spilled) == sorted(private) \
+            and set(mapped) == set(shared) | set(private), \
             "allocator/engine page maps diverged"
         self.block_tables[slot, :] = self._trash
         self._bt_dirty = True
         rec = {"resume": True, "id": meta["id"], "meta": meta,
                "deadline": meta.get("deadline"),
-               "n_pages": len(pages), "payload": payload, "lane": lane,
+               "n_pages": len(mapped), "payload": payload, "lane": lane,
+               "pub": (self._pub.pop(slot, (0, ROOT))
+                       if self.prefix_cache else None),
                "outputs": self.outputs[slot],
                "pos": int(self.pos[slot]),
                "token": int(self.tokens[slot, 0]),
@@ -866,7 +1130,7 @@ class Engine:
         self._clean[slot] = True
         self.waiting.append(rec)
         self.counters["preemptions"] += 1
-        self.counters["spilled_pages"] += len(pages)
+        self.counters["spilled_pages"] += len(mapped)
 
     def _resume(self, slot: int, rec: dict) -> None:
         """Re-admit a preempted request: restore, never recompute.
@@ -878,6 +1142,13 @@ class Engine:
         stream is byte-identical to an unpreempted one."""
         pages = self.allocator.alloc(rec["n_pages"], owner=slot)
         self._slot_pages[slot] = pages
+        if self.prefix_cache:
+            # a resumed request owns ALL its pages privately (the spill
+            # copied shared-prefix payloads too); publication resumes at
+            # the preserved chain position, so already-indexed chunks
+            # are recognized and skipped rather than re-published
+            self._slot_shared[slot] = []
+            self._pub[slot] = rec.get("pub") or (0, ROOT)
         self.block_tables[slot, :] = self._trash
         self.block_tables[slot, :len(pages)] = pages
         self._flush_block_tables()
@@ -901,14 +1172,30 @@ class Engine:
         self.counters["peak_live"] = max(self.counters["peak_live"],
                                          int(self.live.sum()))
 
-    def _prefill_chunked(self, reqs) -> Dict[int, int]:
+    def _prefill_chunked(self, reqs, starts=None) -> Dict[int, int]:
+        """Batched chunked prefill; ``starts`` (slot -> first token to
+        ingest) makes it suffix-only for prefix-cache hits — the chunk
+        grid then runs at ``start + c0`` per slot, reading the shared
+        prefix pages through the already-flushed block table."""
         chunk = self.prefill_chunk
-        plen = max(p.shape[0] for p in reqs.values())
+        starts = starts or {}
+        offs = {s: int(starts.get(s, 0)) for s in reqs}
+        sufs = {s: p[offs[s]:] for s, p in reqs.items()}
+        plen = max(t.shape[0] for t in sufs.values())
         padded = -(-plen // chunk) * chunk      # one compile per chunk width
         toks = np.zeros((self.batch, padded), np.int32)
-        for s, p in reqs.items():
-            toks[s, :p.shape[0]] = p
+        for s, t in sufs.items():
+            toks[s, :t.shape[0]] = t
         fresh = np.fromiter(sorted(reqs), np.int64)
+        # slots whose (shorter) suffix is exhausted park at the LAST
+        # full chunk inside the table — their garbage writes land at
+        # positions >= max_len (the margin region, never attendable and
+        # below no slot's committed watermark) instead of clamping into
+        # real rows.  Offsets exist only in paged+prefix mode, where
+        # width * page_size >= max_len + margin >= max_len + chunk.
+        park = (self.block_tables.shape[1] * self.allocator.page_size
+                - chunk) if (self.paged and offs and max(offs.values()))\
+            else None
         first: Dict[int, int] = {}
         for c0 in range(0, padded, chunk):
             if c0 >= plen:
@@ -916,13 +1203,17 @@ class Engine:
             # live slots keep their own position: their (ignored) writes
             # land at [pos, pos+chunk) inside the margin, never clamped.
             cur = self.pos.copy()
-            cur[fresh] = c0
+            if park is None:
+                cur[fresh] = c0
+            else:
+                for s in reqs:
+                    cur[s] = min(offs[s] + c0, park)
             logits, self.cache = self.prefill(
                 self.params, {"tokens": _snap(toks[:, c0:c0 + chunk])},
                 self.cache, _snap(cur))
             logits = np.asarray(logits)
-            for s, p in reqs.items():
-                t_last = p.shape[0] - 1
+            for s, t in sufs.items():
+                t_last = t.shape[0] - 1
                 if c0 <= t_last < c0 + chunk:
                     first[s] = int(np.argmax(logits[s, t_last - c0]))
         return first
@@ -1029,6 +1320,8 @@ class Engine:
         self._round += 1
         self._sweep_deadlines()
         n_eff, spec_now = self._shed_policy(n)
+        if self.prefix_cache:
+            self._cow_guard()
         if self.paged and self._bt_dirty:
             self._flush_block_tables()
         snap = self.snapshot() if self._recover else None
@@ -1088,9 +1381,10 @@ class Engine:
             if self.outputs[s] is not None:
                 self.outputs[s].extend(
                     int(t) for t in block[block_live[:, s], s])
-        if self.spec and not spec_now:
-            # a shed (plain) block still has to feed the drafting
-            # corpus: commit its tokens into hist at their absolute
+        if (self.spec or self.prefix_cache) and not spec_now:
+            # a plain block still has to feed hist — the drafting
+            # corpus under speculation, the publication token source
+            # under prefix caching: commit its tokens at their absolute
             # positions (the device spec loop does this on-device)
             for s in range(self.batch):
                 col = block[:, s][block_live[:, s]]
@@ -1098,6 +1392,19 @@ class Engine:
                     p0 = int(pos_before[s])
                     end = min(p0 + col.size, self.hist.shape[1])
                     self.hist[s, p0:end] = col[:end - p0]
+        if self.prefix_cache:
+            # the invariant the spec-rewind clip guarantees (and the
+            # publication condition depends on): a block only ever
+            # advances the committed watermark
+            assert (self.pos >= pos_before).all(), \
+                "pos went backwards across a block"
+            for s in range(self.batch):
+                # publish live slots AND slots that finished mid-block
+                # (their pages are still mapped until retirement) —
+                # but never a fault-flagged slot: its pages may hold
+                # the very corruption the fault lane caught
+                if self.outputs[s] is not None and s not in fault_slots:
+                    self._publish_committed(s)
         for s in fault_slots:
             if self.outputs[s] is not None:
                 self.live[s] = False
@@ -1226,12 +1533,10 @@ class Engine:
         meta = self._req_meta.pop(slot, None)
         if meta is not None:
             done = meta.get("t_done", self.clock())
-            dt = done - meta["t_admit"]
-            gen = len(self.outputs[slot] or [])
-            self.request_log.append({
-                "ttft_s": meta["ttft_s"], "gen_tokens": gen,
-                "decode_s": dt, "status": status.value,
-                "tok_per_s": gen / dt if dt > 0 else 0.0})
+            self.request_log.append(request_row(
+                ttft_s=meta["ttft_s"],
+                gen_tokens=len(self.outputs[slot] or []),
+                decode_s=done - meta["t_admit"], status=status))
             self.results[meta["id"]] = {
                 "status": status, "tokens": list(self.outputs[slot] or [])}
             if status is RequestStatus.CANCELLED:
@@ -1260,6 +1565,12 @@ class Engine:
             # new owner's visibility mask hides them until overwritten)
             # and the device table write is deferred to the next
             # consumer, so a whole retire sweep costs one upload
+            if self.prefix_cache:
+                # decrement-not-free: shared prefix pages lose this
+                # slot's reference only — the index (and any other
+                # sharer) keeps them resident and matchable
+                self.allocator.free(self._slot_shared.pop(slot, []))
+                self._pub.pop(slot, None)
             self.allocator.free(self._slot_pages.pop(slot, []))
             self.block_tables[slot, :] = self._trash
             self._bt_dirty = True
@@ -1304,6 +1615,11 @@ class Engine:
             snap["bt_dirty"] = self._bt_dirty
             snap["slot_pages"] = {s: list(p)
                                   for s, p in self._slot_pages.items()}
+        if self.prefix_cache:
+            snap["prefix_index"] = self.prefix_index.state()
+            snap["slot_shared"] = {s: list(p)
+                                   for s, p in self._slot_shared.items()}
+            snap["pub"] = dict(self._pub)
         if self.draft is not None:
             snap["draft_cache"] = jax.device_get(self.draft_cache)
         return snap
@@ -1341,6 +1657,11 @@ class Engine:
             self._bt_dirty = snap["bt_dirty"]
             self._slot_pages = {s: list(p)
                                 for s, p in snap["slot_pages"].items()}
+        if self.prefix_cache:
+            self.prefix_index.load_state(snap["prefix_index"])
+            self._slot_shared = {s: list(p)
+                                 for s, p in snap["slot_shared"].items()}
+            self._pub = dict(snap["pub"])
         if self.draft is not None and "draft_cache" in snap:
             self.draft_cache = jax.device_put(snap["draft_cache"])
 
@@ -1395,8 +1716,13 @@ class Engine:
         if self.request_log:
             out["ttft_mean_s"] = float(np.mean(
                 [r["ttft_s"] for r in self.request_log]))
-            out["req_tok_per_s_mean"] = float(np.mean(
-                [r["tok_per_s"] for r in self.request_log]))
+            # rows with tok_per_s None had no measurable decode
+            # interval (fake clocks, sub-resolution completions) —
+            # skip them rather than average in a fictitious zero
+            rates = [r["tok_per_s"] for r in self.request_log
+                     if r["tok_per_s"] is not None]
+            out["req_tok_per_s_mean"] = (float(np.mean(rates))
+                                         if rates else 0.0)
         if self.spec:
             out["verify_steps"] = c["verify_steps"]
             out["accepted_per_step"] = (c["draft_accepted"]
@@ -1406,6 +1732,13 @@ class Engine:
             # with (cost-model choice unless pinned by flag/ctx)
             out["kv_split"] = self.kv_split
             out["pages_per_step"] = self.pages_per_step
+        if self.prefix_cache:
+            out["prefix_hits"] = c["prefix_hits"]
+            out["prefix_hit_pages"] = c["prefix_hit_pages"]
+            out["prefix_tokens_saved"] = c["prefix_tokens_saved"]
+            out["cow_copies"] = c["cow_copies"]
+            out["shared_pages"] = self.allocator.shared_pages()
+            out["prefix_index_pages"] = len(self.prefix_index)
         # lifecycle / robustness counters (see the PR 6 layer): how many
         # requests left through each non-happy path, and what the
         # degradation machinery did about pressure and faults
@@ -1470,6 +1803,14 @@ def main(argv=None):
                     help="KV pages DMA'd per grid step (multi-page tile, "
                          "double-buffered); 'auto' sizes the tile to a "
                          "~128-row MXU operand (default)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="prefix caching over the page pool (paged "
+                         "mode): committed prompt pages are indexed "
+                         "and shared copy-on-write with later requests "
+                         "that open with the same tokens — a hit "
+                         "prefills only its suffix (inert for "
+                         "recurrent families, whose state cannot skip "
+                         "tokens)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -1542,6 +1883,7 @@ def main(argv=None):
                      num_pages=args.num_pages,
                      kv_split=knob(args.kv_split),
                      pages_per_step=knob(args.pages_per_step),
+                     prefix_cache=args.prefix_cache,
                      spec=args.spec,
                      spec_k=args.spec_k, spec_draft=spec_draft,
                      spec_ngram=args.spec_ngram, preempt=args.preempt,
@@ -1600,7 +1942,12 @@ def print_stats_table(st: dict) -> None:
     if "kv_split" in st:
         rows.append(("kv split / pages per step",
                      f"{st['kv_split']} / {st['pages_per_step']}"))
-    for key, label in (("preemptions", "preemptions"),
+    for key, label in (("prefix_hits", "prefix-cache hits"),
+                       ("prefix_tokens_saved", "prefill tokens skipped"),
+                       ("cow_copies", "CoW page copies"),
+                       ("shared_pages", "shared pages now"),
+                       ("prefix_index_pages", "cached prefix pages"),
+                       ("preemptions", "preemptions"),
                        ("spilled_pages", "pages spilled"),
                        ("cancellations", "cancellations"),
                        ("timeouts", "timeouts"),

@@ -20,7 +20,8 @@ from . import encdec, hybrid, lm, ssm_lm, vlm
 from .config import ModelConfig
 
 __all__ = ["get_family", "FAMILIES", "init_paged_cache_fn",
-           "set_block_table", "spec_state_fn", "spec_restore_fn"]
+           "set_block_table", "copy_pages_fn", "spec_state_fn",
+           "spec_restore_fn"]
 
 FAMILIES = {
     "lm": lm,
@@ -122,6 +123,31 @@ def set_block_table(cache, bt):
         return leaf
 
     return jax.tree_util.tree_map_with_path(repl, cache)
+
+
+def copy_pages_fn(cache, src, dst):
+    """Copy physical pages ``src`` -> ``dst`` in every page-pool leaf.
+
+    The copy-on-write primitive for prefix caching: a slot about to
+    write into a page other consumers still reference gets its own
+    physical copy first.  Every page-pool leaf carries the page axis at
+    position 1 — (layers_or_groups, num_pages+1, ...) — for KV and int8
+    scale leaves alike, so one gather/scatter covers all of them; block
+    tables and recurrent state are untouched (re-targeting the table is
+    the caller's host-side edit).  ``src``/``dst`` may be scalars or
+    equal-length id vectors.
+    """
+    import jax
+    import jax.numpy as jnp
+    src = jnp.atleast_1d(jnp.asarray(src, jnp.int32))
+    dst = jnp.atleast_1d(jnp.asarray(dst, jnp.int32))
+
+    def cp(path, leaf):
+        if any(getattr(k, "key", None) == "pages" for k in path):
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(cp, cache)
 
 
 def invalidate_fn(cache, slot, cfg: ModelConfig):

@@ -393,6 +393,14 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
             any_eos = jnp.any(drafts == eos_id, axis=1)
             first_eos = jnp.argmax(drafts == eos_id, axis=1)     # (B,)
             limit = jnp.where(any_eos, first_eos + 1, s_blk + 1)
+            # n_fin >= 1 (the clip floor) makes `pos` monotonically
+            # NONDECREASING across rounds: "rewind" only discards the
+            # speculative tail [pos + n_fin, pos + k + 1), never a row
+            # below the committed watermark.  Prefix caching leans on
+            # exactly this — a page the engine published to the prefix
+            # index because `(depth+1)*page_size <= pos` held can never
+            # be un-committed by a later rejection, so shared pages stay
+            # immutable for every slot that maps them.
             n_fin = jnp.clip(jnp.minimum(jnp.minimum(n_adv, limit),
                                          stop_pos - pos), 1, s_blk)
             next_tok = jnp.where(n_fin < n_adv,

@@ -1,0 +1,506 @@
+"""Prefix-cache conformance: shared-prefix streams ≡ cold, byte for byte.
+
+Prefix caching maps already-committed KV pages into a new request's
+block table instead of recomputing them, with copy-on-write the moment
+a consumer would diverge.  Like paging itself, it must be
+*observationally invisible*: for the same submitted requests, a
+prefix-cached engine emits exactly the streams a cold engine does —
+under speculative decoding, grid-misaligned page sizes, int8 KV pages,
+mid-block finishes of one sharer, preemption of sharers, and
+snapshot/restore.  The one observable difference is the telemetry
+(``prefix_hits`` / ``prefix_tokens_saved`` / ``cow_copies``) and the
+prefill work skipped.
+
+Plus the sharing allocator's refcount invariants (hypothesis-stub
+interleaving sweeps — no page returns to the free list while anyone
+still references it) and the :class:`PrefixIndex` host-side contract
+(token re-verification, LRU eviction that never takes a mapped page,
+state round-trips).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.dist.constrain import use_mesh
+from repro.launch.paging import PageAllocator
+from repro.launch.prefix import PREFIX_OWNER, ROOT, PrefixIndex
+from repro.launch.serve import Engine
+
+from test_paged_serving import _prompts, _serve, _setup
+
+
+def _shared_prompts(cfg, pre_len, tail_lens, seed=0):
+    """Prompts sharing one ``pre_len``-token preamble, distinct tails."""
+    rs = np.random.RandomState(seed)
+    pre = rs.randint(0, cfg.vocab, (pre_len,))
+    return [np.concatenate([pre, rs.randint(0, cfg.vocab, (n,))])
+            for n in tail_lens]
+
+
+def _engine(setup, **kw):
+    cfg, ctx, params, mesh = setup
+    kw.setdefault("batch", 2)
+    kw.setdefault("max_len", 32)
+    return Engine(cfg, ctx, params, mesh, **kw)
+
+
+def _drain(eng, block=4):
+    while eng.live.any() or eng.waiting:
+        eng.step_many(block)
+    eng.retire_finished()
+    return eng
+
+
+def _poison_pages(eng, pages):
+    """Overwrite physical pages with garbage in every page-pool leaf.
+
+    If any consumer still attends rows in ``pages``, its stream moves;
+    the CoW/isolation tests rely on exactly that sensitivity."""
+    import jax
+    import jax.numpy as jnp
+    dst = jnp.asarray(pages, jnp.int32)
+
+    def poison(path, leaf):
+        if any(getattr(k, "key", None) == "pages" for k in path):
+            fill = jnp.full(leaf[:, dst].shape,
+                            127 if leaf.dtype == jnp.int8 else 1e4,
+                            leaf.dtype)
+            return leaf.at[:, dst].set(fill)
+        return leaf
+
+    eng.cache = jax.tree_util.tree_map_with_path(poison, eng.cache)
+
+
+# ===========================================================================
+class TestPrefixConformance:
+    """Warm (indexed-prefix) streams byte-identical to cold streams."""
+
+    @pytest.mark.parametrize("quant,spec", [
+        ("f32", False),
+        ("f32", True),
+        pytest.param("int8", False, marks=pytest.mark.slow),
+        pytest.param("int8", True, marks=pytest.mark.slow),
+    ])
+    def test_shared_preamble_matches_cold(self, quant, spec):
+        setup = _setup("lm", quant)
+        prompts = _shared_prompts(setup[0], 12, (5, 3, 7), seed=1)
+        kw = dict(paged=True, page_size=4, max_len=32, spec=spec)
+        cold = _serve(setup, prompts, **kw)
+        warm = _serve(setup, prompts, prefix_cache=True, **kw)
+        assert warm.done == cold.done
+        # batch=2: request 3 is admitted after the preamble's pages are
+        # committed and published, so at least one admission is a hit
+        assert warm.counters["prefix_hits"] >= 1
+        assert warm.counters["prefix_tokens_saved"] >= 4
+        # pages still referenced after drain are exactly the index's
+        assert warm.allocator.used_pages == len(warm.prefix_index)
+        assert sorted(warm.allocator.pages_of(PREFIX_OWNER)) \
+            == sorted(warm.prefix_index.pages())
+
+    @pytest.mark.parametrize("family", [
+        "ssm", pytest.param("hybrid", marks=pytest.mark.slow)])
+    def test_flag_is_inert_on_recurrent_families(self, family):
+        """ssm/hybrid prefill rebuilds recurrent state from one call's
+        tokens — there is no committed-KV page to reuse, so the flag
+        must deactivate itself and change nothing."""
+        setup = _setup(family, "f32")
+        prompts = _shared_prompts(setup[0], 8, (4, 6), seed=2)
+        base = _serve(setup, prompts, paged=True, page_size=8)
+        on = _serve(setup, prompts, paged=True, page_size=8,
+                    prefix_cache=True)
+        assert on.done == base.done
+        assert on.prefix_cache is False
+        assert "prefix_hits" not in on.stats()
+
+    def test_full_prompt_match_copies_boundary_page(self):
+        """An exact repeat of an indexed prompt: every page hits, and
+        the boundary page — where decode will write — is CoW-duplicated
+        so the indexed original stays immutable."""
+        setup = _setup("lm", "f32")
+        prompt = _prompts(setup[0], (8,), seed=3)[0]
+        kw = dict(batch=1, paged=True, page_size=4, max_len=24)
+        cold = _serve(setup, [prompt, prompt], **kw)
+        warm = _serve(setup, [prompt, prompt], prefix_cache=True, **kw)
+        assert warm.done == cold.done
+        assert warm.done[0] == warm.done[1]
+        assert warm.counters["prefix_hits"] == 1
+        assert warm.counters["cow_copies"] == 1
+        # full match still prefills the last prompt token (the engine
+        # needs its logits): saved = plen - 1
+        assert warm.counters["prefix_tokens_saved"] == len(prompt) - 1
+
+    def test_page_size_misaligned_with_prefill_chunk(self):
+        """Suffix-only prefill starts mid-chunk-grid when page_size does
+        not divide the prefill chunk; streams must not move."""
+        setup = _setup("lm", "f32")
+        prompts = _shared_prompts(setup[0], 12, (6, 2, 9), seed=4)
+        kw = dict(paged=True, page_size=4, prefill_chunk=16, max_len=32)
+        cold = _serve(setup, prompts, **kw)
+        warm = _serve(setup, prompts, prefix_cache=True, **kw)
+        assert warm.done == cold.done
+        assert warm.counters["prefix_hits"] >= 1
+
+    @pytest.mark.slow
+    def test_int8_kv_pages_share_and_cow_scales_too(self):
+        """int8 KV pages carry payload + per-token scale leaves; both
+        must share and CoW together or dequantization skews."""
+        setup = _setup("lm", "f32")
+        prompt = _prompts(setup[0], (8,), seed=5)[0]
+        kw = dict(batch=1, kv_bits=8, paged=True, page_size=4, max_len=24)
+        cold = _serve(setup, [prompt, prompt], **kw)
+        warm = _serve(setup, [prompt, prompt], prefix_cache=True, **kw)
+        assert warm.done == cold.done
+        assert warm.counters["cow_copies"] == 1
+
+
+# ===========================================================================
+class TestSharerLifecycle:
+    """Finishing/preempting ONE consumer of a shared page must never
+    disturb the others or the index."""
+
+    def test_midblock_finish_of_one_sharer(self):
+        """Two live requests mapping the same prefix pages; the short
+        one finishes mid-block and retires.  Its shared holds drop by
+        refcount — the pages must NOT return to the free list (the
+        index and the long request still map them), and the long
+        request's stream must not move."""
+        setup = _setup("lm", "f32")
+        prompts = _shared_prompts(setup[0], 8, (2, 3), seed=6)
+        cfg, ctx, params, mesh = setup
+        kw = dict(batch=2, max_len=24, paged=True, page_size=4)
+        with use_mesh(mesh):
+            cold = _engine(setup, **kw)
+            cold.add_requests({0: prompts[0], 1: prompts[1]},
+                              gen_len={0: 2, 1: 9})
+            _drain(cold)
+
+            eng = _engine(setup, prefix_cache=True, **kw)
+            # index the preamble first so both sharers hit it
+            eng.submit(prompts[0][:8], gen_len=2)
+            eng.try_admit()
+            _drain(eng)
+            shared_before = eng.allocator.shared_pages()
+            eng.add_requests({0: prompts[0], 1: prompts[1]},
+                             gen_len={0: 2, 1: 9})
+            assert eng.counters["prefix_hits"] == 2
+            assert eng.allocator.shared_pages() >= shared_before
+            eng.step_many(4)          # slot 0 finishes inside this block
+            assert not eng.live[0] and eng.live[1]
+            eng.retire_finished()     # drops slot 0's shared holds NOW
+            assert eng.outputs[0] is None
+            for p in eng.prefix_index.pages():
+                assert eng.allocator.refcount(p) >= 1
+            _drain(eng)
+        assert eng.done[-2:] == cold.done
+        # every index page survived the sharer's retirement
+        for p in eng.prefix_index.pages():
+            assert eng.allocator.refcount(p) >= 1
+        assert eng.allocator.used_pages == len(eng.prefix_index)
+
+    def test_preempt_spills_sharer_and_resumes(self):
+        """A preempted sharer frees its shared holds (payload copied to
+        host) and resumes all-private; streams still byte-identical."""
+        setup = _setup("lm", "f32")
+        prompts = _shared_prompts(setup[0], 8, (2, 3, 4), seed=7)
+        kw = dict(batch=2, max_len=24, gen_len=8, paged=True, page_size=4)
+        cold = _serve(setup, prompts, **kw)
+        warm = _serve(setup, prompts, prefix_cache=True, preempt=True,
+                      preempt_after=1, num_pages=10, **kw)
+        assert warm.done == cold.done
+
+    def test_snapshot_restore_round_trips_prefix_state(self):
+        """Index entries, per-slot shared holds, and publication
+        cursors all survive snapshot/restore mid-flight."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _shared_prompts(cfg, 8, (3, 2, 5), seed=8)
+        kw = dict(batch=2, max_len=24, paged=True, page_size=4,
+                  prefix_cache=True)
+        with use_mesh(mesh):
+            ref = _engine(setup, **kw)
+            for p in prompts:
+                ref.submit(p, gen_len=6)
+            ref.try_admit()
+            _drain(ref)
+
+            eng = _engine(setup, **kw)
+            for p in prompts:
+                eng.submit(p, gen_len=6)
+            eng.try_admit()
+            eng.step_many(2)
+            snap = eng.snapshot()
+            eng.step_many(4)              # diverge past the snapshot
+            eng.restore(snap)
+            assert len(eng.prefix_index) == len(snap["prefix_index"]
+                                                ["entries"])
+            _drain(eng)
+        assert eng.done == ref.done
+        assert eng.counters["prefix_hits"] == ref.counters["prefix_hits"]
+
+
+# ===========================================================================
+class TestCowIsolation:
+    """The divergent writer must be reading its COPY: corrupting the
+    shared original after CoW cannot move the writer's stream."""
+
+    def test_poisoned_original_is_never_observed_after_divergence(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompt = _prompts(cfg, (8,), seed=9)[0]
+        with use_mesh(mesh):
+            solo = _engine(setup, batch=1, max_len=24, paged=True,
+                           page_size=4)
+            solo.submit(prompt, gen_len=6)
+            solo.try_admit()
+            _drain(solo)
+
+            eng = _engine(setup, batch=1, max_len=24, paged=True,
+                          page_size=4, prefix_cache=True)
+            eng.submit(prompt, gen_len=6)
+            eng.try_admit()
+            _drain(eng)
+            # both prompt chunks are now indexed; an exact repeat
+            # full-matches and CoW-copies the boundary page
+            depth, pages, _ = eng.prefix_index.match(prompt)
+            assert depth == 2
+            eng.submit(prompt, gen_len=6)
+            eng.try_admit()
+            assert eng.counters["cow_copies"] == 1
+            boundary = pages[-1]
+            assert eng.allocator.refcount(boundary) == 1  # index only
+            _poison_pages(eng, [boundary])
+            _drain(eng)
+        # the second stream read its private copy, not the poisoned
+        # original — byte-identical to the cold solo run
+        assert eng.done == [solo.done[0], solo.done[0]]
+
+    def test_poisoned_free_pages_never_leak_into_warm_stream(self):
+        """Sanity for the harness itself: poisoning pages NO table maps
+        changes nothing; poisoning a mapped prefix page does.  Together
+        these pin that the conformance suite would actually catch a
+        sharing bug (the poison is attendable when mapped)."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _shared_prompts(cfg, 8, (3, 3), seed=10)
+        with use_mesh(mesh):
+            eng = _engine(setup, batch=1, max_len=24, paged=True,
+                          page_size=4, prefix_cache=True)
+            eng.submit(prompts[0], gen_len=4)
+            eng.try_admit()
+            _drain(eng)
+            free_before = list(eng.allocator._free)
+            _poison_pages(eng, free_before)      # garbage in unmapped pages
+            eng.submit(prompts[1], gen_len=4)    # hits the clean prefix
+            eng.try_admit()
+            assert eng.counters["prefix_hits"] == 1
+            _drain(eng)
+
+            ref = _engine(setup, batch=1, max_len=24, paged=True,
+                          page_size=4)
+            for p in prompts:
+                ref.submit(p, gen_len=4)
+            ref.try_admit()
+            _drain(ref)
+
+            bad = _engine(setup, batch=1, max_len=24, paged=True,
+                          page_size=4, prefix_cache=True)
+            bad.submit(prompts[0], gen_len=4)
+            bad.try_admit()
+            _drain(bad)
+            _poison_pages(bad, bad.prefix_index.pages())
+            bad.submit(prompts[1], gen_len=4)
+            bad.try_admit()
+            _drain(bad)
+        assert eng.done == ref.done
+        assert bad.done[1] != ref.done[1]        # the poison IS attendable
+
+
+# ===========================================================================
+class TestRefcountProperties:
+    """Sharing-allocator invariants under hypothesis-stub sweeps."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 48), st.integers(1, 60), st.integers(0, 2 ** 16))
+    def test_no_page_freed_while_referenced(self, num_pages, steps, seed):
+        """Random share/free interleavings: a page returns to the free
+        list exactly when its LAST reference drops, never before; the
+        free list and the referenced set always partition the pool."""
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 4)
+        refs = {}                                # page -> model refcount
+        for step in range(steps):
+            r = rs.rand()
+            if refs and r < 0.35:
+                page = int(rs.choice(sorted(refs)))
+                alloc.free([page])
+                refs[page] -= 1
+                if refs[page] == 0:
+                    del refs[page]
+                    assert page in alloc._free
+                else:
+                    assert page not in alloc._free   # still referenced
+            elif refs and r < 0.6:
+                page = int(rs.choice(sorted(refs)))
+                alloc.share([page])
+                refs[page] += 1
+            elif alloc.free_pages:
+                n = int(rs.randint(1, alloc.free_pages + 1))
+                for p in alloc.alloc(n, owner=step):
+                    assert p not in refs             # fresh, not recycled-live
+                    refs[p] = 1
+            for p, n in refs.items():
+                assert alloc.refcount(p) == n
+            assert alloc.used_pages == len(refs)
+            assert alloc.free_pages == num_pages - len(refs)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 32), st.integers(0, 2 ** 16))
+    def test_transfer_moves_ownership_not_references(self, num_pages,
+                                                     seed):
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 4)
+        pages = alloc.alloc(num_pages, owner="slot")
+        moved = [p for p in pages if rs.rand() < 0.5]
+        alloc.share(moved)
+        alloc.transfer(moved, PREFIX_OWNER)
+        assert sorted(alloc.pages_of(PREFIX_OWNER)) == sorted(moved)
+        assert sorted(alloc.pages_of("slot")) \
+            == sorted(set(pages) - set(moved))
+        for p in moved:
+            assert alloc.refcount(p) == 2
+        # spill frees only pages the slot still OWNS — references the
+        # slot holds on transferred pages are the caller's to drop
+        alloc.spill("slot")
+        for p in moved:
+            assert alloc.refcount(p) == 2        # untouched by the spill
+        assert alloc.used_pages == len(moved)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(2, 32), st.integers(0, 2 ** 16))
+    def test_state_round_trip_preserves_refcounts(self, num_pages, seed):
+        rs = np.random.RandomState(seed)
+        alloc = PageAllocator(num_pages, 8)
+        held = alloc.alloc(rs.randint(1, num_pages + 1), owner=0)
+        shared = [p for p in held if rs.rand() < 0.5]
+        alloc.share(shared)
+        state = alloc.state()
+        clone = PageAllocator(num_pages, 8)
+        clone.load_state(state)
+        for p in held:
+            assert clone.refcount(p) == alloc.refcount(p)
+        assert clone.pages_of(0) == alloc.pages_of(0)
+        assert clone._free == alloc._free
+        # legacy snapshots (no "ref" key) load as all-refcount-1
+        legacy = dict(state)
+        del legacy["ref"]
+        del legacy["pages"]
+        clone2 = PageAllocator(num_pages, 8)
+        clone2.load_state(legacy)
+        assert all(clone2.refcount(p) == 1 for p in held)
+
+    def test_share_and_free_validate_atomically(self):
+        alloc = PageAllocator(4, 8)
+        held = alloc.alloc(2, owner="a")
+        with pytest.raises(ValueError):
+            alloc.share([held[0], 99])           # one bad id: no-op
+        assert alloc.refcount(held[0]) == 1
+        alloc.share(held)
+        alloc.free(held)                         # drops to 1, stays used
+        assert alloc.used_pages == 2
+        with pytest.raises(ValueError, match="duplicate"):
+            alloc.free([held[0], held[0]])
+        assert alloc.refcount(held[0]) == 1      # untouched by the raise
+
+    def test_pages_of_tracks_per_owner_without_scanning(self):
+        """Per-owner lists: pages_of returns allocation order and stays
+        correct through interleaved frees (the O(own pages) fix)."""
+        alloc = PageAllocator(12, 4)
+        a = alloc.alloc(3, owner="a")
+        b = alloc.alloc(2, owner="b")
+        a2 = alloc.alloc(2, owner="a")
+        assert alloc.pages_of("a") == a + a2
+        alloc.free([a[1]])
+        assert alloc.pages_of("a") == [a[0]] + a[2:] + a2
+        assert alloc.pages_of("b") == b
+        assert alloc.pages_of("ghost") == []
+
+
+# ===========================================================================
+class TestPrefixIndexUnit:
+    """Host-side index contract: hashing, verification, LRU eviction."""
+
+    def _toks(self, *vals):
+        return np.asarray(vals, np.int32)
+
+    def test_match_walks_chain_and_verifies_tokens(self):
+        idx = PrefixIndex(2)
+        toks = self._toks(1, 2, 3, 4, 5, 6)
+        k = idx.keys_for(toks)
+        idx.put(k[0], ROOT, toks[:2], page=7, depth=0)
+        idx.put(k[1], k[0], toks[2:4], page=8, depth=1)
+        depth, pages, key = idx.match(toks)
+        assert (depth, pages, key) == (2, [7, 8], k[1])
+        # a diverging prompt matches only the agreeing chunks
+        depth, pages, _ = idx.match(self._toks(1, 2, 9, 9))
+        assert (depth, pages) == (1, [7])
+        # shorter than one page: no chunk to match
+        assert idx.match(self._toks(1))[0] == 0
+
+    def test_hash_collision_degrades_to_miss(self):
+        """Forcing two different chunks onto one key (simulated
+        collision): token re-verification turns it into a miss."""
+        idx = PrefixIndex(2)
+        toks = self._toks(1, 2)
+        k = idx.keys_for(toks)[0]
+        idx.put(k, ROOT, toks, page=3, depth=0)
+        idx._by_key[k].tokens = self._toks(8, 9)     # corrupt the entry
+        assert idx.match(toks)[0] == 0               # miss, not wrong page
+
+    def test_double_publish_rejected(self):
+        idx = PrefixIndex(2)
+        toks = self._toks(4, 4)
+        k = idx.keys_for(toks)[0]
+        idx.put(k, ROOT, toks, page=0, depth=0)
+        with pytest.raises(ValueError, match="already indexed"):
+            idx.put(k, ROOT, toks, page=1, depth=0)
+
+    def test_evict_lru_respects_refcounts_and_protect(self):
+        """Eviction order is oldest-first; pages any slot still maps
+        (refcount > 1) and protected pages are never taken; chains
+        dismantle leaf-to-root within an LRU tie."""
+        alloc = PageAllocator(8, 2)
+        idx = PrefixIndex(2)
+        toks = self._toks(1, 2, 3, 4, 5, 6)
+        keys = idx.keys_for(toks)
+        pages = alloc.alloc(3, owner=PREFIX_OWNER)
+        for g, k in enumerate(keys):
+            idx.put(k, keys[g - 1] if g else ROOT,
+                    toks[2 * g:2 * g + 2], pages[g], depth=g)
+        alloc.share([pages[0]])                      # a slot maps chunk 0
+        freed = idx.evict(alloc, want=3)
+        # chunks 1, 2 freed (deepest-first in the tie); chunk 0 is
+        # refcount-2 and must survive
+        assert freed == 2
+        assert keys[0] in idx and keys[1] not in idx and keys[2] not in idx
+        assert alloc.refcount(pages[0]) == 2
+        # protect shields an unreferenced page too
+        alloc.free([pages[0]])                       # slot drops its hold
+        assert idx.evict(alloc, want=1, protect={pages[0]}) == 0
+        assert idx.evict(alloc, want=1) == 1
+        assert alloc.used_pages == 0
+
+    def test_state_round_trip(self):
+        idx = PrefixIndex(4)
+        toks = self._toks(*range(8))
+        keys = idx.keys_for(toks)
+        idx.put(keys[0], ROOT, toks[:4], page=1, depth=0)
+        idx.put(keys[1], keys[0], toks[4:], page=2, depth=1)
+        idx.match(toks[:4])                          # bump LRU tick
+        clone = PrefixIndex(4)
+        clone.load_state(idx.state())
+        assert clone.match(toks) == idx.match(toks)
+        assert len(clone) == 2 and clone._tick == idx._tick
+        with pytest.raises(ValueError, match="page_size"):
+            PrefixIndex(2).load_state(idx.state())

@@ -351,3 +351,86 @@ class TestShedding:
                       spec=True, shed_threshold=0.1)
         assert shed.done == dense.done
         assert shed.counters["shed_spec_rounds"] > 0
+
+
+# ===========================================================================
+class TestEscalationCounter:
+    """The ``_head_blocked`` escalation counter tracks ONE head across
+    admission sweeps.  Regression: popping any *other* record (a
+    resume, a small admission slipping into a free lane) used to reset
+    the counter to ``(None, 0)``, so interleaved progress kept a
+    blocked head exactly one sweep short of preempting, forever."""
+
+    def test_interleaved_pop_does_not_reset_blocked_head(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = _prompts(cfg, (10, 12, 3), seed=8)
+        with use_mesh(mesh):
+            # pool of 8: A (10+6 -> 4 pages) fits; B (12+8 -> 5 pages)
+            # blocks behind it; C (3+2 -> 2 pages) fits beside A
+            eng = _engine(setup, clock=FakeClock(), paged=True,
+                          page_size=4, num_pages=8, max_len=24,
+                          preempt=True, preempt_after=3)
+            rid_a = eng.submit(prompts[0], gen_len=6)
+            eng.try_admit()
+            assert eng.status(rid_a) is RequestStatus.RUNNING
+            rid_b = eng.submit(prompts[1], gen_len=8)
+            eng.try_admit()                      # blocked sweep 1
+            assert eng._head_blocked == (rid_b, 1)
+            # a small request cuts the line (models a resume record,
+            # which re-enters at the queue head) and takes the free
+            # lane — its pop must NOT clobber B's escalation count
+            rid_c = eng.submit(prompts[2], gen_len=2)
+            eng.waiting.appendleft(eng.waiting.pop())
+            eng.try_admit()
+            assert eng.status(rid_c) is RequestStatus.RUNNING
+            assert eng._head_blocked == (rid_b, 1)   # preserved
+            assert eng.cancel(rid_c)             # lane/pages free again
+            eng.try_admit()                      # blocked sweep 2
+            assert eng._head_blocked == (rid_b, 2)
+            assert eng.counters["preemptions"] == 0
+            eng.try_admit()                      # sweep 3 == preempt_after
+            # escalation fires exactly on schedule: A spills, B runs
+            assert eng.counters["preemptions"] == 1
+            assert eng.status(rid_a) is RequestStatus.PREEMPTED
+            assert eng.status(rid_b) is RequestStatus.RUNNING
+            # B's pop reset the counter; A's spilled resume record is
+            # the new queue head and starts its OWN count from 1
+            assert eng._head_blocked == (rid_a, 1)
+            _drain(eng)                          # B finishes, A resumes
+            assert eng.status(rid_a) is RequestStatus.COMPLETED
+            assert eng.status(rid_b) is RequestStatus.COMPLETED
+
+
+# ===========================================================================
+class TestThroughputRows:
+    """``tok_per_s`` is ``None`` — not 0.0 — when the decode interval
+    is unmeasurable; aggregates skip those rows instead of dragging
+    the mean toward a fictitious zero."""
+
+    def test_zero_interval_rows_are_none_and_skip_the_mean(self):
+        setup = _setup("lm", "f32")
+        clock = FakeClock()                      # frozen: dt == 0.0
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=clock)
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=3)
+            _drain(eng, block=3)
+            clock.tick = 0.05                    # time now passes
+            eng.submit(_prompts(setup[0], (5,))[0], gen_len=3)
+            _drain(eng, block=3)
+        frozen, ticking = eng.request_log
+        assert frozen["decode_s"] == 0.0 and frozen["tok_per_s"] is None
+        assert ticking["tok_per_s"] > 0
+        # the mean covers ONLY the measurable row
+        st = eng.stats()
+        assert st["req_tok_per_s_mean"] == pytest.approx(
+            ticking["tok_per_s"])
+
+    def test_all_rows_unmeasurable_yields_zero_mean_not_crash(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=FakeClock())
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=2)
+            _drain(eng, block=2)
+        assert eng.request_log[0]["tok_per_s"] is None
+        assert eng.stats()["req_tok_per_s_mean"] == 0.0
