@@ -30,7 +30,9 @@ _DELTA_KEYS = ("us_per_call", "tok_per_s", "prompt_tok_per_s",
                "admitted_tok_per_s", "ms_total", "jit_calls_per_token",
                "speedup_vs_unsplit", "speedup_vs_fused_loop",
                "accepted_per_step", "capacity_vs_dense", "mean_row_fill",
-               "greedy_agreement_vs_fp32")
+               "greedy_agreement_vs_fp32", "fit_residual",
+               "tile_cost", "combine_cost", "speedup_vs_pinned_worst",
+               "speedup_vs_analytic")
 
 
 def _fmt_derived(row):
@@ -86,14 +88,19 @@ def main() -> None:
     if args.json == "none":
         args.json = None
 
-    from . import (bench_backends, bench_lut_tables, bench_qmatmul,
-                   bench_quant_accuracy, bench_reuse_factor, bench_serving)
+    from . import (bench_backends, bench_calibrate, bench_lut_tables,
+                   bench_qmatmul, bench_quant_accuracy, bench_reuse_factor,
+                   bench_serving)
     modules = {
         "lut_tables": bench_lut_tables,
         "quant_accuracy": bench_quant_accuracy,
         "qmatmul": bench_qmatmul,
         "reuse_factor": bench_reuse_factor,
         "backends": bench_backends,
+        # calibrate runs BEFORE serving: it commits AUTOTUNE.json, so
+        # the serving module's run_autotune compares against the fresh
+        # fit instead of a stale artifact
+        "calibrate": bench_calibrate,
         "serving": bench_serving,
     }
     wanted = set(args.only.split(",")) if args.only else set(modules)

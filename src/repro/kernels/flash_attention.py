@@ -35,7 +35,8 @@ from ._compat import CompilerParams
 
 __all__ = ["flash_attention_pallas", "paged_attention_pallas",
            "paged_attention_xla", "combine_splits", "choose_kv_split",
-           "auto_pages_per_step"]
+           "auto_pages_per_step", "get_cost_constants",
+           "set_cost_constants"]
 
 _NEG = -1e30
 
@@ -377,9 +378,48 @@ def combine_splits(acc: jnp.ndarray, m: jnp.ndarray, l: jnp.ndarray):
 #: (DMA + MXU pass) vs one partition's extra combine traffic.  Coarse on
 #: purpose — the model only has to rank splits, not predict walltime
 #: (rule4ml's lesson: a cheap learned/analytic ranker beats hand-tuning).
-_TILE_COST = 4.0
-_COMBINE_COST = 1.0
-_TARGET_LANES = 512      # grid lanes that saturate the pipeline
+#: These are the *analytic defaults*; ``set_cost_constants`` installs
+#: values fitted from measured latencies (launch/autotune.py) without
+#: the ranking formula changing shape.
+_ANALYTIC_COST_CONSTANTS = {
+    "tile_cost": 4.0,        # one multi-page tile: DMA + MXU pass
+    "combine_cost": 1.0,     # one partition's extra combine traffic
+    "target_lanes": 512.0,   # grid lanes that saturate the pipeline
+}
+_TILE_COST = _ANALYTIC_COST_CONSTANTS["tile_cost"]
+_COMBINE_COST = _ANALYTIC_COST_CONSTANTS["combine_cost"]
+_TARGET_LANES = _ANALYTIC_COST_CONSTANTS["target_lanes"]
+
+
+def get_cost_constants() -> dict:
+    """Current split cost-model constants (a copy; mutate via
+    :func:`set_cost_constants`)."""
+    return {"tile_cost": _TILE_COST, "combine_cost": _COMBINE_COST,
+            "target_lanes": _TARGET_LANES}
+
+
+def set_cost_constants(tile_cost: float | None = None,
+                       combine_cost: float | None = None,
+                       target_lanes: float | None = None) -> dict:
+    """Install cost-model constants (``None`` = reset to the analytic
+    default) and invalidate every cached ``choose_kv_split`` decision.
+
+    This is the seam the autotuner uses: ``launch/autotune.py`` fits
+    tile/combine costs from measured ``paged_attention`` latencies and
+    installs them here, so *every* downstream auto split — fused decode
+    loops, spec verify, direct kernel calls — re-ranks under the fitted
+    model with no call-site changes.  Returns the constants now in
+    effect.
+    """
+    global _TILE_COST, _COMBINE_COST, _TARGET_LANES
+    _TILE_COST = float(tile_cost) if tile_cost is not None \
+        else _ANALYTIC_COST_CONSTANTS["tile_cost"]
+    _COMBINE_COST = float(combine_cost) if combine_cost is not None \
+        else _ANALYTIC_COST_CONSTANTS["combine_cost"]
+    _TARGET_LANES = float(target_lanes) if target_lanes is not None \
+        else _ANALYTIC_COST_CONSTANTS["target_lanes"]
+    choose_kv_split.cache_clear()       # decisions depend on the constants
+    return get_cost_constants()
 
 
 @functools.lru_cache(maxsize=None)
@@ -396,10 +436,14 @@ def choose_kv_split(seq_len: int, pages: int, hkv: int, *, batch: int = 1,
 
     minimized over power-of-two splits — with an occupancy guard: once
     ``batch * hkv * split`` already saturates the pipeline's parallel
-    lanes, further splitting only buys combine overhead, so
-    oversubscribed candidates are skipped.  Ties break toward the
-    smaller split (fewer partials in HBM).  Cached per shape tuple —
-    the engine resolves it once per cache geometry, not per step.
+    lanes, further splitting only buys combine overhead, so deeper
+    candidates are skipped.  The *boundary* candidate — the first split
+    whose predecessor saturates — is still costed before the guard
+    fires (an earlier revision broke out before costing it, pinning
+    every ``lanes >= target`` geometry to ``split=1`` no matter how
+    long the tile chain was).  Ties break toward the smaller split
+    (fewer partials in HBM).  Cached per shape tuple — the engine
+    resolves it once per cache geometry, not per step.
 
     ``seq_len`` (the table capacity in tokens, ``pages * page_size`` at
     every current call site) is part of the knob's public shape key but
@@ -414,11 +458,14 @@ def choose_kv_split(seq_len: int, pages: int, hkv: int, *, batch: int = 1,
     best, best_cost = 1, None
     split = 1
     while split <= tiles:
-        if split > 1 and lanes * (split // 2) >= _TARGET_LANES:
-            break                       # already saturated without it
         cost = (-(-tiles // split)) * _TILE_COST + split * _COMBINE_COST
         if best_cost is None or cost < best_cost:
             best, best_cost = split, cost
+        if split > 1 and lanes * (split // 2) >= _TARGET_LANES:
+            # saturated: deeper splits only add combine overhead (this
+            # boundary candidate was costed above, not skipped — the
+            # old guard broke one candidate too early).
+            break
         split *= 2
     return best
 

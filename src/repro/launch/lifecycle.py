@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import enum
 import time
-from typing import Optional
 
 import numpy as np
 
@@ -56,7 +55,7 @@ TERMINAL_STATUSES = frozenset({
 
 
 def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
-                     deadline_s: Optional[float] = None) -> np.ndarray:
+                     deadline_s=None) -> np.ndarray:
     """Admission-time input validation; returns the prompt as int32.
 
     Garbage that used to flow straight into the embedding gather is
@@ -73,8 +72,14 @@ def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
       meaning), and
     * non-positive ``deadline_s`` (the request could never run).
 
-    ``temperature``/``top_k`` accept the same scalar-or-``{slot: v}``
-    forms ``add_requests`` does; every value is checked.
+    ``temperature``/``top_k``/``deadline_s`` accept the same
+    scalar-or-``{slot: v}`` forms ``add_requests`` does; every value is
+    checked individually (``None`` entries mean "no limit" and are
+    skipped, never compared).  Collapsing a dict to one representative
+    — an earlier revision validated ``min(deadline_s.values())`` — is
+    exactly the specialization bug this layer exists to prevent: it
+    crashes on mixed ``None`` entries and hides which request was
+    invalid.
     """
     p = np.asarray(prompt)
     if p.ndim > 1:
@@ -107,8 +112,9 @@ def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
     for name, x in each(top_k, "top_k"):
         if int(x) < 0:
             raise ValueError(f"negative top_k {x} (0 disables the filter)")
-    if deadline_s is not None and float(deadline_s) <= 0:
-        raise ValueError(f"deadline_s must be positive (got {deadline_s})")
+    for name, x in each(deadline_s, "deadline_s"):
+        if float(x) <= 0:
+            raise ValueError(f"deadline_s must be positive (got {x})")
     return p.astype(np.int32)
 
 

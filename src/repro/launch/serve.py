@@ -173,7 +173,7 @@ class Engine:
                  seed: int = 0, paged: bool = False, page_size: int = 16,
                  num_pages: Optional[int] = None, kv_split="auto",
                  pages_per_step="auto", prefix_cache: bool = False,
-                 spec: bool = False,
+                 autotune: str = "off", spec: bool = False,
                  spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
                  drafter_fn=None, preempt: bool = False,
                  preempt_after: int = 2, shed_threshold=None,
@@ -196,6 +196,38 @@ class Engine:
         # exactly as it absorbs chunked-prefill overshoot
         self.spec, self.spec_k = bool(spec), max(1, int(spec_k))
         self.spec_ngram = max(1, int(spec_ngram))
+        # -- unified autotuner (rule4ml for the engine) ----------------
+        # "off" is the legacy path bit for bit: explicit kwarg > ctx >
+        # the analytic cost model, no decode-block resolution, no
+        # online spec_k adaptation.  "analytic"/"fitted" resolve the
+        # whole knob vector through launch/autotune.py — same grid,
+        # hand-set vs least-squares-fitted weights — and adapt spec_k
+        # from measured acceptance.  Knobs the caller pins explicitly
+        # always win over the resolver.
+        self.autotune = str(autotune)
+        if self.autotune not in ("off", "analytic", "fitted"):
+            raise ValueError(
+                f"autotune={autotune!r}: expected 'off' (legacy "
+                f"defaults), 'analytic' (resolver on hand-set "
+                f"constants) or 'fitted' (resolver on measured fit)")
+        self._autotune_est = None
+        self._spec_adapter = None
+        self._spec_k_init = self.spec_k
+        self._last_spec_obs = (0, 0)
+        self.decode_block: Optional[int] = None
+        if self.autotune != "off":
+            from .autotune import (SpecKAdapter, WorkloadShape,
+                                   load_estimator, resolve)
+            self._autotune_est = load_estimator(self.autotune)
+            self._autotune_resolve = resolve
+            self._autotune_shape_cls = WorkloadShape
+            if self.spec:
+                # adapt within [1, construction spec_k]: the KV margin
+                # and drafting history are sized for the initial k, so
+                # it is the cap — pass a generous --spec-k and let the
+                # adapter find the efficient depth under it
+                self._spec_adapter = SpecKAdapter(k_init=self.spec_k,
+                                                  k_max=self.spec_k)
         self.drafter_fn = drafter_fn            # test hook (custom drafts)
         if not self.spec and (spec_draft is not None
                               or drafter_fn is not None):
@@ -278,12 +310,34 @@ class Engine:
                      else ctx.kv_split)
             hkv = getattr(cfg, "n_kv_heads", 0) or getattr(
                 cfg, "n_heads", 1)
+            if self.autotune != "off":
+                # construction-time resolution of the whole knob
+                # vector: estimator argmin over the (tile, split) grid
+                # fills whatever the caller left on auto; explicit
+                # kwargs/ctx pins pass through untouched
+                kv = self._autotune_resolve(
+                    self._autotune_shape_cls(
+                        pages=width, page_size=ps, hkv=max(1, hkv),
+                        batch=batch, gen_len=max_len, spec=self.spec),
+                    self._autotune_est)
+                req_t = kv.pages_per_step if req_t is None else req_t
+                req_s = kv.kv_split if req_s is None else req_s
+                self.decode_block = kv.decode_block
             t, split = _resolve_knobs(width, ps, max(1, hkv), batch,
                                       req_s, req_t)
             self.kv_split, self.pages_per_step = split, t
             ctx = dataclasses.replace(ctx, kv_split=split,
                                       pages_per_step=t)
             self.ctx = ctx
+        if self.autotune != "off" and not self.paged:
+            # dense cache: no kv knobs, but block size and spec depth
+            # are still the resolver's to pick
+            kv = self._autotune_resolve(
+                self._autotune_shape_cls(pages=0, page_size=1, hkv=1,
+                                         batch=batch, gen_len=max_len,
+                                         spec=self.spec),
+                self._autotune_est)
+            self.decode_block = kv.decode_block
         c_sh = named(cache_specs(self.cache, mesh), mesh)
         self.cache = jax.device_put(self.cache, c_sh)
         #: cache sharding, kept for snapshot restore (the fused loops
@@ -370,7 +424,8 @@ class Engine:
                          "replays": 0, "spilled_pages": 0,
                          "shed_spec_rounds": 0, "straggler_blocks": 0,
                          "prefix_hits": 0, "prefix_hit_pages": 0,
-                         "prefix_tokens_saved": 0, "cow_copies": 0}
+                         "prefix_tokens_saved": 0, "cow_copies": 0,
+                         "spec_k_rejits": 0}
         #: one dict per retired request: ttft_s, gen_tokens, decode_s
         self.request_log: List[dict] = []
         self._req_meta: Dict[int, dict] = {}    # slot -> live request row
@@ -452,10 +507,12 @@ class Engine:
                                          top_k=top_k)
                 for s, p in requests.items()}
         if deadline_s is not None:
+            # validated as the dict-or-scalar it is: every entry checked
+            # on its own (collapsing to min() crashed on mixed None
+            # entries and pinned the whole batch to the tightest TTL in
+            # the validation error path)
             validate_request([], vocab=self.cfg.vocab,
-                             deadline_s=(min(deadline_s.values())
-                                         if isinstance(deadline_s, dict)
-                                         else deadline_s))
+                             deadline_s=deadline_s)
         for s, p in reqs.items():
             if p.shape[0] > self.max_len:
                 raise ValueError(
@@ -1361,6 +1418,19 @@ class Engine:
         self._clean[:] = False              # decode advanced every lane
         self.counters["decode_s"] += t1 - t0
         self.counters["gen_tokens"] += int(block_live.sum())
+        if spec_now and self._spec_adapter is not None:
+            # acceptance-adaptive spec_k: feed the block's measured
+            # accept telemetry and re-rank k for the NEXT block.
+            # Committed tokens cannot change — the verifier accepts the
+            # longest argmax-matching prefix at any k — only the
+            # draft-depth economics do.  A k change swaps to (or
+            # traces) the (n, k) loop on the next block.
+            rounds, acc = self._last_spec_obs
+            self._spec_adapter.observe(rounds, acc)
+            k_new = self._spec_adapter.propose()
+            if k_new != self.spec_k:
+                self.spec_k = int(k_new)
+                self.counters["spec_k_rejits"] += 1
         # per-block straggler telemetry: wall time per fused step; the
         # injector's deterministic slow flag adds a synthetic penalty
         # so CI chaos runs flag stragglers without real sleeps
@@ -1472,7 +1542,11 @@ class Engine:
         tokens, exactly like the plain decode block.
         """
         model_draft = self.draft is not None and self.drafter_fn is None
-        loop = self._spec_loops.get(n)
+        # keyed by (block size, k): adaptive spec_k swaps k between
+        # blocks, and each distinct pair is ONE trace — revisiting a
+        # previous k is a cache hit, so re-jits are bounded by the
+        # number of distinct k values the adapter ever proposes
+        loop = self._spec_loops.get((n, self.spec_k))
         if loop is None:
             if self.drafter_fn is not None:
                 drafter, kw = self.drafter_fn, {}
@@ -1486,7 +1560,7 @@ class Engine:
                                        drafter=drafter,
                                        ngram=self.spec_ngram, **kw),
                 donate_argnums=(1, 11) if model_draft else (1,))
-            self._spec_loops[n] = loop
+            self._spec_loops[(n, self.spec_k)] = loop
         sample_params = {"temperature": _snap(self.temperature),
                          "top_k": _snap(self.top_k)}
         key = self._key if (self.temperature > 0).any() else None
@@ -1514,8 +1588,14 @@ class Engine:
         # how many drafts each such round committed (0..spec_k)
         step_live = block_live.reshape(n, self.spec_k + 1,
                                        self.batch)[:, 0]
-        self.counters["verify_steps"] += int(step_live.sum())
-        self.counters["draft_accepted"] += int(accepted[step_live].sum())
+        rounds = int(step_live.sum())
+        acc = int(accepted[step_live].sum())
+        self.counters["verify_steps"] += rounds
+        self.counters["draft_accepted"] += acc
+        # this block's delta, for the spec_k adapter — consumed by
+        # step_many only after the block survives the fault check, so
+        # a restored-and-replayed block is observed exactly once
+        self._last_spec_obs = (rounds, acc)
         return block, block_live, np.asarray(fault)
 
     def step(self):
@@ -1711,8 +1791,12 @@ class Engine:
         out = {"requests": len(self.done), "admitted": c["admitted"],
                "peak_live": c["peak_live"], "gen_tokens": c["gen_tokens"],
                "decode_s": c["decode_s"],
+               # None — not 0.0 — when no decode interval was measurable
+               # (fake clocks, sub-resolution runs): the same rule
+               # request_row applies per request, so aggregates skip the
+               # value instead of reporting a fictitious stall
                "decode_tok_per_s": (c["gen_tokens"] / c["decode_s"]
-                                    if c["decode_s"] > 0 else 0.0)}
+                                    if c["decode_s"] > 0 else None)}
         if self.request_log:
             out["ttft_mean_s"] = float(np.mean(
                 [r["ttft_s"] for r in self.request_log]))
@@ -1727,6 +1811,19 @@ class Engine:
             out["verify_steps"] = c["verify_steps"]
             out["accepted_per_step"] = (c["draft_accepted"]
                                         / max(c["verify_steps"], 1))
+            # the adapted draft depth: current k, the construction cap,
+            # and how many loop re-traces adaptation actually cost
+            out["spec_k"] = self.spec_k
+            out["spec_k_init"] = self._spec_k_init
+            out["spec_k_rejits"] = c["spec_k_rejits"]
+        # which model picked the knobs ("off" = legacy defaults), its
+        # provenance, and the block size it resolved (None under "off":
+        # the caller drives block size directly)
+        out["autotune"] = self.autotune
+        if self._autotune_est is not None:
+            out["autotune_source"] = self._autotune_est.source
+        if self.decode_block is not None:
+            out["decode_block"] = self.decode_block
         if self.paged:
             # the resolved split-KV reuse factor this geometry runs
             # with (cost-model choice unless pinned by flag/ctx)
@@ -1782,8 +1879,10 @@ def main(argv=None):
                     help="int8 KV cache (per-token scales)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="tokens per batched prefill step")
-    ap.add_argument("--decode-block", type=int, default=8,
-                    help="decode steps fused per jit call (1 = per-token)")
+    ap.add_argument("--decode-block", type=int, default=None,
+                    help="decode steps fused per jit call (1 = per-"
+                         "token); default: the autotuner's resolved "
+                         "block (8 with --autotune off)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache: shared page pool + block tables; "
                          "admission metered by used tokens (dense mode "
@@ -1803,6 +1902,18 @@ def main(argv=None):
                     help="KV pages DMA'd per grid step (multi-page tile, "
                          "double-buffered); 'auto' sizes the tile to a "
                          "~128-row MXU operand (default)")
+    ap.add_argument("--autotune", default="analytic",
+                    choices=("off", "analytic", "fitted"),
+                    help="unified knob resolution: 'off' = legacy "
+                         "defaults byte-for-byte; 'analytic' resolves "
+                         "kv-split/pages-per-step/decode-block/spec-k "
+                         "from the hand-set cost model and adapts "
+                         "spec-k online from measured acceptance; "
+                         "'fitted' does the same on least-squares "
+                         "constants fitted from bench_calibrate "
+                         "measurements (AUTOTUNE.json, falling back "
+                         "to analytic without data). Explicit knob "
+                         "flags always win")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="prefix caching over the page pool (paged "
                          "mode): committed prompt pages are indexed "
@@ -1884,6 +1995,7 @@ def main(argv=None):
                      kv_split=knob(args.kv_split),
                      pages_per_step=knob(args.pages_per_step),
                      prefix_cache=args.prefix_cache,
+                     autotune=args.autotune,
                      spec=args.spec,
                      spec_k=args.spec_k, spec_draft=spec_draft,
                      spec_ngram=args.spec_ngram, preempt=args.preempt,
@@ -1892,7 +2004,9 @@ def main(argv=None):
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
                    for i in range(args.requests)]
-        block = max(1, args.decode_block)
+        # explicit flag > autotuner-resolved block > the legacy default
+        block = max(1, args.decode_block if args.decode_block is not None
+                    else (eng.decode_block or 8))
         t0 = time.perf_counter()
         gen_tokens = 0
         # continuous batching through the admission queue: every request
@@ -1929,16 +2043,28 @@ def main(argv=None):
 
 def print_stats_table(st: dict) -> None:
     """Summary table of :meth:`Engine.stats` rows (serve CLI + examples)."""
+    tps = st["decode_tok_per_s"]
     rows = [("requests served", f"{st['requests']}"),
             ("peak concurrent", f"{st['peak_live']}"),
             ("generated tokens", f"{st['gen_tokens']}"),
-            ("decode tok/s", f"{st['decode_tok_per_s']:.1f}")]
+            # None = no measurable decode interval; "n/a" beats a
+            # fictitious 0.0 that reads as a stalled engine
+            ("decode tok/s", "n/a" if tps is None else f"{tps:.1f}")]
     if "ttft_mean_s" in st:
         rows.append(("mean TTFT", f"{st['ttft_mean_s'] * 1e3:.1f} ms"))
     if "accepted_per_step" in st:
         rows.append(("verify rounds", f"{st['verify_steps']}"))
         rows.append(("drafts accepted/round",
                      f"{st['accepted_per_step']:.2f}"))
+    if st.get("autotune", "off") != "off":
+        src = st.get("autotune_source", st["autotune"])
+        rows.append(("autotune", f"{st['autotune']} ({src})"))
+    if "spec_k" in st:
+        rows.append(("spec k (now/cap/re-jits)",
+                     f"{st['spec_k']}/{st['spec_k_init']}"
+                     f"/{st['spec_k_rejits']}"))
+    if "decode_block" in st:
+        rows.append(("resolved decode block", f"{st['decode_block']}"))
     if "kv_split" in st:
         rows.append(("kv split / pages per step",
                      f"{st['kv_split']} / {st['pages_per_step']}"))

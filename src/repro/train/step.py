@@ -25,7 +25,14 @@ from ..optim import OptConfig, adamw_init, adamw_update
 
 __all__ = ["init_state", "build_train_step", "build_serve_step",
            "build_prefill_step", "build_decode_loop",
-           "build_spec_decode_loop"]
+           "build_spec_decode_loop", "LOOP_BUILDS"]
+
+#: fused-loop build telemetry: every call of a loop *builder* is one
+#: trace-and-compile when the result is jitted, so re-jit bugs (e.g. an
+#: adaptive knob thrashing the spec loop cache) show up here long before
+#: they show up in walltime.  Tests assert the count stays bounded by
+#: the number of distinct (block, k) keys; reset by assigning zeros.
+LOOP_BUILDS = {"decode": 0, "spec": 0}
 
 
 def init_state(rng, cfg: ModelConfig, *, dtype=jnp.float32,
@@ -190,6 +197,8 @@ def build_decode_loop(cfg: ModelConfig, ctx: QuantContext,
     from ..kernels.ops import sample_tokens
     from ..models.api import decode_fn
 
+    LOOP_BUILDS["decode"] += 1
+
     def decode_loop(params, cache, tokens, pos, live, stop_pos,
                     sample_params, key, step0, eos_id):
         temperature = sample_params["temperature"]
@@ -307,6 +316,7 @@ def build_spec_decode_loop(cfg: ModelConfig, ctx: QuantContext, steps: int,
     from ..models.api import (decode_fn, get_family, spec_restore_fn,
                               spec_state_fn)
 
+    LOOP_BUILDS["spec"] += 1
     s_blk = k + 1
     has_rec = hasattr(get_family(cfg), "spec_state")
     model_draft = drafter == "model"

@@ -1,0 +1,394 @@
+"""Unified serving autotuner conformance.
+
+The contract this suite pins, layer by layer:
+
+* **Resolver** — deterministic whole-knob-vector resolution per
+  workload shape, and the analytic estimator must reproduce the legacy
+  hand-set path (``auto_pages_per_step`` + ``choose_kv_split``)
+  *exactly*, candidate grid, occupancy boundary, tie-breaks and all:
+  ``--autotune analytic`` is a refactor of the default, not a new
+  policy.
+* **Fit** — the least-squares estimator round-trips synthetic training
+  rows generated from known weights, survives the JSON artifact cycle,
+  and degrades to the analytic weights when there is no data.
+* **Adapter** — acceptance-adaptive ``spec_k`` re-ranks from telemetry
+  with hysteresis and cooldown; proposals stay inside
+  ``[k_min, k_max]``.
+* **Engine** — ``--autotune off`` streams are byte-identical to
+  ``analytic``/``fitted`` streams (knobs may change latency, never
+  tokens), adaptive ``spec_k`` never changes committed greedy tokens,
+  and the fused spec loop re-traces at most once per distinct k
+  (``train.step.LOOP_BUILDS`` counts actual traces).
+"""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.constrain import use_mesh
+from repro.kernels.flash_attention import (auto_pages_per_step,
+                                           choose_kv_split,
+                                           get_cost_constants,
+                                           set_cost_constants)
+from repro.launch import autotune
+from repro.launch.autotune import (FEATURES, KnobVector, LatencyEstimator,
+                                   SpecKAdapter, WorkloadShape,
+                                   analytic_estimator, feature_vector,
+                                   fit_rows, kv_candidates, load_artifact,
+                                   load_estimator, rank_spec_k, resolve,
+                                   save_artifact)
+from repro.launch.serve import Engine
+
+from test_paged_serving import _prompts, _setup
+
+
+# ===========================================================================
+class TestResolverConformance:
+    # shape grid spanning the legacy selector's regimes: single-tile,
+    # mid, long-chain; lanes from starved to past the occupancy target
+    GRID = list(itertools.product((1, 3, 8, 16, 64, 200, 512),   # pages
+                                  (4, 8, 16, 32),                # page_size
+                                  (1, 2, 8),                     # hkv
+                                  (1, 4, 64, 511, 512)))         # batch
+
+    def test_analytic_resolver_equals_legacy_selector(self):
+        """The tentpole invariant: resolving with the analytic
+        estimator reproduces the hand-set default for EVERY shape —
+        same tile, same split, ties and occupancy boundary included."""
+        est = analytic_estimator()
+        for pages, ps, hkv, batch in self.GRID:
+            t_legacy = auto_pages_per_step(ps, pages)
+            s_legacy = choose_kv_split(pages * ps, pages, hkv, batch=batch,
+                                       pages_per_step=t_legacy)
+            kv = resolve(WorkloadShape(pages=pages, page_size=ps, hkv=hkv,
+                                       batch=batch), est)
+            assert (kv.pages_per_step, kv.kv_split) == \
+                (t_legacy, s_legacy), \
+                (f"shape p{pages}/ps{ps}/h{hkv}/b{batch}: resolver "
+                 f"({kv.pages_per_step},{kv.kv_split}) != legacy "
+                 f"({t_legacy},{s_legacy})")
+
+    def test_resolution_is_deterministic(self):
+        shape = WorkloadShape(pages=64, page_size=8, hkv=1, batch=4)
+        assert resolve(shape) == resolve(shape)
+
+    def test_pinned_vectors(self):
+        """Exact resolved vectors for canonical shapes — any drift in
+        grids, constants, or tie-breaks shows up as a diff here."""
+        long_ctx = resolve(WorkloadShape(pages=64, page_size=8, hkv=1,
+                                         batch=4))
+        assert long_ctx == KnobVector(kv_split=4, pages_per_step=16,
+                                      decode_block=32, spec_k=4)
+        dense = resolve(WorkloadShape(pages=0, page_size=8, hkv=1,
+                                      batch=4))
+        assert (dense.kv_split, dense.pages_per_step) == (1, 1)
+
+    def test_decode_block_capped_by_gen_len(self):
+        short = resolve(WorkloadShape(pages=0, page_size=8, hkv=1,
+                                      batch=1, gen_len=1))
+        assert short.decode_block == 1
+        long = resolve(WorkloadShape(pages=0, page_size=8, hkv=1,
+                                     batch=1, gen_len=64))
+        assert long.decode_block in autotune.DECODE_BLOCKS
+
+    def test_candidate_grid_includes_boundary_split(self):
+        """lanes == target: the first saturated split must still be a
+        candidate (the off-by-one the guard fix closed)."""
+        cands = kv_candidates(WorkloadShape(pages=64, page_size=8,
+                                            hkv=1, batch=512))
+        assert (16, 2) in cands                  # boundary candidate
+        assert (16, 4) not in cands              # deeper: pruned
+
+    def test_default_spec_k_matches_historical_default(self):
+        assert rank_spec_k(autotune._ACCEPT_PRIOR, 8) == 4
+
+    def test_rank_spec_k_extremes(self):
+        assert rank_spec_k(0.0, 8) == 1          # nothing verifies
+        assert rank_spec_k(0.999, 8) == 8        # everything verifies
+
+
+# ===========================================================================
+class TestFittedEstimator:
+    #: diverse synthetic corpus: every (shape, knob) point the resolver
+    #: could visit on these shapes
+    SHAPES = (WorkloadShape(pages=64, page_size=8, hkv=1, batch=4),
+              WorkloadShape(pages=32, page_size=8, hkv=2, batch=2),
+              WorkloadShape(pages=16, page_size=16, hkv=1, batch=8))
+
+    def _rows(self, weights):
+        rows = []
+        for s in self.SHAPES:
+            for t, split in kv_candidates(s):
+                f = feature_vector(s.pages, s.page_size, s.hkv, s.batch,
+                                   split, t)
+                rows.append({"pages": s.pages, "page_size": s.page_size,
+                             "hkv": s.hkv, "batch": s.batch,
+                             "kv_split": split, "pages_per_step": t,
+                             "us_per_call": float(f @ np.asarray(weights))})
+        return rows
+
+    def test_fit_round_trips_training_rows(self):
+        """Rows generated from known nonnegative weights: the fit must
+        reproduce every training latency (exact linear system)."""
+        w_true = (4.0, 0.05, 1.5, 0.2, 10.0, 2.0)
+        rows = self._rows(w_true)
+        est = fit_rows(rows)
+        assert est.source == "fit" and est.n_rows == len(rows)
+        assert est.residual < 1e-9
+        for r in rows:
+            pred = est.predict(r["pages"], r["page_size"], r["hkv"],
+                               r["batch"], r["kv_split"],
+                               r["pages_per_step"])
+            assert pred == pytest.approx(r["us_per_call"], rel=1e-6)
+        c = est.cost_constants()
+        assert c["tile_cost"] > 0 and c["combine_cost"] > 0
+
+    def test_fit_weights_are_nonnegative(self):
+        # corrupt one shape's rows so unconstrained lstsq would go
+        # negative somewhere; the constrained fit must not
+        rows = self._rows((4.0, 0.05, 1.5, 0.2, 10.0, 2.0))
+        for r in rows[: len(rows) // 3]:
+            r["us_per_call"] *= 5.0
+        est = fit_rows(rows)
+        assert all(w >= 0.0 for w in est.weights)
+
+    def test_fit_requires_enough_rows(self):
+        rows = self._rows((4.0, 0.05, 1.5, 0.2, 10.0, 2.0))
+        with pytest.raises(ValueError):
+            fit_rows(rows[: len(FEATURES) - 1])
+
+    def test_artifact_round_trip(self, tmp_path):
+        est = fit_rows(self._rows((4.0, 0.05, 1.5, 0.2, 10.0, 2.0)))
+        p = save_artifact(est, path=tmp_path / "AUTOTUNE.json")
+        back = load_artifact(path=p)
+        assert back.source == "artifact"
+        assert back.weights == pytest.approx(est.weights)
+        # the artifact is the estimator fitted mode loads
+        via_mode = load_estimator("fitted", path=p)
+        assert via_mode.weights == pytest.approx(est.weights)
+
+    def test_artifact_rejects_stale_feature_basis(self, tmp_path):
+        est = analytic_estimator()
+        p = save_artifact(est, path=tmp_path / "AUTOTUNE.json")
+        import json
+        d = json.loads(p.read_text())
+        d["features"] = ["chain", "other"]
+        p.write_text(json.dumps(d))
+        with pytest.raises(ValueError):
+            load_artifact(path=p)
+
+    def test_fitted_mode_falls_back_to_analytic(self, tmp_path,
+                                                monkeypatch):
+        """No artifact, no calibration rows: fitted mode must still
+        construct — analytic weights, provenance in ``source``."""
+        monkeypatch.setattr(autotune, "_REPO_ROOT", tmp_path)
+        est = load_estimator("fitted", path=tmp_path / "missing.json")
+        assert est.source == "analytic-fallback"
+        assert est.weights == analytic_estimator().weights
+
+    def test_analytic_weights_project_back_to_constants(self):
+        c = analytic_estimator().cost_constants()
+        assert c["tile_cost"] == pytest.approx(
+            get_cost_constants()["tile_cost"])
+        assert c["combine_cost"] == pytest.approx(
+            get_cost_constants()["combine_cost"])
+
+
+# ===========================================================================
+class TestCostConstants:
+    def test_install_and_reset(self):
+        """Fitted constants rewire the legacy selector; installing the
+        analytic estimator restores the defaults byte-for-byte."""
+        base = get_cost_constants()
+        try:
+            # a fit where combining is prohibitively expensive must pin
+            # the legacy selector to split=1 on a long chain
+            est = LatencyEstimator(weights=(1.0, 0.0, 1e9, 0.0, 0.0, 0.0),
+                                   source="fit")
+            autotune.install(est)
+            assert choose_kv_split(512 * 8, 512, 1, batch=1,
+                                   pages_per_step=8) == 1
+        finally:
+            autotune.install(analytic_estimator())
+        assert get_cost_constants() == base
+        assert choose_kv_split(512 * 8, 512, 1, batch=1,
+                               pages_per_step=8) > 1
+
+    def test_set_cost_constants_clears_decision_cache(self):
+        base = get_cost_constants()
+        try:
+            before = choose_kv_split(512 * 8, 512, 1, batch=1,
+                                     pages_per_step=8)
+            set_cost_constants(combine_cost=1e9)
+            after = choose_kv_split(512 * 8, 512, 1, batch=1,
+                                    pages_per_step=8)
+            assert before > 1 and after == 1
+        finally:
+            set_cost_constants()
+        assert get_cost_constants() == base
+
+
+# ===========================================================================
+class TestSpecKAdapter:
+    def test_no_data_keeps_current_k(self):
+        ad = SpecKAdapter(k_init=4)
+        assert ad.propose() == 4 and ad.switches == 0
+
+    def test_low_acceptance_walks_k_down(self):
+        ad = SpecKAdapter(k_init=4, min_rounds=4, cooldown=1)
+        ad.observe(rounds=8, accepted=0)
+        assert ad.propose() == 1
+        assert ad.switches == 1
+
+    def test_acceptance_inversion_round_trips(self):
+        p = 0.5
+        k = 4
+        a_bar = sum(p ** i for i in range(1, k + 1))
+        ad = SpecKAdapter(k_init=k, min_rounds=4, cooldown=1)
+        ad.observe(rounds=100, accepted=int(round(a_bar * 100)))
+        assert ad.acceptance() == pytest.approx(p, abs=0.02)
+
+    def test_hysteresis_blocks_marginal_switch(self):
+        """At the default prior the best k's score is within the
+        hysteresis band of neighbouring ks — the adapter must hold."""
+        ad = SpecKAdapter(k_init=4, min_rounds=4, cooldown=1)
+        p = autotune._ACCEPT_PRIOR
+        a_bar = sum(p ** i for i in range(1, 5))
+        ad.observe(rounds=1000, accepted=int(round(a_bar * 1000)))
+        assert ad.propose() == 4 and ad.switches == 0
+
+    def test_cooldown_limits_switch_rate(self):
+        ad = SpecKAdapter(k_init=4, min_rounds=1, cooldown=3)
+        ad.observe(rounds=8, accepted=0)
+        assert ad.propose() == 1                 # first switch is free
+        # fresh telemetry immediately after the switch: held by cooldown
+        ad.observe(rounds=8, accepted=8)
+        assert ad.propose() == 1
+        ad.observe(rounds=8, accepted=8)
+        assert ad.propose() == 1
+        ad.observe(rounds=8, accepted=8)
+        assert ad.propose() > 1                  # cooldown elapsed
+
+    def test_proposals_bounded_by_k_max(self):
+        ad = SpecKAdapter(k_init=2, k_max=3, min_rounds=1, cooldown=1)
+        ad.observe(rounds=50, accepted=100)      # sky-high acceptance
+        assert ad.propose() <= 3
+
+    def test_window_forgets_stale_telemetry(self):
+        ad = SpecKAdapter(k_init=4, window=16, min_rounds=4, cooldown=1)
+        ad.observe(rounds=16, accepted=0)        # cold epoch
+        for _ in range(4):                       # hot epoch fills window
+            ad.observe(rounds=8, accepted=30)
+        assert ad.acceptance() > 0.5
+
+
+# ===========================================================================
+class TestEngineAutotune:
+    def _streams(self, eng, prompts, gen_len=8, block=4):
+        eng.add_requests(prompts, gen_len=gen_len)
+        while eng.live.any():
+            eng.step_many(block)
+        return [list(eng.outputs[s] or []) for s in range(len(prompts))]
+
+    def test_invalid_mode_rejected(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with pytest.raises(ValueError):
+            Engine(cfg, ctx, params, mesh, batch=2, max_len=16,
+                   autotune="learned")
+
+    def test_off_streams_byte_identical_to_resolved(self):
+        """The acceptance bar for every mode: knob resolution may move
+        latency, never tokens."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = {i: p for i, p in enumerate(_prompts(cfg, (6, 5)))}
+        outs = {}
+        with use_mesh(mesh):
+            for mode in ("off", "analytic", "fitted"):
+                eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                             paged=True, page_size=4, autotune=mode)
+                outs[mode] = self._streams(eng, prompts)
+        assert outs["analytic"] == outs["off"]
+        assert outs["fitted"] == outs["off"]
+
+    def test_resolved_knobs_reported_in_stats(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                         paged=True, page_size=4, autotune="analytic")
+            self._streams(eng, {0: _prompts(cfg, (6,))[0]})
+            st = eng.stats()
+        assert st["autotune"] == "analytic"
+        assert st["autotune_source"] == "analytic"
+        # grid value, capped by the engine's token budget (max_len)
+        assert 1 <= st["decode_block"] <= 24
+        assert st["kv_split"] >= 1 and st["pages_per_step"] >= 1
+
+    def test_adaptive_spec_k_stream_invariant_and_bounded_rejit(self):
+        """Mismatched drafts collapse acceptance to ~0: the adapter
+        must walk k down, the greedy stream must not move by a byte,
+        and the fused loop re-traces exactly once per distinct k."""
+        from repro.train.step import LOOP_BUILDS
+
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        prompts = {i: p for i, p in enumerate(_prompts(cfg, (6, 5)))}
+
+        def mismatched(eng):
+            def f(hist, tok, pos):
+                bad = (tok + 7) % eng.cfg.vocab
+                return jnp.broadcast_to(bad, (tok.shape[0], eng.spec_k))
+            return f
+
+        outs, stats = {}, {}
+        with use_mesh(mesh):
+            for mode in ("off", "analytic"):
+                eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=32,
+                             spec=True, spec_k=4, autotune=mode)
+                eng.drafter_fn = mismatched(eng)
+                if eng._spec_adapter is not None:
+                    # fast-adapting variant: same policy, test-sized
+                    # window so adaptation happens within a short run
+                    eng._spec_adapter = SpecKAdapter(k_init=4, k_max=4,
+                                                     min_rounds=4,
+                                                     cooldown=1)
+                builds0 = LOOP_BUILDS["spec"]
+                outs[mode] = self._streams(eng, prompts, gen_len=16)
+                stats[mode] = (eng.stats(), LOOP_BUILDS["spec"] - builds0)
+        assert outs["analytic"] == outs["off"], \
+            "adaptive spec_k changed committed greedy tokens"
+        st, builds = stats["analytic"]
+        assert st["spec_k"] < 4 and st["spec_k_rejits"] >= 1
+        # one trace per distinct k (cap + each adapted k), none wasted
+        assert builds <= st["spec_k_rejits"] + 1
+
+    def test_adaptive_spec_k_holds_on_verifying_drafts(self):
+        """High acceptance at the cap: nothing to gain below k_max, so
+        the adapter must not thrash (no re-jits, k stays put)."""
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        # tiled pattern prompt: greedy continuation revisits its own
+        # n-grams, prompt-lookup drafts verify at a high rate
+        pat = np.tile(np.random.RandomState(3).randint(
+            0, cfg.vocab, (5,)), 4).astype(np.int32)
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=1, max_len=40,
+                         spec=True, spec_k=4, autotune="analytic")
+            self._streams(eng, {0: pat}, gen_len=16)
+            st = eng.stats()
+        assert st["spec_k"] == 4
+        assert st["spec_k_rejits"] == 0
+
+    def test_dense_engine_resolves_decode_block_only(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            eng = Engine(cfg, ctx, params, mesh, batch=2, max_len=24,
+                         autotune="analytic")
+        assert 1 <= eng.decode_block <= 24
+        # dense cache: the kv knobs stay unset — nothing to split
+        assert eng.kv_split is None and eng.pages_per_step is None

@@ -257,6 +257,37 @@ class TestDeadlines:
         assert len(eng.results[rid]["tokens"]) == 3
         assert eng.counters["timeouts"] == 1
 
+    def test_dict_deadlines_apply_per_request(self):
+        """``deadline_s={slot: ttl}`` with mixed None entries: only the
+        tight-TTL request times out; the no-deadline one runs to
+        completion.  Failing-before: validation collapsed the dict
+        with ``min(values())`` — a TypeError the moment one entry was
+        None, and the whole batch judged by the tightest TTL."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        clock = FakeClock()
+        prompts = _prompts(cfg, (6, 6), seed=7)
+        with use_mesh(setup[3]):
+            eng = _engine(setup, batch=2, clock=clock)
+            eng.add_requests({0: prompts[0], 1: prompts[1]}, gen_len=8,
+                             deadline_s={0: 5.0, 1: None})
+            eng.step_many(2)                     # both decode 2 tokens
+            clock.advance(10.0)                  # slot 0's TTL expires
+            _drain(eng, block=2)
+        assert eng.counters["timeouts"] == 1
+        # tight slot returns its partial output; open slot is untouched
+        by_status = {r["status"]: r["tokens"] for r in
+                     eng.results.values()}
+        assert 0 < len(by_status[RequestStatus.TIMED_OUT]) < 8
+        assert len(by_status[RequestStatus.COMPLETED]) == 8
+
+    def test_mixed_none_dict_deadline_validates(self):
+        """Regression: the collapsed-min validation crashed on mixed
+        None before a single request was admitted."""
+        validate_request([], vocab=64, deadline_s={0: 1.0, 1: None})
+        with pytest.raises(ValueError, match="deadline"):
+            validate_request([], vocab=64, deadline_s={0: 1.0, 1: -2.0})
+
     def test_no_deadline_means_no_timeout(self):
         setup = _setup("lm", "f32")
         clock = FakeClock()
@@ -434,3 +465,31 @@ class TestThroughputRows:
             _drain(eng, block=2)
         assert eng.request_log[0]["tok_per_s"] is None
         assert eng.stats()["req_tok_per_s_mean"] == 0.0
+
+    def test_engine_decode_tok_per_s_none_without_interval(self, capsys):
+        """Regression: a frozen clock (decode_s == 0) made ``stats()``
+        report a fictitious ``decode_tok_per_s`` of 0.0 — tokens WERE
+        generated, the interval just wasn't measurable.  None is the
+        honest value, and the exit table prints "n/a" for it."""
+        from repro.launch.serve import print_stats_table
+
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=FakeClock())
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=3)
+            _drain(eng, block=3)
+            st = eng.stats()
+        assert st["gen_tokens"] > 0
+        assert st["decode_tok_per_s"] is None
+        print_stats_table(st)
+        assert "n/a" in capsys.readouterr().out
+
+    def test_engine_decode_tok_per_s_measured_with_ticking_clock(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=FakeClock(tick=0.01))
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=3)
+            _drain(eng, block=3)
+            st = eng.stats()
+        assert st["decode_tok_per_s"] is not None
+        assert st["decode_tok_per_s"] > 0

@@ -364,6 +364,29 @@ class TestChooseKvSplit:
         assert auto_pages_per_step(256, 64) == 1    # page already > 128
         assert auto_pages_per_step(8, 2) == 2       # capped by the table
 
+    def test_occupancy_boundary_candidate_is_costed(self):
+        """lanes exactly at the occupancy target: split=2's predecessor
+        saturates, but split=2 itself must still be COSTED before the
+        guard fires.  The off-by-one guard broke out first, pinning
+        every ``lanes >= target`` geometry to split=1 regardless of
+        chain length — 64 serial tiles where 32 would do."""
+        # 64 tiles, lanes=512 (the target): split=2 halves the chain
+        # (cost 32*4+2=130 < 64*4+1=257) and is the boundary candidate
+        assert choose_kv_split(64 * 8, 64, 1, batch=512,
+                               pages_per_step=1) == 2
+
+    def test_occupancy_just_below_target_probes_deeper(self):
+        # lanes=511: split=2 leaves lanes unsaturated (511 < 512), so
+        # split=4 is the boundary candidate and wins on chain length
+        assert choose_kv_split(64 * 8, 64, 1, batch=511,
+                               pages_per_step=1) == 4
+
+    def test_saturated_lanes_still_split_once(self):
+        # lanes far past the target: the guard fires at split=2, but
+        # split=2 was already costed and beats the serial chain
+        assert choose_kv_split(64 * 8, 64, 1, batch=4096,
+                               pages_per_step=1) == 2
+
 
 # ===========================================================================
 def _make_engine_env(seed=0):
