@@ -642,6 +642,82 @@ def run_preemption(batch=3, page_size=4, num_pages=8, n_requests=6,
              "ms_total": wall * 1e3}]
 
 
+def run_priority(batch=3, page_size=4, num_pages=8, prompt_len=10,
+                 gen_len=6, block=2, n_batch=3, n_standard=3,
+                 n_realtime=2):
+    """SLO classes on an over-committed mixed burst (PR 9 smoke).
+
+    The ``run_preemption`` pool pressure, but the burst now carries all
+    three priority classes — and the REALTIME requests arrive LAST, the
+    worst case for a FIFO queue.  The class-ordered queue serves them
+    first anyway, and the class floor on victim selection spills BATCH
+    pages while every REALTIME request keeps its slots.  (REALTIME
+    load alone fits the pool — two requests — so the only preemption
+    pressure a REALTIME request could ever feel here comes from lower
+    classes, which the victim floor forbids; within-class REALTIME
+    spills, which the floor permits, need REALTIME itself to
+    over-commit.)
+
+    Asserts: every request completes; REALTIME preemptions stay at
+    ZERO while BATCH preemptions fire (degradation lands on the class
+    paid to absorb it); REALTIME p99 TTFT beats BATCH p50 despite the
+    submission-order handicap, and stays bounded by the drain wall."""
+    from repro.dist.constrain import use_mesh
+    from repro.launch.lifecycle import PriorityClass, RequestStatus
+
+    cfg, ctx, fam, mesh, params = _serving_setup()
+    src = SyntheticLM(cfg.vocab, seed=0)
+    n_requests = n_batch + n_standard + n_realtime
+    prompts = [src.tokens(i, 1, prompt_len)[0, :-1]
+               for i in range(n_requests)]
+    # worst-case arrival order for the class that needs latency most
+    order = (["batch"] * n_batch + ["standard"] * n_standard
+             + ["realtime"] * n_realtime)
+    with use_mesh(mesh):
+        eng = make_engine(batch=batch, max_len=prompt_len + gen_len + 8,
+                          paged=True, page_size=page_size,
+                          num_pages=num_pages, preempt=True,
+                          preempt_after=2,
+                          slo_targets={"realtime": {"ttft_s": 30.0}})
+        t0 = time.perf_counter()
+        for p, cls in zip(prompts, order):
+            eng.submit(p, gen_len=gen_len, priority=cls)
+        eng.try_admit()
+        while eng.live.any() or eng.waiting:
+            eng.step_many(block)
+        eng.retire_finished()
+        wall = time.perf_counter() - t0
+    st = eng.stats()
+    cc = eng.class_counters
+    assert len(eng.done) == n_requests, "requests lost under priority"
+    assert all(r["status"] is RequestStatus.COMPLETED
+               for r in eng.results.values())
+    assert cc[PriorityClass.BATCH]["preemptions"] > 0, \
+        "pool pressure never spilled a BATCH victim"
+    # the headline invariant: a REALTIME request is never the victim
+    # while a lower class holds pages (victim floor)
+    assert cc[PriorityClass.REALTIME]["preemptions"] == 0, \
+        "REALTIME was preempted while BATCH victims existed"
+    rt = st["classes"]["realtime"]
+    bt = st["classes"]["batch"]
+    bt_waits = sorted(r["ttft_s"] for r in eng.request_log
+                      if r["priority"] == "batch")
+    bt_p50 = bt_waits[len(bt_waits) // 2]
+    assert rt["ttft_p99_s"] <= wall, "REALTIME TTFT unbounded"
+    assert rt["ttft_p99_s"] < bt_p50, \
+        (f"REALTIME p99 TTFT {rt['ttft_p99_s']:.3f}s did not beat "
+         f"BATCH p50 {bt_p50:.3f}s despite arriving last")
+    return [{"bench": "serving_priority", "name": "mixed_class_burst",
+             "requests": n_requests, "num_pages": num_pages,
+             "realtime_ttft_p99_ms": rt["ttft_p99_s"] * 1e3,
+             "batch_ttft_p50_ms": bt_p50 * 1e3,
+             "realtime_preemptions": cc[PriorityClass.REALTIME][
+                 "preemptions"],
+             "batch_preemptions": cc[PriorityClass.BATCH]["preemptions"],
+             "shed_rounds": sum(c["shed_rounds"] for c in cc.values()),
+             "ms_total": wall * 1e3}]
+
+
 def run_prefix_cache(n_requests=6, batch=2, pre_len=48, tail_len=4,
                      gen_len=4, page_size=8, chunk=8, block=4):
     """Prefix-cache admission on shared-preamble traffic, warm vs cold.
@@ -769,6 +845,7 @@ def run():
     rows.extend(run_autotune())
     rows.extend(run_spec())
     rows.extend(run_preemption())
+    rows.extend(run_priority())
     rows.extend(run_prefix_cache())
     return rows
 

@@ -27,8 +27,11 @@ from __future__ import annotations
 
 import json
 import os
+import pickle
 import shutil
+import struct
 import threading
+import zlib
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -36,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["save_state", "restore_state", "latest_step", "save_blob",
-           "load_blob", "CheckpointManager"]
+           "load_blob", "BlobLog", "CheckpointManager"]
 
 _SEP = "."
 
@@ -104,6 +107,108 @@ def load_blob(directory: str, step: int, *, name: str = "blob"):
     """Load a :func:`save_blob` snapshot."""
     path = os.path.join(directory, f"step_{step:08d}", name + ".npy")
     return np.load(path, allow_pickle=True)[()]
+
+
+class BlobLog:
+    """Append-only write-ahead log of pickled records (the journal
+    primitive under the serving engine's crash-safe warm restart).
+
+    Framing: each record is ``<u32 length><u32 crc32>`` followed by the
+    pickled payload.  :meth:`append` flushes AND ``os.fsync``\\ s before
+    returning, so an append that returned is durable — kill -9 the
+    process the next instruction and the record replays.
+
+    Torn-tail tolerance: a crash *mid-append* leaves a short or
+    CRC-mismatched frame at the end of the file.  Opening for append
+    scans the existing frames, keeps every complete one, and truncates
+    the torn tail (an os.replace-style atomicity guarantee built from
+    sequential appends: the prefix of durable records is always
+    intact).  Corruption anywhere *before* the tail cannot be repaired
+    and raises — silently resuming past a hole would replay a wrong
+    history.
+
+    Only for trusted self-written state (pickle), like every
+    checkpoint in this module.
+    """
+
+    _HEADER = struct.Struct("<II")
+
+    def __init__(self, path: str, *, fresh: bool = False):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if fresh or not os.path.exists(path):
+            self._f = open(path, "wb")
+            self.count = 0
+        else:
+            self.count, good = self._scan()
+            with open(path, "r+b") as f:
+                f.truncate(good)        # drop a torn tail, keep the rest
+            self._f = open(path, "ab")
+
+    def _scan(self):
+        """(record count, byte offset after the last complete record).
+
+        Stops at the first short/CRC-broken frame ONLY if it is the
+        file's tail (an interrupted append); a broken frame with valid
+        data after it is real corruption and raises.
+        """
+        count, good = 0, 0
+        with open(self.path, "rb") as f:
+            data = f.read()
+        off, end = 0, len(data)
+        while off + self._HEADER.size <= end:
+            length, crc = self._HEADER.unpack_from(data, off)
+            body = data[off + self._HEADER.size:
+                        off + self._HEADER.size + length]
+            if len(body) < length or zlib.crc32(body) != crc:
+                break
+            count += 1
+            off += self._HEADER.size + length
+        good = off
+        # anything after the torn frame means mid-file damage, not an
+        # interrupted append — refuse to silently drop committed history
+        tail = data[good:]
+        max_torn = self._HEADER.size + (self._HEADER.unpack_from(
+            data, good)[0] if good + self._HEADER.size <= end else len(tail))
+        if len(tail) > max_torn:
+            raise IOError(
+                f"journal {self.path} corrupt at byte {good}: broken "
+                f"frame followed by {len(tail) - max_torn} more bytes "
+                f"(not a torn tail)")
+        return count, good
+
+    def append(self, obj) -> int:
+        """Durably append one record; returns its index."""
+        body = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        self._f.write(self._HEADER.pack(len(body), zlib.crc32(body)))
+        self._f.write(body)
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        idx = self.count
+        self.count += 1
+        return idx
+
+    def read(self, start: int = 0) -> list:
+        """Records ``start..`` re-read from disk (tail-tolerant)."""
+        out = []
+        with open(self.path, "rb") as f:
+            data = f.read()
+        off, end, i = 0, len(data), 0
+        while off + self._HEADER.size <= end:
+            length, crc = self._HEADER.unpack_from(data, off)
+            body = data[off + self._HEADER.size:
+                        off + self._HEADER.size + length]
+            if len(body) < length or zlib.crc32(body) != crc:
+                break
+            if i >= start:
+                out.append(pickle.loads(body))
+            i += 1
+            off += self._HEADER.size + length
+        return out
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
 
 
 def latest_step(directory: str) -> Optional[int]:

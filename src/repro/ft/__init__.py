@@ -1,10 +1,10 @@
 """Fault tolerance: recovery loop, straggler detection, serving chaos."""
 
 from .recovery import FaultInjector, ResilientLoop
-from .serving import (FAULT_KINDS, InjectedFault, PageCorruptionError,
-                      ServingFaultInjector)
+from .serving import (CRASH_KIND, FAULT_KINDS, InjectedCrash, InjectedFault,
+                      PageCorruptionError, ServingFaultInjector)
 from .straggler import StragglerMonitor
 
 __all__ = ["FaultInjector", "ResilientLoop", "StragglerMonitor",
-           "ServingFaultInjector", "InjectedFault", "PageCorruptionError",
-           "FAULT_KINDS"]
+           "ServingFaultInjector", "InjectedFault", "InjectedCrash",
+           "PageCorruptionError", "FAULT_KINDS", "CRASH_KIND"]

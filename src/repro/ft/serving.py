@@ -28,9 +28,22 @@ Fault kinds and their detection paths:
 * ``"slow"`` — the injector sleeps before the block (a straggler step).
   No recovery: the wired-in ``StragglerMonitor`` flags the block and
   the event surfaces in ``Engine.stats()``.
+* ``"crash"`` — process death mid-block: :class:`InjectedCrash` is
+  raised before the block and deliberately does NOT subclass
+  RuntimeError, so the engine's in-process restore-and-replay loop can
+  never catch it (a dead process replays nothing).  The recovery path
+  is *cross-process*: the test harness abandons the engine object,
+  builds a fresh one, and rebuilds it from the durable journal +
+  snapshot directory via ``Engine.recover`` — the warm-restart
+  conformance suite asserts the rebuilt streams are byte-identical to
+  the uninterrupted run.
 
 Each scheduled fault fires exactly once (like the training injector's
 ``fired`` set), so a recovered replay of the same round runs clean.
+``FAULT_KINDS`` lists the four *in-process* kinds the chaos matrix
+cycles through; ``crash`` is scheduled the same way but recovered out
+of process, so suites that assert "every FAULT_KIND is invisible
+in-process" keep their meaning.
 """
 
 from __future__ import annotations
@@ -38,14 +51,23 @@ from __future__ import annotations
 import time
 from typing import Dict, Iterable, Tuple, Union
 
-__all__ = ["ServingFaultInjector", "InjectedFault", "PageCorruptionError",
-           "FAULT_KINDS"]
+__all__ = ["ServingFaultInjector", "InjectedFault", "InjectedCrash",
+           "PageCorruptionError", "FAULT_KINDS", "CRASH_KIND"]
 
 FAULT_KINDS = ("raise", "nan", "corrupt", "slow")
+#: recovered across processes (Engine.recover), not by in-process replay
+CRASH_KIND = "crash"
 
 
 class InjectedFault(RuntimeError):
     """A scheduled step exception (transient worker failure)."""
+
+
+class InjectedCrash(BaseException):
+    """Scheduled process death.  A BaseException on purpose: nothing in
+    the engine (or in driver code with a broad ``except Exception``)
+    may swallow it — the only way past a crash is a fresh process and
+    ``Engine.recover``."""
 
 
 class PageCorruptionError(RuntimeError):
@@ -69,9 +91,9 @@ class ServingFaultInjector:
                  else list(schedule))
         self.schedule = {}
         for rnd, kind in items:
-            if kind not in FAULT_KINDS:
+            if kind not in FAULT_KINDS + (CRASH_KIND,):
                 raise ValueError(f"unknown fault kind {kind!r} "
-                                 f"(have {FAULT_KINDS})")
+                                 f"(have {FAULT_KINDS + (CRASH_KIND,)})")
             self.schedule.setdefault(int(rnd), []).append(kind)
         self.slow_s = float(slow_s)
         self.fired = set()
@@ -94,6 +116,14 @@ class ServingFaultInjector:
                 continue
             self.fired.add(key)
             self.events.append(key)
+            if kind == CRASH_KIND:
+                # close the doomed engine's journal handle first: the
+                # rebuilt engine reopens the same file, and an abandoned
+                # open append handle should not linger on it
+                j = getattr(engine, "_journal", None)
+                if j is not None:
+                    j.close()
+                raise InjectedCrash(f"injected process death at block {rnd}")
             if kind == "raise":
                 raise InjectedFault(f"injected step fault at block {rnd}")
             if kind == "slow":

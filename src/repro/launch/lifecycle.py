@@ -31,7 +31,8 @@ import time
 
 import numpy as np
 
-__all__ = ["RequestStatus", "TERMINAL_STATUSES", "validate_request",
+__all__ = ["RequestStatus", "TERMINAL_STATUSES", "PriorityClass",
+           "coerce_priority", "normalize_slo_targets", "validate_request",
            "request_row"]
 
 
@@ -54,8 +55,98 @@ TERMINAL_STATUSES = frozenset({
 })
 
 
+class PriorityClass(enum.IntEnum):
+    """SLO class of a request — a *scheduling* property, never a
+    sampling one (the same prompt yields the same tokens in every
+    class; only admission order, victim order and shed budget differ).
+
+    Lower value = more important.  The ordering is load-bearing in
+    three places: the admission queue serves the lowest-valued
+    non-empty class first (FIFO within a class), preempt-and-spill
+    ranks victims by *descending* value (BATCH pages spill before a
+    REALTIME request ever loses one), and SLO-driven shedding
+    sacrifices the budgets that serve high-valued classes first.
+    """
+
+    REALTIME = 0
+    STANDARD = 1
+    BATCH = 2
+
+
+def coerce_priority(value) -> PriorityClass:
+    """Accept a :class:`PriorityClass`, its int value, or its name
+    (any case); reject everything else with the valid choices named.
+
+    ``None`` means "caller didn't say" and maps to STANDARD — the
+    middle class, so defaulted traffic neither starves batch work nor
+    jumps ahead of explicitly-realtime requests.
+    """
+    if value is None:
+        return PriorityClass.STANDARD
+    if isinstance(value, PriorityClass):
+        return value
+    if isinstance(value, str):
+        try:
+            return PriorityClass[value.strip().upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown priority class {value!r} (choices: "
+                f"{[c.name.lower() for c in PriorityClass]})") from None
+    if isinstance(value, (int, np.integer)) and not isinstance(value, bool):
+        try:
+            return PriorityClass(int(value))
+        except ValueError:
+            raise ValueError(
+                f"priority class value {int(value)} out of range "
+                f"(valid: {[int(c) for c in PriorityClass]})") from None
+    raise ValueError(
+        f"priority must be a PriorityClass, its name or its int value "
+        f"(got {type(value).__name__})")
+
+
+def normalize_slo_targets(targets) -> dict:
+    """Validate per-class SLO targets into ``{PriorityClass: {...}}``.
+
+    ``targets`` maps a class (enum / name / int, via
+    :func:`coerce_priority`) to ``{"ttft_s": s, "tok_per_s": r}``;
+    either key may be absent or ``None`` (no target on that axis).
+    A non-positive target is rejected like a non-positive
+    ``deadline_s`` — it could never be met, so it is always a caller
+    bug, and a zero TTFT target would make every queued request
+    "at risk" forever (permanent shedding).
+    """
+    out = {}
+    for key, tgt in (targets or {}).items():
+        cls = coerce_priority(key)
+        if tgt is None:
+            continue
+        if not isinstance(tgt, dict):
+            raise ValueError(
+                f"SLO target for {cls.name.lower()} must be a dict "
+                f"with 'ttft_s'/'tok_per_s' keys (got "
+                f"{type(tgt).__name__})")
+        unknown = set(tgt) - {"ttft_s", "tok_per_s"}
+        if unknown:
+            raise ValueError(
+                f"unknown SLO target keys {sorted(unknown)} for "
+                f"{cls.name.lower()} (valid: ttft_s, tok_per_s)")
+        clean = {}
+        for k in ("ttft_s", "tok_per_s"):
+            v = tgt.get(k)
+            if v is None:
+                continue
+            if float(v) <= 0:
+                raise ValueError(
+                    f"SLO {k} for class {cls.name.lower()} must be "
+                    f"positive (got {v})")
+            clean[k] = float(v)
+        if clean:
+            out[cls] = clean
+    return out
+
+
 def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
-                     deadline_s=None) -> np.ndarray:
+                     deadline_s=None, priority=None) -> np.ndarray:
     """Admission-time input validation; returns the prompt as int32.
 
     Garbage that used to flow straight into the embedding gather is
@@ -69,8 +160,11 @@ def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
       but a negative value is always a caller bug: it would flip the
       distribution toward the *least* likely tokens),
     * negative ``top_k`` (0 disables the filter; negative has no
-      meaning), and
-    * non-positive ``deadline_s`` (the request could never run).
+      meaning),
+    * non-positive ``deadline_s`` (the request could never run), and
+    * unknown ``priority`` classes (a typo'd class name or an
+      out-of-range value would silently schedule the request in a
+      class the caller never meant — see :func:`coerce_priority`).
 
     ``temperature``/``top_k``/``deadline_s`` accept the same
     scalar-or-``{slot: v}`` forms ``add_requests`` does; every value is
@@ -115,11 +209,13 @@ def validate_request(prompt, *, vocab: int, temperature=None, top_k=None,
     for name, x in each(deadline_s, "deadline_s"):
         if float(x) <= 0:
             raise ValueError(f"deadline_s must be positive (got {x})")
+    for name, x in each(priority, "priority"):
+        coerce_priority(x)          # unknown/out-of-range classes raise
     return p.astype(np.int32)
 
 
 def request_row(*, ttft_s: float, gen_tokens: int, decode_s: float,
-                status: RequestStatus) -> dict:
+                status: RequestStatus, priority=None) -> dict:
     """One ``Engine.request_log`` row for a retired request.
 
     ``tok_per_s`` is ``None`` — not ``0.0`` — when the decode interval
@@ -127,9 +223,14 @@ def request_row(*, ttft_s: float, gen_tokens: int, decode_s: float,
     that finished within the clock's resolution): a literal zero would
     read as a stalled request and drag throughput means toward zero, so
     aggregates must *skip* unmeasurable rows rather than average them.
+
+    ``priority`` lands as the class *name* (``"realtime"`` /
+    ``"standard"`` / ``"batch"``) so rows stay JSON-serializable like
+    ``status``; per-class percentile aggregation keys on it.
     """
     return {"ttft_s": float(ttft_s), "gen_tokens": int(gen_tokens),
             "decode_s": float(decode_s), "status": status.value,
+            "priority": coerce_priority(priority).name.lower(),
             "tok_per_s": (gen_tokens / decode_s) if decode_s > 0
             else None}
 

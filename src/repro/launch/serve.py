@@ -83,7 +83,9 @@ Usage (CPU-scale)::
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Dict, List, Optional
@@ -104,7 +106,8 @@ from ..models.api import (copy_pages_fn, get_family, init_paged_cache_fn,
 from ..nn.context import QuantContext
 from ..train.step import (build_decode_loop, build_prefill_step,
                           build_serve_step, build_spec_decode_loop)
-from .lifecycle import RequestStatus, request_row, validate_request
+from .lifecycle import (PriorityClass, RequestStatus, coerce_priority,
+                        normalize_slo_targets, request_row, validate_request)
 from .lifecycle import now as _now
 from .mesh import make_local_mesh
 from .paging import PageAllocator
@@ -177,8 +180,9 @@ class Engine:
                  spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
                  drafter_fn=None, preempt: bool = False,
                  preempt_after: int = 2, shed_threshold=None,
-                 fault_injector=None, recover=None, max_replays: int = 8,
-                 straggler=None, clock=None):
+                 slo_targets=None, fault_injector=None, recover=None,
+                 max_replays: int = 8, straggler=None, clock=None,
+                 durable_dir=None, snapshot_every: int = 8):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
         self.prefill_chunk = max(1, prefill_chunk)
@@ -444,6 +448,16 @@ class Engine:
         self.preempt_after = max(1, int(preempt_after))
         self.shed_threshold = (None if shed_threshold is None
                                else float(shed_threshold))
+        # -- SLO priority classes ---------------------------------------
+        #: per-class targets driving the shed knobs; when set, pressure
+        #: is defined by SLO risk (a class behind its TTFT / tok-per-s
+        #: target) instead of the fixed pool-occupancy constant
+        self.slo_targets = normalize_slo_targets(slo_targets)
+        #: per-class lifecycle counters (admissions, terminal exits,
+        #: preemptions, shed rounds, straggler attribution) — the
+        #: aggregate ``counters`` keep their engine-wide totals
+        self.class_counters = {c: self._fresh_class_row()
+                               for c in PriorityClass}
         self.fault_injector = fault_injector
         #: restore-and-replay on block faults; defaults on whenever a
         #: fault injector is attached (chaos runs want recovery)
@@ -459,7 +473,75 @@ class Engine:
         self._round = 0             # decode-block counter (chaos schedule)
         self._injected_slow = False
         self._slow_penalty = 1.0    # synthetic straggler seconds (CI)
-        self._head_blocked = (None, 0)  # (req id, blocked admission sweeps)
+        #: per-class (req id, blocked admission sweeps): each class's
+        #: blocked head escalates independently — a REALTIME head's
+        #: count must not reset because a BATCH record got admitted
+        self._head_blocked: Dict[PriorityClass, tuple] = {}
+        # -- durable serving state (crash-safe warm restart) ------------
+        # With ``durable_dir`` every externally-driven state transition
+        # (submit / direct add / explicit admit / decode block / cancel
+        # / finish / retire) is journaled write-ahead through a fsync'd
+        # BlobLog, and a full snapshot (cache pages, allocator order,
+        # prefix index, queue, journal cursor) lands every
+        # ``snapshot_every`` blocks.  ``Engine.recover(directory)``
+        # rebuilds a killed engine: restore the newest snapshot, then
+        # re-execute the journal tail — deterministic replay, so
+        # recovered greedy streams are byte-identical to uninterrupted
+        # ones.  Constructing WITH durable_dir starts a NEW run
+        # (truncates any previous journal); recovering an old run goes
+        # through ``recover`` on an engine built without it.
+        self._journal = None
+        self._jmute = 0             # >0: nested/replayed calls don't log
+        self._durable_dir = None
+        self.snapshot_every = max(0, int(snapshot_every))
+        self._durable_step = 0
+        self._blocks_since_snap = 0
+        if durable_dir is not None:
+            from ..checkpoint.store import BlobLog
+            os.makedirs(durable_dir, exist_ok=True)
+            self._durable_dir = str(durable_dir)
+            self._journal = BlobLog(os.path.join(durable_dir,
+                                                 "journal.log"), fresh=True)
+
+    # -- priority / journal plumbing ----------------------------------------
+    @staticmethod
+    def _fresh_class_row() -> dict:
+        return {"admitted": 0, "completed": 0, "preemptions": 0,
+                "cancellations": 0, "timeouts": 0, "failures": 0,
+                "shed_rounds": 0, "straggler_blocks": 0}
+
+    def _class_count(self, cls, key: str, n: int = 1) -> None:
+        self.class_counters[coerce_priority(cls)][key] += n
+
+    @contextlib.contextmanager
+    def _journal_scope(self, *record, ahead: bool = False):
+        """Journal one externally-driven transition.
+
+        Appends ``record`` only at the OUTERMOST call — transitions a
+        journaled call makes internally (step_many's admission sweep,
+        retire's finishes, a replayed event) are consequences of the
+        recorded one and re-derive deterministically on replay, so
+        logging them too would double-apply.
+
+        ``ahead=True`` (decode blocks) appends write-ahead — the block
+        mutates donated device state, so a crash mid-block must find
+        the commitment already durable and re-execute it.  The default
+        appends on *success*: a call that raised at the validation
+        boundary never happened, and replaying it would just re-raise
+        into :meth:`recover`."""
+        log = self._journal is not None and self._jmute == 0
+        if log and ahead:
+            self._journal.append(record)
+        self._jmute += 1
+        try:
+            yield
+        except BaseException:
+            log = False
+            raise
+        finally:
+            self._jmute -= 1
+            if log and not ahead:
+                self._journal.append(record)
 
     # -- request admission --------------------------------------------------
     def add_request(self, slot: int, prompt: np.ndarray, **kw):
@@ -469,8 +551,8 @@ class Engine:
     def add_requests(self, requests: Dict[int, np.ndarray], *,
                      gen_len: Optional[int] = None,
                      temperature=None, top_k=None, deadline_s=None,
-                     _t_submit=None, _ids=None, _deadlines=None,
-                     _prefix=None):
+                     priority=None, _t_submit=None, _ids=None,
+                     _deadlines=None, _prefix=None):
         """Prefill several fresh slots together (batched chunked prefill).
 
         Prompts are ingested in full-batch chunks of ``prefill_chunk``
@@ -500,11 +582,32 @@ class Engine:
         ``deadline_s`` (scalar or ``{slot: v}``) sets a TTL from now;
         the request times out at the first block boundary past it,
         returning its partial output with status TIMED_OUT.
+
+        ``priority`` (scalar or ``{slot: v}``; class enum, name or int
+        value — see :class:`~.lifecycle.PriorityClass`) tags each
+        admitted request's SLO class for victim selection, per-class
+        telemetry and SLO-driven shedding; default STANDARD.
         """
+        with self._journal_scope(
+                "add", {"requests": {int(s): np.asarray(p)
+                                     for s, p in requests.items()},
+                        "gen_len": gen_len, "temperature": temperature,
+                        "top_k": top_k, "deadline_s": deadline_s,
+                        "priority": priority}):
+            return self._add_requests(
+                requests, gen_len=gen_len, temperature=temperature,
+                top_k=top_k, deadline_s=deadline_s, priority=priority,
+                _t_submit=_t_submit, _ids=_ids, _deadlines=_deadlines,
+                _prefix=_prefix)
+
+    def _add_requests(self, requests: Dict[int, np.ndarray], *,
+                      gen_len=None, temperature=None, top_k=None,
+                      deadline_s=None, priority=None, _t_submit=None,
+                      _ids=None, _deadlines=None, _prefix=None):
         t_call = self.clock()
         reqs = {int(s): validate_request(p, vocab=self.cfg.vocab,
                                          temperature=temperature,
-                                         top_k=top_k)
+                                         top_k=top_k, priority=priority)
                 for s, p in requests.items()}
         if deadline_s is not None:
             # validated as the dict-or-scalar it is: every entry checked
@@ -579,9 +682,13 @@ class Engine:
                 self.prefix_index.evict(self.allocator, short())
             if short() > 0 and self.preempt:
                 # graceful degradation instead of MemoryError: spill
-                # running victims until the admission fits
+                # running victims until the admission fits — but only
+                # victims at or below the most important class being
+                # admitted (a BATCH add must never spill REALTIME work)
+                floor = min(coerce_priority(per_slot(priority, s, None))
+                            for s in reqs)
                 self._preempt_until(sum(needs.values()) - recyclable,
-                                    exclude=set(reqs))
+                                    exclude=set(reqs), floor=floor)
             if short() > 0:
                 for h in held.values():
                     if h:
@@ -679,8 +786,11 @@ class Engine:
             else:
                 d = per_slot(deadline_s, s, None)
                 dl = None if d is None else t_call + float(d)
+            cls = coerce_priority(per_slot(priority, s, None))
             self._req_meta[s] = {"id": rid, "ttft_s": t_first - t_sub,
-                                 "t_admit": t_first, "deadline": dl}
+                                 "t_admit": t_first, "deadline": dl,
+                                 "priority": cls}
+            self._class_count(cls, "admitted")
         self.counters["admitted"] += len(reqs)
         self.counters["peak_live"] = max(self.counters["peak_live"],
                                          int(self.live.sum()))
@@ -813,7 +923,7 @@ class Engine:
 
     def submit(self, prompt: np.ndarray, *, gen_len: Optional[int] = None,
                temperature: float = 0.0, top_k: int = 0,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None, priority=None) -> int:
         """Queue a request; returns its request id.
 
         The id keys every later lifecycle interaction —
@@ -829,10 +939,18 @@ class Engine:
         ``deadline_s`` is a TTL from submission: past it, the request
         is timed out at the next block boundary (queued or running)
         and its partial output lands in ``results`` — no exception.
+
+        ``priority`` (class enum / name / int value, default STANDARD)
+        sets the request's SLO class: the queue serves the most
+        important non-empty class first (FIFO within a class, no
+        skipping past a page-blocked higher-class head), victims spill
+        in BATCH→STANDARD→REALTIME order, and per-class SLO targets
+        (``slo_targets``) drive graceful degradation.  The class never
+        changes *what* a request generates — only when.
         """
         prompt = validate_request(prompt, vocab=self.cfg.vocab,
                                   temperature=temperature, top_k=top_k,
-                                  deadline_s=deadline_s)
+                                  deadline_s=deadline_s, priority=priority)
         if prompt.shape[0] > self.max_len:
             raise ValueError(
                 f"prompt of {prompt.shape[0]} tokens does not fit the "
@@ -840,7 +958,7 @@ class Engine:
         t = self.clock()
         req = {"id": self._mint_id(), "prompt": prompt, "gen_len": gen_len,
                "temperature": temperature, "top_k": top_k,
-               "t_submit": t,
+               "t_submit": t, "priority": coerce_priority(priority),
                "deadline": None if deadline_s is None
                else t + float(deadline_s)}
         if self.paged:
@@ -852,6 +970,17 @@ class Engine:
                     f"{self.allocator.num_pages}; raise num_pages or "
                     f"lower gen_len")
         self.waiting.append(req)
+        if self._journal is not None and self._jmute == 0:
+            # journaled with the minted id so replay can assert the
+            # deterministic re-mint matches; deadline_s rides RELATIVE —
+            # perf_counter values don't survive a process, so a
+            # recovered request's TTL restarts at recovery (the
+            # conservative reading of "its clock died with the process")
+            self._journal.append(("submit", {
+                "id": req["id"], "prompt": prompt, "gen_len": gen_len,
+                "temperature": temperature, "top_k": top_k,
+                "deadline_s": deadline_s,
+                "priority": req["priority"].name.lower()}))
         return req["id"]
 
     def status(self, req_id: int):
@@ -876,17 +1005,18 @@ class Engine:
         finishes NOW with the partial output — pages freed, the lane
         admits the next request at the coming block boundary.  Unknown
         or already-terminal ids return False."""
-        for i, r in enumerate(self.waiting):
-            if r["id"] == req_id:
-                del self.waiting[i]
-                self._finalize_queued(r, RequestStatus.CANCELLED)
-                return True
-        for s, m in list(self._req_meta.items()):
-            if m["id"] == req_id:
-                self.live[s] = False
-                self.finish(s, status=RequestStatus.CANCELLED)
-                return True
-        return False
+        with self._journal_scope("cancel", int(req_id)):
+            for i, r in enumerate(self.waiting):
+                if r["id"] == req_id:
+                    del self.waiting[i]
+                    self._finalize_queued(r, RequestStatus.CANCELLED)
+                    return True
+            for s, m in list(self._req_meta.items()):
+                if m["id"] == req_id:
+                    self.live[s] = False
+                    self.finish(s, status=RequestStatus.CANCELLED)
+                    return True
+            return False
 
     def _finalize_queued(self, rec: dict, status: RequestStatus) -> None:
         """Terminal outcome for a request that never (re)occupied a
@@ -895,8 +1025,10 @@ class Engine:
                                    "tokens": list(rec.get("outputs") or [])}
         if status is RequestStatus.TIMED_OUT:
             self.counters["timeouts"] += 1
+            self._class_count(self._rec_priority(rec), "timeouts")
         elif status is RequestStatus.CANCELLED:
             self.counters["cancellations"] += 1
+            self._class_count(self._rec_priority(rec), "cancellations")
 
     def _sweep_deadlines(self) -> None:
         """TTL check at the block boundary — the engine's only safe
@@ -938,38 +1070,71 @@ class Engine:
     def retire_finished(self) -> int:
         """finish() every slot whose generation ended (frees its lane —
         and, paged, its pages) so try_admit can reuse both."""
-        n = 0
-        for s in range(self.batch):
-            if self.outputs[s] is not None and not self.live[s]:
-                self.finish(s)
-                n += 1
-        return n
+        with self._journal_scope("retire"):
+            n = 0
+            for s in range(self.batch):
+                if self.outputs[s] is not None and not self.live[s]:
+                    self.finish(s)
+                    n += 1
+            return n
+
+    def _rec_priority(self, rec: dict) -> PriorityClass:
+        """SLO class of a queue record (fresh or preempted resume)."""
+        if rec.get("resume"):
+            return coerce_priority(rec["meta"].get("priority"))
+        return coerce_priority(rec.get("priority"))
+
+    def _queue_head(self) -> int:
+        """Index of the next admission candidate: the FRONT of the most
+        important non-empty class.  Within a class the queue stays
+        FIFO; across classes a more important arrival overtakes
+        everything below it — but a page-blocked head still blocks all
+        lower classes (no skipping downward), so admission order stays
+        deterministic and a big REALTIME request cannot be starved by
+        a stream of small BATCH ones slipping past it."""
+        best, best_i = None, 0
+        for i, r in enumerate(self.waiting):
+            p = self._rec_priority(r)
+            if best is None or p < best:
+                best, best_i = p, i
+                if p == PriorityClass.REALTIME:
+                    break
+        return best_i
 
     def try_admit(self) -> int:
-        """Admit queued requests into free lanes, FIFO, while pages last.
-
-        Strict FIFO (no head-of-line skipping): a big request at the
-        head waits for pages rather than being starved by smaller ones
-        behind it — admission order is therefore deterministic, which
-        the cross-backend conformance suite relies on.  All fresh
+        """Admit queued requests into free lanes while pages last:
+        class-ordered (REALTIME > STANDARD > BATCH), FIFO within a
+        class, no head-of-line skipping — a page-blocked head waits
+        for pages rather than being starved by smaller requests behind
+        it, so admission order is deterministic, which the
+        cross-backend conformance suite relies on.  All fresh
         admissions of one call share a single batched prefill;
         preempted records resume individually (page payload + lane
         restore, no prefill at all).
 
         With ``preempt=True``, a head that stays page-blocked for
-        ``preempt_after`` consecutive admission sweeps escalates:
-        running victims (see :meth:`_victim_order`) are spilled until
-        the head fits — head-of-line blocking becomes time slicing."""
+        ``preempt_after`` consecutive admission sweeps escalates
+        (tracked per class — see ``_head_blocked``): running victims
+        (see :meth:`_victim_order`) at or below the head's class are
+        spilled until the head fits — head-of-line blocking becomes
+        time slicing.  A head whose class has a TTFT SLO target and is
+        already past it escalates immediately."""
+        with self._journal_scope("admit"):
+            return self._try_admit()
+
+    def _try_admit(self) -> int:
         free = [s for s in range(self.batch)
                 if self.outputs[s] is None and not self.live[s]]
         admit, kw = {}, {"gen_len": {}, "temperature": {}, "top_k": {},
-                         "_t_submit": {}, "_ids": {}, "_deadlines": {},
-                         "_prefix": {}}
+                         "priority": {}, "_t_submit": {}, "_ids": {},
+                         "_deadlines": {}, "_prefix": {}}
         planned = 0
         resumed = 0
         placed: set = set()
         while self.waiting and free:
-            req = self.waiting[0]
+            i = self._queue_head()
+            req = self.waiting[i]
+            cls = self._rec_priority(req)
             pre = None
             if self.paged:
                 if req.get("resume"):
@@ -997,18 +1162,19 @@ class Engine:
                                 planned + need - self.allocator.free_pages,
                                 protect=mine):
                             continue    # freed pages; recheck the head
-                    if self._maybe_preempt(req, planned + need, free,
+                    if self._maybe_preempt(req, cls, planned + need, free,
                                            exclude=placed):
                         continue        # victims spilled; recheck head
                     break
-            self.waiting.popleft()
-            if self._head_blocked[0] == req["id"]:
+            del self.waiting[i]
+            hb = self._head_blocked.get(cls)
+            if hb is not None and hb[0] == req["id"]:
                 # reset the escalation counter only when the tracked
                 # blocked head itself got through — popping any OTHER
                 # record (a resume, a small admission) must not clobber
                 # a still-blocked head's count, or interleaved progress
                 # would keep it one sweep short of preempting forever
-                self._head_blocked = (None, 0)
+                del self._head_blocked[cls]
             s = free.pop(0)
             placed.add(s)
             if req.get("resume"):
@@ -1031,6 +1197,7 @@ class Engine:
             kw["gen_len"][s] = req["gen_len"]
             kw["temperature"][s] = req["temperature"]
             kw["top_k"][s] = req["top_k"]
+            kw["priority"][s] = cls
             kw["_t_submit"][s] = req["t_submit"]
             kw["_ids"][s] = req["id"]
             kw["_deadlines"][s] = req["deadline"]
@@ -1039,51 +1206,74 @@ class Engine:
         return len(admit) + resumed
 
     # -- preempt-and-spill ---------------------------------------------------
-    def _victim_order(self, exclude=()) -> List[int]:
-        """Spill order under pressure: requests WITHOUT deadlines yield
+    def _victim_order(self, exclude=(), floor=None) -> List[int]:
+        """Spill order under pressure: class before slack — every BATCH
+        request yields before any STANDARD one, and REALTIME yields
+        last of all.  Within a class, requests WITHOUT deadlines yield
         first (nobody's SLO pays for the spill), then most-slack
         deadlines; ties break latest-admitted first — LIFO time
-        slicing, the oldest work keeps its pages."""
+        slicing, the oldest work keeps its pages.
+
+        ``floor`` (the preempting head's class) drops victims MORE
+        important than the head entirely: a BATCH admission may spill
+        other BATCH work, never a REALTIME stream."""
         cands = [s for s in range(self.batch)
                  if self.live[s] and s in self._req_meta
                  and s not in exclude]
+        if floor is not None:
+            cands = [s for s in cands
+                     if coerce_priority(self._req_meta[s].get("priority"))
+                     >= floor]
 
         def rank(s):
             m = self._req_meta[s]
             dl = m.get("deadline")
-            return (dl is not None, -(dl or 0.0), -m["t_admit"], -s)
+            return (-int(coerce_priority(m.get("priority"))),
+                    dl is not None, -(dl or 0.0), -m["t_admit"], -s)
 
         return sorted(cands, key=rank)
 
-    def _preempt_until(self, target_free: int, exclude=()) -> None:
+    def _preempt_until(self, target_free: int, exclude=(),
+                       floor=None) -> None:
         """Spill victims until ``free_pages`` covers ``target_free``
         (or no victims remain — the caller re-checks and degrades)."""
-        for v in self._victim_order(exclude):
+        for v in self._victim_order(exclude, floor=floor):
             if self.allocator.free_pages >= target_free:
                 break
             self._preempt(v)
 
-    def _maybe_preempt(self, req, need: int, free: List[int],
-                       exclude=()) -> bool:
+    def _maybe_preempt(self, req, cls: PriorityClass, need: int,
+                       free: List[int], exclude=()) -> bool:
         """Escalating head-of-line response inside try_admit: only
         after the SAME head has been page-blocked ``preempt_after``
-        consecutive sweeps do victims spill (a transient shortfall one
-        retire sweep would fix must not thrash the pool)."""
+        consecutive sweeps (counted per class) do victims spill (a
+        transient shortfall one retire sweep would fix must not thrash
+        the pool).  Exception: a head whose class carries a TTFT SLO
+        target it has already missed escalates NOW — patience is
+        exactly the budget the SLO says it doesn't have."""
         if not self.preempt:
             return False
-        head_id, rounds = self._head_blocked
-        rounds = rounds + 1 if head_id == req["id"] else 1
-        self._head_blocked = (req["id"], rounds)
-        if rounds < self.preempt_after:
+        hb = self._head_blocked.get(cls)
+        rounds = hb[1] + 1 if hb is not None and hb[0] == req["id"] else 1
+        self._head_blocked[cls] = (req["id"], rounds)
+        if rounds < self.preempt_after and not self._past_ttft_slo(req, cls):
             return False
         progressed = False
-        for v in self._victim_order(exclude):
+        for v in self._victim_order(exclude, floor=cls):
             if self.allocator.can_alloc(need):
                 break
             self._preempt(v)
             free.append(v)          # the victim's lane is admittable now
             progressed = True
         return progressed and self.allocator.can_alloc(need)
+
+    def _past_ttft_slo(self, req: dict, cls: PriorityClass) -> bool:
+        """Has this queued record already blown its class TTFT target?
+        (Resume records don't re-count — their first token shipped.)"""
+        tgt = self.slo_targets.get(cls, {}).get("ttft_s")
+        if tgt is None or req.get("resume"):
+            return False
+        return self.clock() - req["t_submit"] >= tgt
 
     def _page_payload(self, pages: List[int]) -> Dict[str, np.ndarray]:
         """Host copy of the pool pages' payload, keyed by cache path.
@@ -1187,6 +1377,7 @@ class Engine:
         self._clean[slot] = True
         self.waiting.append(rec)
         self.counters["preemptions"] += 1
+        self._class_count(meta.get("priority"), "preemptions")
         self.counters["spilled_pages"] += len(mapped)
 
     def _resume(self, slot: int, rec: dict) -> None:
@@ -1373,7 +1564,26 @@ class Engine:
         replay runs clean and commits the exact tokens the fault-free
         run would.  Without recovery, device-flagged slots finish
         FAILED with their valid prefix; host-side faults propagate.
+
+        Durable mode (``durable_dir``): the block commitment is
+        journaled WRITE-AHEAD — fsync'd before any device work — so a
+        crash anywhere inside the block re-executes it on recovery;
+        every ``snapshot_every`` blocks a full snapshot (with the
+        journal cursor) bounds the replay tail.
         """
+        if self._journal is not None and self._jmute == 0:
+            self._blocks_since_snap += 1
+            if (self.snapshot_every
+                    and self._blocks_since_snap > self.snapshot_every):
+                # snapshot BEFORE this block's journal record: the
+                # cursor must not cover a block the snapshot state
+                # hasn't executed, or recovery would skip it
+                self._save_durable()
+                self._blocks_since_snap = 1
+        with self._journal_scope("block", int(n), ahead=True):
+            return self._step_many(n)
+
+    def _step_many(self, n: int):
         self._round += 1
         self._sweep_deadlines()
         n_eff, spec_now = self._shed_policy(n)
@@ -1441,6 +1651,13 @@ class Engine:
         if (self.straggler is not None
                 and self.straggler.record(self._round, dur)):
             self.counters["straggler_blocks"] += 1
+            # attribute the straggler block to every class that had a
+            # request in it — the classes whose latency actually paid
+            # for the slow step (meta spans slots that finished
+            # mid-block too: they waited on the same sync)
+            for cls in {coerce_priority(m.get("priority"))
+                        for m in self._req_meta.values()}:
+                self._class_count(cls, "straggler_blocks")
         # stamp generation end the moment a slot's live drops: finish()
         # may run much later (deferred retirement), and the idle gap
         # must not count against the request's decode throughput
@@ -1488,12 +1705,33 @@ class Engine:
         return block, block_live
 
     def _shed_policy(self, n: int):
-        """Pressure shedding: past ``shed_threshold`` pool occupancy,
-        halve the fused block (admission/retire checks come twice as
-        often) and drop speculation for the block (verify waste stops
-        competing with admissions).  Both knobs are block-shape
+        """Pressure shedding.  Returns (block size, run speculative?).
+
+        With per-class ``slo_targets`` set, pressure is defined by SLO
+        *risk* instead of the fixed pool-occupancy constant: a class is
+        at risk when its oldest queued request has waited past the
+        class TTFT target, or its recent completions ran below the
+        class tok-per-s target.  Degradation is ordered by class —
+        BATCH's budget goes first (risk anywhere sheds speculation,
+        whose verify waste mostly buys batch throughput), the fused
+        block is halved only when REALTIME itself is at risk (admission
+        and retire checks must come sooner than anything else).
+
+        Without targets, the legacy knob applies: past
+        ``shed_threshold`` pool occupancy, halve the fused block and
+        drop speculation for the block.  Both knobs are block-shape
         changes, not sampling changes — greedy streams are unaffected
-        by construction.  Returns (block size, run speculative?)."""
+        by construction."""
+        if self.slo_targets:
+            cls = self._slo_pressure()
+            if cls is None:
+                return n, self.spec
+            if self.spec:
+                self.counters["shed_spec_rounds"] += 1
+            self._class_count(cls, "shed_rounds")
+            if cls == PriorityClass.REALTIME:
+                return max(1, n // 2), False
+            return n, False
         if (self.shed_threshold is None or not self.paged
                 or self.allocator.num_pages == 0):
             return n, self.spec
@@ -1503,6 +1741,32 @@ class Engine:
         if self.spec:
             self.counters["shed_spec_rounds"] += 1
         return max(1, n // 2), False
+
+    def _slo_pressure(self) -> Optional[PriorityClass]:
+        """Most important class currently behind its SLO target (None =
+        every class inside budget).  Queued-wait risk reads the oldest
+        FRESH queued request per class (resumes already shipped their
+        first token); throughput risk reads the last few measurable
+        completions of the class."""
+        t = self.clock()
+        worst = None
+        for cls, tgt in self.slo_targets.items():
+            at_risk = False
+            ttft = tgt.get("ttft_s")
+            if ttft is not None:
+                at_risk = any(
+                    not r.get("resume") and t - r["t_submit"] >= ttft
+                    for r in self.waiting
+                    if self._rec_priority(r) == cls)
+            rate = tgt.get("tok_per_s")
+            if rate is not None and not at_risk:
+                recent = [r["tok_per_s"] for r in self.request_log[-8:]
+                          if r.get("priority") == cls.name.lower()
+                          and r["tok_per_s"] is not None]
+                at_risk = bool(recent) and float(np.mean(recent)) < rate
+            if at_risk and (worst is None or cls < worst):
+                worst = cls
+        return worst
 
     def _block_decode(self, n: int):
         """One fused plain-decode block (n single-token steps)."""
@@ -1610,21 +1874,32 @@ class Engine:
         cancelled/timed-out/failed request returns its partial output
         with the status, never an exception (exceptions are for caller
         bugs and unrecoverable engine faults)."""
+        with self._journal_scope("finish", int(slot), status.value):
+            self._finish(slot, status)
+
+    def _finish(self, slot: int, status: RequestStatus):
         meta = self._req_meta.pop(slot, None)
         if meta is not None:
+            cls = coerce_priority(meta.get("priority"))
             done = meta.get("t_done", self.clock())
             self.request_log.append(request_row(
                 ttft_s=meta["ttft_s"],
                 gen_tokens=len(self.outputs[slot] or []),
-                decode_s=done - meta["t_admit"], status=status))
+                decode_s=done - meta["t_admit"], status=status,
+                priority=cls))
             self.results[meta["id"]] = {
                 "status": status, "tokens": list(self.outputs[slot] or [])}
             if status is RequestStatus.CANCELLED:
                 self.counters["cancellations"] += 1
+                self._class_count(cls, "cancellations")
             elif status is RequestStatus.TIMED_OUT:
                 self.counters["timeouts"] += 1
+                self._class_count(cls, "timeouts")
             elif status is RequestStatus.FAILED:
                 self.counters["failures"] += 1
+                self._class_count(cls, "failures")
+            elif status is RequestStatus.COMPLETED:
+                self._class_count(cls, "completed")
         self.done.append(self.outputs[slot])
         self.outputs[slot] = None
         self.live[slot] = False
@@ -1677,7 +1952,9 @@ class Engine:
             "stop_pos": self.stop_pos.copy(), "hist": self.hist.copy(),
             "gen_step": self._gen_step, "round": self._round,
             "next_id": self._next_id,
-            "head_blocked": self._head_blocked,
+            "head_blocked": dict(self._head_blocked),
+            "class_counters": {c: dict(row) for c, row
+                               in self.class_counters.items()},
             "outputs": [None if o is None else list(o)
                         for o in self.outputs],
             "done": list(self.done),
@@ -1707,7 +1984,14 @@ class Engine:
     def restore(self, snap: dict) -> None:
         """Rewind the engine to :meth:`snapshot` state; the snapshot
         stays pristine (everything mutable is re-copied), so one
-        snapshot survives any number of replays."""
+        snapshot survives any number of replays.
+
+        Forward-compat: snapshots written before the priority /
+        warm-restart layer (PR 6-era dicts) miss the new fields —
+        per-class head tracking (then a single tuple), class counters,
+        prefix-index state, journal cursor.  Each defaults cleanly
+        instead of KeyError'ing: old snapshots stay restorable, their
+        requests simply land in STANDARD."""
         self.cache = jax.device_put(snap["cache"], self._cache_sh)
         self.pos = snap["pos"].copy()
         self.tokens = snap["tokens"].copy()
@@ -1720,7 +2004,18 @@ class Engine:
         self._gen_step = snap["gen_step"]
         self._round = snap["round"]
         self._next_id = snap["next_id"]
-        self._head_blocked = snap["head_blocked"]
+        hb = snap.get("head_blocked")
+        if isinstance(hb, tuple):
+            # legacy single-head tuple: a tracked head predating the
+            # class split was necessarily scheduled as STANDARD-like
+            # FIFO — park its count there, drop the no-head sentinel
+            hb = ({PriorityClass.STANDARD: hb} if hb[0] is not None
+                  else {})
+        self._head_blocked = dict(hb or {})
+        self.class_counters = {c: self._fresh_class_row()
+                               for c in PriorityClass}
+        for c, row in (snap.get("class_counters") or {}).items():
+            self.class_counters[coerce_priority(c)].update(row)
         self.outputs = [None if o is None else list(o)
                         for o in snap["outputs"]]
         self.done = list(snap["done"])
@@ -1729,7 +2024,7 @@ class Engine:
         self.results = {k: {"status": v["status"],
                             "tokens": list(v["tokens"])}
                         for k, v in snap["results"].items()}
-        self.counters = dict(snap["counters"])
+        self.counters = dict(self.counters, **snap["counters"])
         self.request_log = [dict(r) for r in snap["request_log"]]
         if self.paged:
             self.allocator.load_state(snap["allocator"])
@@ -1738,10 +2033,18 @@ class Engine:
             self._slot_pages = {s: list(p)
                                 for s, p in snap["slot_pages"].items()}
         if self.prefix_cache:
-            self.prefix_index.load_state(snap["prefix_index"])
-            self._slot_shared = {s: list(p)
-                                 for s, p in snap["slot_shared"].items()}
-            self._pub = dict(snap["pub"])
+            idx = snap.get("prefix_index")
+            if idx is not None:
+                self.prefix_index.load_state(idx)
+                self._slot_shared = {s: list(p) for s, p
+                                     in snap["slot_shared"].items()}
+                self._pub = dict(snap["pub"])
+            else:
+                # snapshot predates the prefix layer: start the index
+                # cold — correctness never depended on it being warm
+                self.prefix_index = PrefixIndex(self.allocator.page_size)
+                self._slot_shared = {s: [] for s in self._slot_pages}
+                self._pub = {s: (0, ROOT) for s in self._slot_pages}
         if self.draft is not None and "draft_cache" in snap:
             self.draft_cache = jax.device_put(snap["draft_cache"])
 
@@ -1762,6 +2065,97 @@ class Engine:
                 raise FileNotFoundError(f"no engine snapshot under "
                                         f"{directory}")
         self.restore(load_blob(directory, step))
+
+    # -- crash-safe warm restart ---------------------------------------------
+    def _save_durable(self) -> str:
+        """One durable snapshot: :meth:`snapshot` plus the journal
+        cursor (records already REFLECTED in the state — recovery
+        replays only the tail past it), through save_blob's tmp +
+        os.replace atomics, so a crash mid-save leaves the previous
+        snapshot authoritative."""
+        from ..checkpoint.store import save_blob
+        snap = self.snapshot()
+        snap["journal_cursor"] = self._journal.count
+        path = save_blob(snap, self._durable_dir, self._durable_step)
+        self._durable_step += 1
+        return path
+
+    def recover(self, directory: str) -> dict:
+        """Rebuild this (freshly constructed) engine from a killed
+        run's durable directory and resume journaling into it.
+
+        Construct the engine with the SAME arguments as the dead one
+        but WITHOUT ``durable_dir`` (that would truncate the evidence),
+        then call ``recover``: the newest durable snapshot restores
+        (if one landed), the journal tail past its cursor re-executes
+        — deterministic replay of the exact submit / admit / block /
+        cancel / finish / retire sequence, muted so it is not
+        re-journaled — and the journal reopens for append, torn tail
+        truncated.  Every in-flight stream resumes byte-identically:
+        greedy decode is deterministic and sampled decode replays the
+        same PRNG round (``gen_step`` rides the snapshot).
+
+        Returns ``{"snapshot_step", "replayed"}`` telemetry.
+        """
+        from ..checkpoint.store import BlobLog, latest_step, load_blob
+        if self._journal is not None:
+            raise RuntimeError(
+                "recover() on an engine constructed with durable_dir: "
+                "construction already truncated the journal — build "
+                "the engine without durable_dir and recover into it")
+        log = BlobLog(os.path.join(directory, "journal.log"))
+        step = latest_step(directory)
+        cursor = 0
+        if step is not None:
+            snap = load_blob(directory, step)
+            cursor = int(snap.get("journal_cursor", 0))
+            self.restore(snap)
+            self._durable_step = step + 1
+        records = log.read(cursor)
+        self._jmute += 1
+        try:
+            for rec in records:
+                self._replay_event(rec)
+        finally:
+            self._jmute -= 1
+        self._durable_dir = str(directory)
+        self._journal = log
+        self._blocks_since_snap = 0
+        return {"snapshot_step": step, "replayed": len(records)}
+
+    def _replay_event(self, rec: tuple) -> None:
+        """Re-execute one journaled transition (muted by recover)."""
+        kind = rec[0]
+        if kind == "submit":
+            p = rec[1]
+            rid = self.submit(p["prompt"], gen_len=p["gen_len"],
+                              temperature=p["temperature"],
+                              top_k=p["top_k"], deadline_s=p["deadline_s"],
+                              priority=p["priority"])
+            if rid != p["id"]:
+                raise RuntimeError(
+                    f"journal replay diverged: submit re-minted id "
+                    f"{rid}, journal says {p['id']} (snapshot and "
+                    f"journal are from different runs?)")
+        elif kind == "add":
+            p = rec[1]
+            self.add_requests(p["requests"], gen_len=p["gen_len"],
+                              temperature=p["temperature"],
+                              top_k=p["top_k"],
+                              deadline_s=p["deadline_s"],
+                              priority=p["priority"])
+        elif kind == "admit":
+            self.try_admit()
+        elif kind == "block":
+            self.step_many(rec[1])
+        elif kind == "retire":
+            self.retire_finished()
+        elif kind == "cancel":
+            self.cancel(rec[1])
+        elif kind == "finish":
+            self.finish(rec[1], status=RequestStatus(rec[2]))
+        else:
+            raise RuntimeError(f"unknown journal record kind {kind!r}")
 
     def _poison_cache(self, value: float) -> None:
         """Chaos hook: overwrite every float leaf of the serving cache.
@@ -1846,6 +2240,33 @@ class Engine:
             out[k] = c[k]
         out["straggler_events"] = (len(self.straggler.events)
                                    if self.straggler is not None else 0)
+        # per-class SLO telemetry: lifecycle counters plus latency
+        # percentiles over the class's retired rows — only classes
+        # with any activity appear, so single-class runs stay tidy
+        classes = {}
+        for cls in PriorityClass:
+            row = dict(self.class_counters[cls])
+            rows = [r for r in self.request_log
+                    if r.get("priority", "standard") == cls.name.lower()]
+            row["requests"] = len(rows)
+            row["queued"] = sum(1 for r in self.waiting
+                                if self._rec_priority(r) == cls)
+            if rows:
+                tt = [r["ttft_s"] for r in rows]
+                row["ttft_p50_s"] = float(np.percentile(tt, 50))
+                row["ttft_p99_s"] = float(np.percentile(tt, 99))
+                rates = [r["tok_per_s"] for r in rows
+                         if r["tok_per_s"] is not None]
+                row["tok_per_s_mean"] = (float(np.mean(rates))
+                                         if rates else None)
+            if (row["requests"] or row["queued"]
+                    or any(row[k] for k in self._fresh_class_row())):
+                classes[cls.name.lower()] = row
+        if classes:
+            out["classes"] = classes
+        if self.slo_targets:
+            out["slo_targets"] = {c.name.lower(): dict(t)
+                                  for c, t in self.slo_targets.items()}
         return out
 
 
@@ -1955,6 +2376,33 @@ def main(argv=None):
                     help="per-request TTL from submission; past it the "
                          "request times out at the next block boundary "
                          "and returns its partial output")
+    ap.add_argument("--priority-class", default="standard",
+                    choices=[c.name.lower() for c in PriorityClass],
+                    help="SLO class for the submitted requests: the "
+                         "queue serves realtime > standard > batch "
+                         "(FIFO within a class), victims spill batch "
+                         "first, and per-class SLO targets drive the "
+                         "shed knobs")
+    ap.add_argument("--slo-ttft-s", type=float, default=None,
+                    help="TTFT target (seconds) for the REALTIME "
+                         "class; a realtime request queued past it "
+                         "escalates preemption immediately and puts "
+                         "the engine in SLO-shed mode (drops spec, "
+                         "halves the block) until it is served")
+    ap.add_argument("--slo-tok-per-s", type=float, default=None,
+                    help="decode-throughput target (tok/s) for the "
+                         "REALTIME class, driving the same shed knobs")
+    ap.add_argument("--durable-dir", default=None,
+                    help="crash-safe warm restart: journal every "
+                         "request/block event (fsync'd write-ahead "
+                         "log) and snapshot the engine every "
+                         "--snapshot-every blocks under this "
+                         "directory; rebuild a killed engine with "
+                         "Engine.recover(dir)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="blocks between durable snapshots "
+                         "(--durable-dir mode); smaller = shorter "
+                         "replay tail, more snapshot IO")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -1999,7 +2447,14 @@ def main(argv=None):
                      spec=args.spec,
                      spec_k=args.spec_k, spec_draft=spec_draft,
                      spec_ngram=args.spec_ngram, preempt=args.preempt,
-                     shed_threshold=args.shed_threshold)
+                     shed_threshold=args.shed_threshold,
+                     slo_targets=(
+                         {"realtime": {"ttft_s": args.slo_ttft_s,
+                                       "tok_per_s": args.slo_tok_per_s}}
+                         if (args.slo_ttft_s is not None
+                             or args.slo_tok_per_s is not None) else None),
+                     durable_dir=args.durable_dir,
+                     snapshot_every=args.snapshot_every)
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
@@ -2016,7 +2471,8 @@ def main(argv=None):
         for p in prompts:
             eng.submit(p, gen_len=args.gen_len,
                        temperature=args.temperature, top_k=args.top_k,
-                       deadline_s=args.deadline_s)
+                       deadline_s=args.deadline_s,
+                       priority=args.priority_class)
         eng.try_admit()
         while eng.live.any() or eng.waiting:
             _, block_live = eng.step_many(block)
@@ -2083,6 +2539,18 @@ def print_stats_table(st: dict) -> None:
                        ("straggler_blocks", "straggler blocks")):
         if st.get(key):
             rows.append((label, f"{st[key]}"))
+    # per-class lines only when more than one class saw traffic (or an
+    # SLO target is set): single-class runs already read off the totals
+    classes = st.get("classes", {})
+    if len(classes) > 1 or "slo_targets" in st:
+        for name, c in classes.items():
+            p99 = c.get("ttft_p99_s")
+            rows.append((
+                f"class {name}",
+                f"{c['requests']} done, {c['queued']} queued, "
+                f"{c['preemptions']} preempted"
+                + (f", p99 TTFT {p99 * 1e3:.1f} ms"
+                   if p99 is not None else "")))
     width = max(len(k) for k, _ in rows)
     print("-- serving stats " + "-" * (width + 8))
     for k, v in rows:

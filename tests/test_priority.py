@@ -1,0 +1,387 @@
+"""SLO priority classes: a scheduling property, never a sampling one.
+
+The PR 9 tentpole pins four contracts:
+
+* **Coercion/validation** — unknown class names, out-of-range values
+  and malformed per-class SLO targets are rejected at the API boundary
+  (``submit``/``add_requests``/engine construction), PR 6 style.
+* **Admission order** — the queue serves REALTIME > STANDARD > BATCH,
+  FIFO within a class; a page-blocked head still blocks every lower
+  class (no skipping downward); with a single class the queue is
+  byte-for-byte the old FIFO.
+* **Victim order** — preempt-and-spill ranks victims by class before
+  deadline slack, and the preempting head's class is a floor: a BATCH
+  admission can never spill a REALTIME stream.
+* **Observability** — per-class counters and latency percentiles in
+  ``Engine.stats()``; straggler blocks attribute to the classes that
+  were actually decoding through them; SLO-risk shedding charges the
+  at-risk class.
+
+Everything here is scheduling-shape only: greedy token streams must be
+identical (as a multiset; completion ORDER legitimately changes) to an
+unprioritized engine's.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dist.constrain import use_mesh
+from repro.ft import ServingFaultInjector, StragglerMonitor
+from repro.launch.lifecycle import (PriorityClass, RequestStatus,
+                                    coerce_priority, normalize_slo_targets)
+
+from test_paged_serving import _prompts, _setup
+from test_serving_lifecycle import FakeClock, _drain, _engine
+
+RT, STD, BATCH = (PriorityClass.REALTIME, PriorityClass.STANDARD,
+                  PriorityClass.BATCH)
+
+
+# ===========================================================================
+class TestCoercion:
+    def test_accepts_enum_name_and_int(self):
+        assert coerce_priority(RT) is RT
+        assert coerce_priority("batch") is BATCH
+        assert coerce_priority("ReAlTiMe") is RT        # any case
+        assert coerce_priority(1) is STD
+        assert coerce_priority(np.int64(2)) is BATCH
+
+    def test_none_defaults_to_standard(self):
+        assert coerce_priority(None) is STD
+
+    def test_unknown_name_rejected_with_choices(self):
+        with pytest.raises(ValueError, match="realtime"):
+            coerce_priority("urgent")
+
+    def test_out_of_range_int_rejected(self):
+        with pytest.raises(ValueError, match="out of range"):
+            coerce_priority(3)
+        with pytest.raises(ValueError, match="out of range"):
+            coerce_priority(-1)
+
+    def test_garbage_types_rejected(self):
+        # bool is an int subclass but True-as-STANDARD would be a silent
+        # caller bug, not a convenience
+        for bad in (True, 1.5, [0], {"cls": 0}):
+            with pytest.raises(ValueError, match="priority"):
+                coerce_priority(bad)
+
+    def test_ordering_is_load_bearing(self):
+        """Lower value = more important; scheduling compares directly."""
+        assert RT < STD < BATCH
+
+
+class TestSloTargetValidation:
+    def test_normalizes_keys_to_classes(self):
+        out = normalize_slo_targets(
+            {"realtime": {"ttft_s": 0.5}, BATCH: {"tok_per_s": 3}})
+        assert out == {RT: {"ttft_s": 0.5}, BATCH: {"tok_per_s": 3.0}}
+
+    def test_empty_and_none_targets_drop_out(self):
+        assert normalize_slo_targets(None) == {}
+        assert normalize_slo_targets({"realtime": None}) == {}
+        assert normalize_slo_targets(
+            {"realtime": {"ttft_s": None}}) == {}
+
+    def test_unknown_target_keys_rejected(self):
+        with pytest.raises(ValueError, match="unknown SLO target"):
+            normalize_slo_targets({"realtime": {"p99": 1.0}})
+
+    def test_non_positive_targets_rejected(self):
+        with pytest.raises(ValueError, match="positive"):
+            normalize_slo_targets({"realtime": {"ttft_s": 0.0}})
+        with pytest.raises(ValueError, match="positive"):
+            normalize_slo_targets({"batch": {"tok_per_s": -1}})
+
+    def test_non_dict_target_rejected(self):
+        with pytest.raises(ValueError, match="must be a dict"):
+            normalize_slo_targets({"realtime": 0.5})
+
+
+# ===========================================================================
+class TestAdmissionOrder:
+    def test_realtime_overtakes_fifo(self):
+        """Three queued classes, one lane: the lane serves REALTIME
+        first although it was submitted LAST."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        prompts = _prompts(cfg, (5, 5, 5), seed=11)
+        with use_mesh(setup[3]):
+            eng = _engine(setup, batch=1)
+            rid_b = eng.submit(prompts[0], gen_len=2, priority="batch")
+            rid_s = eng.submit(prompts[1], gen_len=2)   # standard
+            rid_r = eng.submit(prompts[2], gen_len=2, priority="realtime")
+            eng.try_admit()
+            assert eng.status(rid_r) is RequestStatus.RUNNING
+            assert eng.status(rid_s) is RequestStatus.QUEUED
+            _drain(eng, block=2)
+        # completion order follows class order, not submission order
+        order = [eng.results[r]["tokens"] for r in (rid_r, rid_s, rid_b)]
+        assert order == eng.done
+
+    def test_fifo_within_class(self):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (5, 5, 5), seed=12)
+        with use_mesh(setup[3]):
+            eng = _engine(setup, batch=1)
+            ids = [eng.submit(p, gen_len=2, priority="batch")
+                   for p in prompts]
+            _drain(eng, block=2)
+        assert [eng.results[r]["tokens"] for r in ids] == eng.done
+
+    def test_blocked_head_blocks_lower_classes(self):
+        """A page-blocked REALTIME head must NOT be starved by a small
+        BATCH request slipping into the pages it is waiting for."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        prompts = _prompts(cfg, (10, 3), seed=13)
+        with use_mesh(setup[3]):
+            # pool of 6 pages: the running request holds 3 (6+4+1
+            # rows), the big REALTIME head needs 5 and blocks on the 3
+            # free; the tiny BATCH request (2 pages) would fit in them
+            # but must wait behind the blocked head
+            eng = _engine(setup, batch=3, paged=True, page_size=4,
+                          num_pages=6)
+            rid_live = eng.submit(_prompts(cfg, (6,), seed=9)[0],
+                                  gen_len=4)
+            eng.try_admit()
+            assert eng.status(rid_live) is RequestStatus.RUNNING
+            rid_rt = eng.submit(prompts[0], gen_len=8, priority="realtime")
+            rid_bat = eng.submit(prompts[1], gen_len=2, priority="batch")
+            eng.try_admit()
+            assert eng.status(rid_rt) is RequestStatus.QUEUED
+            assert eng.status(rid_bat) is RequestStatus.QUEUED
+            _drain(eng)
+        for rid in (rid_live, rid_rt, rid_bat):
+            assert eng.status(rid) is RequestStatus.COMPLETED
+
+    def test_single_class_queue_is_the_old_fifo(self):
+        """Conformance safety net: when every request shares one class
+        the priority queue degenerates to the seed FIFO — identical
+        streams in identical order."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=0)
+
+        def serve(prio):
+            with use_mesh(setup[3]):
+                eng = _engine(setup, max_len=32)
+                for p in prompts:
+                    eng.submit(p, gen_len=6, priority=prio)
+                _drain(eng)
+            return eng.done
+
+        base = serve(None)
+        for prio in ("realtime", "batch"):
+            assert serve(prio) == base
+
+    def test_mixed_classes_keep_stream_content(self):
+        """Priorities reorder completions, never change token bytes."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=0)
+        with use_mesh(setup[3]):
+            base = _engine(setup, max_len=32)
+            for p in prompts:
+                base.submit(p, gen_len=6)
+            _drain(base)
+            pri = _engine(setup, max_len=32)
+            for p, cls in zip(prompts, ("batch", "realtime", "standard",
+                                        "batch")):
+                pri.submit(p, gen_len=6, priority=cls)
+            _drain(pri)
+        assert sorted(pri.done) == sorted(base.done)
+
+
+# ===========================================================================
+class TestVictimOrder:
+    def _pressure_engine(self, setup, **kw):
+        kw.setdefault("paged", True)
+        kw.setdefault("page_size", 4)
+        kw.setdefault("num_pages", 8)
+        kw.setdefault("preempt", True)
+        kw.setdefault("preempt_after", 1)
+        kw.setdefault("max_len", 24)
+        return _engine(setup, **kw)
+
+    def test_batch_spills_before_realtime(self):
+        """Running BATCH + REALTIME, a STANDARD head escalates: the
+        BATCH victim loses its pages, the REALTIME stream keeps every
+        one."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        with use_mesh(setup[3]):
+            eng = self._pressure_engine(setup, batch=3)
+            rid_bat = eng.submit(_prompts(cfg, (8,), seed=14)[0],
+                                 gen_len=6, priority="batch")
+            rid_rt = eng.submit(_prompts(cfg, (8,), seed=15)[0],
+                                gen_len=6, priority="realtime")
+            eng.try_admit()      # both run: 3+3 of 8 pages
+            rid_std = eng.submit(_prompts(cfg, (10,), seed=16)[0],
+                                 gen_len=6, priority="standard")
+            eng.try_admit()      # head needs 5 pages, 2 free: escalate
+            assert eng.status(rid_bat) is RequestStatus.PREEMPTED
+            assert eng.status(rid_rt) is RequestStatus.RUNNING
+            assert eng.status(rid_std) is RequestStatus.RUNNING
+            assert eng.class_counters[BATCH]["preemptions"] == 1
+            assert eng.class_counters[RT]["preemptions"] == 0
+            _drain(eng)
+        for rid in (rid_bat, rid_rt, rid_std):
+            assert eng.status(rid) is RequestStatus.COMPLETED
+
+    def test_class_floor_lower_head_cannot_spill_higher(self):
+        """A BATCH head blocked on pages held ONLY by more important
+        classes never escalates past them — it waits for a natural
+        retire instead of spilling work the operator paid more for."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        with use_mesh(setup[3]):
+            eng = self._pressure_engine(setup, batch=3)
+            rid_rt = eng.submit(_prompts(cfg, (8,), seed=17)[0],
+                                gen_len=6, priority="realtime")
+            rid_std = eng.submit(_prompts(cfg, (8,), seed=18)[0],
+                                 gen_len=6)
+            eng.try_admit()
+            rid_bat = eng.submit(_prompts(cfg, (10,), seed=19)[0],
+                                 gen_len=6, priority="batch")
+            for _ in range(4):   # well past preempt_after
+                eng.try_admit()
+            assert eng.status(rid_bat) is RequestStatus.QUEUED
+            assert eng.status(rid_rt) is RequestStatus.RUNNING
+            assert eng.status(rid_std) is RequestStatus.RUNNING
+            assert eng.counters["preemptions"] == 0
+            _drain(eng)
+        for rid in (rid_rt, rid_std, rid_bat):
+            assert eng.status(rid) is RequestStatus.COMPLETED
+
+    def test_ttft_slo_escalates_immediately(self):
+        """A REALTIME head already past its class TTFT target preempts
+        on the FIRST blocked sweep — ``preempt_after`` patience is
+        budget the SLO says it doesn't have."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        clock = FakeClock()
+        with use_mesh(setup[3]):
+            eng = self._pressure_engine(
+                setup, batch=2, preempt_after=50, clock=clock,
+                slo_targets={"realtime": {"ttft_s": 5.0}})
+            rid_bat = eng.submit(_prompts(cfg, (8,), seed=20)[0],
+                                 gen_len=8, priority="batch")
+            eng.try_admit()
+            rid_rt = eng.submit(_prompts(cfg, (12,), seed=21)[0],
+                                gen_len=8, priority="realtime")
+            clock.advance(10.0)          # TTFT target blown in queue
+            eng.try_admit()              # sweep 1 << preempt_after
+            assert eng.status(rid_rt) is RequestStatus.RUNNING
+            assert eng.status(rid_bat) is RequestStatus.PREEMPTED
+            _drain(eng)
+        assert eng.status(rid_rt) is RequestStatus.COMPLETED
+        assert eng.status(rid_bat) is RequestStatus.COMPLETED
+
+
+# ===========================================================================
+class TestSloShed:
+    def test_ttft_risk_sheds_speculation_not_streams(self):
+        """A queued REALTIME request past its TTFT target puts the
+        engine in shed mode: speculation drops (counted, charged to
+        the at-risk class) while greedy bytes stay identical to the
+        unshedded engine."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (8, 8, 8), seed=22)
+
+        def serve(**kw):
+            clock = kw.pop("clock", None)
+            with use_mesh(setup[3]):
+                eng = _engine(setup, batch=1, max_len=24, spec=True,
+                              clock=clock, **kw)
+                eng.submit(prompts[0], gen_len=6)
+                eng.try_admit()          # the lane is taken FIRST —
+                eng.submit(prompts[1], gen_len=6)
+                eng.submit(prompts[2], gen_len=6, priority="realtime")
+                if clock is not None:    # — so REALTIME queues behind it
+                    clock.advance(60.0)  # and blows its TTFT target
+                _drain(eng)
+            return eng
+
+        base = serve()
+        shed = serve(clock=FakeClock(),
+                     slo_targets={"realtime": {"ttft_s": 1.0}})
+        assert sorted(shed.done) == sorted(base.done)
+        assert shed.counters["shed_spec_rounds"] > 0
+        assert shed.class_counters[RT]["shed_rounds"] > 0
+
+    def test_no_risk_no_shed(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup, spec=True,
+                          slo_targets={"realtime": {"ttft_s": 1e6}})
+            eng.submit(_prompts(setup[0], (6,))[0], gen_len=4,
+                       priority="realtime")
+            _drain(eng)
+        assert eng.counters["shed_spec_rounds"] == 0
+        assert eng.class_counters[RT]["shed_rounds"] == 0
+
+
+# ===========================================================================
+class TestPerClassStats:
+    def test_stats_rows_counters_and_percentiles(self):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (6, 6, 6), seed=23)
+        with use_mesh(setup[3]):
+            eng = _engine(setup, clock=FakeClock(tick=0.01))
+            for p, cls in zip(prompts, ("realtime", "batch", "batch")):
+                eng.submit(p, gen_len=3, priority=cls)
+            _drain(eng, block=3)
+        st = eng.stats()
+        classes = st["classes"]
+        assert classes["realtime"]["requests"] == 1
+        assert classes["batch"]["requests"] == 2
+        assert "standard" not in classes         # no activity, no row
+        for row in classes.values():
+            assert row["queued"] == 0
+            assert row["ttft_p50_s"] <= row["ttft_p99_s"]
+        # request_log rows carry the class name for offline aggregation
+        assert sorted(r["priority"] for r in eng.request_log) == \
+            ["batch", "batch", "realtime"]
+
+    def test_slo_targets_surface_in_stats(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup,
+                          slo_targets={"realtime": {"ttft_s": 0.25}})
+            eng.submit(_prompts(setup[0], (4,))[0], gen_len=2,
+                       priority="realtime")
+            _drain(eng, block=2)
+        assert eng.stats()["slo_targets"] == {
+            "realtime": {"ttft_s": 0.25}}
+
+    def test_straggler_blocks_attribute_to_running_classes(self):
+        """An injected-slow block is charged to the classes DECODING
+        through it — the classes whose latency actually paid — and not
+        to classes that were merely queued."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        with use_mesh(setup[3]):
+            eng = _engine(
+                setup, batch=1,
+                fault_injector=ServingFaultInjector({8: "slow"}),
+                # ratio far above real scheduling jitter: only the
+                # injector's synthetic +1s penalty (~100x a smoke-model
+                # block) can flag, so a loaded CI host can't produce a
+                # spurious straggler while the BATCH request is running
+                straggler=StragglerMonitor(window=8, ratio=50.0,
+                                           patience=1))
+            # REALTIME runs; BATCH sits queued behind the single lane
+            eng.submit(_prompts(cfg, (4,), seed=24)[0], gen_len=12,
+                       priority="realtime")
+            eng.submit(_prompts(cfg, (4,), seed=25)[0], gen_len=2,
+                       priority="batch")
+            eng.try_admit()
+            for _ in range(20):
+                if not (eng.live.any() or eng.waiting):
+                    break
+                eng.step_many(1)
+            eng.retire_finished()
+        assert eng.fault_injector.events == [(8, "slow")]
+        assert eng.class_counters[RT]["straggler_blocks"] >= 1
+        assert eng.class_counters[BATCH]["straggler_blocks"] == 0
+        # engine-level counter still carries the block total
+        assert eng.stats()["straggler_blocks"] >= 1

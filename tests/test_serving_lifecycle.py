@@ -21,7 +21,8 @@ import pytest
 
 from repro.dist.constrain import use_mesh
 from repro.ft import ServingFaultInjector, StragglerMonitor
-from repro.launch.lifecycle import RequestStatus, validate_request
+from repro.launch.lifecycle import (PriorityClass, RequestStatus,
+                                    validate_request)
 from repro.launch.serve import Engine
 
 from test_paged_serving import _prompts, _serve, _setup
@@ -106,6 +107,27 @@ class TestInputValidation:
             with pytest.raises(ValueError, match="deadline"):
                 eng.submit(_prompts(setup[0], (4,))[0], deadline_s=0.0)
             assert not eng.waiting
+
+    def test_rejects_unknown_priority_class(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = self._eng()
+            with pytest.raises(ValueError, match="priority"):
+                eng.submit(_prompts(setup[0], (4,))[0], priority="urgent")
+            with pytest.raises(ValueError, match="out of range"):
+                eng.submit(_prompts(setup[0], (4,))[0], priority=-1)
+            assert not eng.waiting
+
+    def test_rejects_bad_slo_targets_at_construction(self):
+        setup = _setup("lm", "f32")
+        cfg, ctx, params, mesh = setup
+        with use_mesh(mesh):
+            with pytest.raises(ValueError, match="positive"):
+                _engine(setup, slo_targets={"realtime": {"ttft_s": 0.0}})
+            with pytest.raises(ValueError, match="unknown SLO target"):
+                _engine(setup, slo_targets={"realtime": {"latency": 1.0}})
+            with pytest.raises(ValueError, match="priority"):
+                _engine(setup, slo_targets={"urgent": {"ttft_s": 1.0}})
 
     def test_validate_request_accepts_and_canonicalizes(self):
         out = validate_request([3, 1, 4], vocab=10, temperature=0.7,
@@ -386,10 +408,10 @@ class TestShedding:
 
 # ===========================================================================
 class TestEscalationCounter:
-    """The ``_head_blocked`` escalation counter tracks ONE head across
-    admission sweeps.  Regression: popping any *other* record (a
-    resume, a small admission slipping into a free lane) used to reset
-    the counter to ``(None, 0)``, so interleaved progress kept a
+    """The ``_head_blocked`` escalation counter tracks ONE head per
+    priority class across admission sweeps.  Regression: popping any
+    *other* record (a resume, a small admission slipping into a free
+    lane) used to reset the counter, so interleaved progress kept a
     blocked head exactly one sweep short of preempting, forever."""
 
     def test_interleaved_pop_does_not_reset_blocked_head(self):
@@ -406,8 +428,9 @@ class TestEscalationCounter:
             eng.try_admit()
             assert eng.status(rid_a) is RequestStatus.RUNNING
             rid_b = eng.submit(prompts[1], gen_len=8)
+            std = PriorityClass.STANDARD         # default class
             eng.try_admit()                      # blocked sweep 1
-            assert eng._head_blocked == (rid_b, 1)
+            assert eng._head_blocked == {std: (rid_b, 1)}
             # a small request cuts the line (models a resume record,
             # which re-enters at the queue head) and takes the free
             # lane — its pop must NOT clobber B's escalation count
@@ -415,10 +438,10 @@ class TestEscalationCounter:
             eng.waiting.appendleft(eng.waiting.pop())
             eng.try_admit()
             assert eng.status(rid_c) is RequestStatus.RUNNING
-            assert eng._head_blocked == (rid_b, 1)   # preserved
+            assert eng._head_blocked == {std: (rid_b, 1)}   # preserved
             assert eng.cancel(rid_c)             # lane/pages free again
             eng.try_admit()                      # blocked sweep 2
-            assert eng._head_blocked == (rid_b, 2)
+            assert eng._head_blocked == {std: (rid_b, 2)}
             assert eng.counters["preemptions"] == 0
             eng.try_admit()                      # sweep 3 == preempt_after
             # escalation fires exactly on schedule: A spills, B runs
@@ -427,7 +450,7 @@ class TestEscalationCounter:
             assert eng.status(rid_b) is RequestStatus.RUNNING
             # B's pop reset the counter; A's spilled resume record is
             # the new queue head and starts its OWN count from 1
-            assert eng._head_blocked == (rid_a, 1)
+            assert eng._head_blocked == {std: (rid_a, 1)}
             _drain(eng)                          # B finishes, A resumes
             assert eng.status(rid_a) is RequestStatus.COMPLETED
             assert eng.status(rid_b) is RequestStatus.COMPLETED

@@ -1,0 +1,334 @@
+"""Crash-safe warm restart: durable serving state, journaled recovery.
+
+The PR 9 tentpole's other half.  With ``durable_dir`` set, the engine
+writes every externally-visible transition (submit / add / admit /
+block / cancel / finish / retire) to an fsync'd write-ahead journal
+(:class:`repro.checkpoint.store.BlobLog`) and lands a full snapshot
+every ``snapshot_every`` blocks.  ``Engine.recover(dir)`` on a FRESH
+engine restores the newest snapshot and re-executes the journal tail —
+deterministic replay, so every in-flight stream resumes byte-identical
+to an uninterrupted run.
+
+Pinned here:
+
+* **BlobLog framing** — round-trip, reopen-and-continue, torn-tail
+  truncation (a crash mid-append drops only the torn frame), and the
+  refusal to silently skip mid-file corruption.
+* **Crash conformance** — ``InjectedCrash`` (a BaseException: nothing
+  in-process may swallow it) at EVERY block round of the run, across
+  serving families × cache layouts × speculation, always recovering to
+  the clean run's exact ``done`` list (content AND order).
+* **Journal-only recovery** — a crash before the first snapshot lands
+  replays the whole history from the log alone.
+* **Warm prefix index** — committed preamble pages survive the
+  restart: post-recovery admissions of a shared prefix HIT instead of
+  re-prefilling.
+* **Forward-compat** — PR 6-era snapshot dicts (no class counters,
+  tuple ``head_blocked``, no prefix/journal fields) still restore.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import BlobLog
+from repro.dist.constrain import use_mesh
+from repro.ft import CRASH_KIND, InjectedCrash, ServingFaultInjector
+from repro.launch.lifecycle import PriorityClass, RequestStatus
+from repro.launch.serve import Engine
+
+from test_paged_serving import _prompts, _setup
+
+PAGED = dict(paged=True, page_size=4, num_pages=16)
+
+
+# ===========================================================================
+class TestBlobLog:
+    def test_append_read_round_trip(self, tmp_path):
+        log = BlobLog(str(tmp_path / "j.log"))
+        recs = [("submit", {"id": 0}), ("block", 4), ("retire",)]
+        assert [log.append(r) for r in recs] == [0, 1, 2]
+        assert log.count == 3
+        assert log.read() == recs
+        assert log.read(1) == recs[1:]
+        log.close()
+
+    def test_reopen_continues_after_existing_records(self, tmp_path):
+        path = str(tmp_path / "j.log")
+        log = BlobLog(path)
+        log.append("a")
+        log.append("b")
+        log.close()
+        log2 = BlobLog(path)
+        assert log2.count == 2
+        log2.append("c")
+        assert log2.read() == ["a", "b", "c"]
+        log2.close()
+
+    def test_torn_tail_is_truncated_on_open(self, tmp_path):
+        """A crash mid-append leaves a partial frame; reopening keeps
+        every complete record and drops exactly the torn bytes."""
+        path = str(tmp_path / "j.log")
+        log = BlobLog(path)
+        log.append("kept-1")
+        log.append("kept-2")
+        log.close()
+        size = os.path.getsize(path)
+        with open(path, "ab") as f:
+            f.write(b"\x40\x00\x00\x00\x99")   # header + 1 of 64 bytes
+        log2 = BlobLog(path)
+        assert log2.count == 2
+        assert log2.read() == ["kept-1", "kept-2"]
+        log2.close()
+        assert os.path.getsize(path) == size   # torn bytes are gone
+
+    def test_mid_file_corruption_is_refused(self, tmp_path):
+        """A broken frame FOLLOWED by valid data is damage, not a torn
+        append — silently resuming past it would replay a wrong
+        history, so opening raises instead."""
+        path = str(tmp_path / "j.log")
+        log = BlobLog(path)
+        log.append("one")
+        off = os.path.getsize(path)
+        log.append("two" * 10)
+        log.close()
+        with open(path, "r+b") as f:
+            f.seek(off + 8)                    # a payload byte of rec 2
+            b = f.read(1)
+            f.seek(off + 8)
+            f.write(bytes([b[0] ^ 0xFF]))      # CRC now mismatches
+        with open(path, "ab") as f:            # valid-looking data after
+            f.write(b"x" * 64)
+        with pytest.raises(IOError, match="corrupt"):
+            BlobLog(path)
+
+    def test_fresh_discards_previous_contents(self, tmp_path):
+        path = str(tmp_path / "j.log")
+        log = BlobLog(path)
+        log.append("old")
+        log.close()
+        log2 = BlobLog(path, fresh=True)
+        assert log2.count == 0
+        assert log2.read() == []
+        log2.close()
+
+
+# ===========================================================================
+def _drive(eng, prompts, *, gen_len=6, block=4, prios=None):
+    for i, p in enumerate(prompts):
+        eng.submit(p, gen_len=gen_len,
+                   priority=None if prios is None else prios[i])
+    eng.try_admit()
+    while eng.live.any() or eng.waiting:
+        eng.step_many(block)
+    eng.retire_finished()
+    return eng
+
+
+def _engine(setup, **kw):
+    cfg, ctx, params, mesh = setup
+    kw.setdefault("batch", 2)
+    kw.setdefault("max_len", 32)
+    return Engine(cfg, ctx, params, mesh, **kw)
+
+
+def _crash_recover(setup, prompts, directory, crash_round, *,
+                   snapshot_every=2, gen_len=6, block=4, prios=None,
+                   **kw):
+    """Run durably, die at ``crash_round``, recover a fresh engine from
+    the directory, finish the work.  Returns the recovered engine."""
+    with use_mesh(setup[3]):
+        eng = _engine(setup, durable_dir=str(directory),
+                      snapshot_every=snapshot_every,
+                      fault_injector=ServingFaultInjector(
+                          {crash_round: CRASH_KIND}), **kw)
+        with pytest.raises(InjectedCrash):
+            _drive(eng, prompts, gen_len=gen_len, block=block,
+                   prios=prios)
+        # "fresh process": same construction args, NO durable_dir (that
+        # would truncate the journal it is about to replay), no injector
+        eng2 = _engine(setup, **kw)
+        eng2.recover(str(directory))
+        while eng2.live.any() or eng2.waiting:
+            eng2.step_many(block)
+        eng2.retire_finished()
+    return eng2
+
+
+# ===========================================================================
+class TestCrashRecoveryConformance:
+    """InjectedCrash at every round index; recovered streams must equal
+    the uninterrupted run's ``done`` — content AND completion order."""
+
+    CELLS = [
+        ("lm", {}, False),
+        ("lm", dict(PAGED), False),
+        pytest.param("lm", dict(PAGED), True, marks=pytest.mark.slow),
+        pytest.param("lm", {}, True, marks=pytest.mark.slow),
+        pytest.param("ssm", {}, False, marks=pytest.mark.slow),
+        pytest.param("ssm", dict(PAGED), False, marks=pytest.mark.slow),
+        pytest.param("ssm", dict(PAGED), True, marks=pytest.mark.slow),
+        pytest.param("hybrid", {}, False, marks=pytest.mark.slow),
+        pytest.param("hybrid", dict(PAGED), False,
+                     marks=pytest.mark.slow),
+        pytest.param("hybrid", dict(PAGED), True,
+                     marks=pytest.mark.slow),
+    ]
+
+    @pytest.mark.parametrize("family,kw,spec", CELLS)
+    def test_crash_at_every_round(self, tmp_path, family, kw, spec):
+        setup = _setup(family, "f32")
+        # spec commits up to k+1 tokens per verify round, so the default
+        # workload finishes in too few blocks to crash at — stretch the
+        # generation and shrink the block to keep >=3 block boundaries
+        drive = dict(gen_len=12, block=2) if spec else {}
+        if spec:
+            kw = dict(kw, spec=True)
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=31)
+        prios = ("batch", "realtime", None, "standard")
+        with use_mesh(setup[3]):
+            clean = _drive(_engine(setup, **kw), prompts, prios=prios,
+                           **drive)
+        rounds = clean._round
+        assert rounds >= 3, "workload too short to exercise recovery"
+        for rnd in range(1, rounds + 1):
+            rec = _crash_recover(setup, prompts, tmp_path / str(rnd),
+                                 rnd, prios=prios, **drive, **kw)
+            assert rec.done == clean.done, f"diverged for crash @ {rnd}"
+            assert all(r["status"] is RequestStatus.COMPLETED
+                       for r in rec.results.values())
+
+    def test_journal_only_recovery_before_first_snapshot(self, tmp_path):
+        """snapshot_every=0: no snapshot ever lands; recovery replays
+        the ENTIRE history from the journal alone."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12), seed=32)
+        with use_mesh(setup[3]):
+            clean = _drive(_engine(setup), prompts)
+        rec = _crash_recover(setup, prompts, tmp_path, 2,
+                             snapshot_every=0)
+        assert rec.done == clean.done
+        assert rec._journal.count > 0          # journaling resumed
+
+    def test_recovered_engine_serves_new_requests(self, tmp_path):
+        """Recovery is a restart, not a read-only post-mortem: the
+        rebuilt engine keeps journaling and serves fresh traffic."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        prompts = _prompts(cfg, (9, 5), seed=33)
+        rec = _crash_recover(setup, prompts, tmp_path, 2)
+        before = rec._journal.count
+        with use_mesh(setup[3]):
+            solo = _drive(_engine(setup), _prompts(cfg, (7,), seed=34))
+            _drive(rec, _prompts(cfg, (7,), seed=34))
+        assert rec.done[-1] == solo.done[0]
+        assert rec._journal.count > before     # journaling stayed on
+
+    def test_recover_on_durable_engine_is_refused(self, tmp_path):
+        """Constructing with durable_dir truncates the journal — the
+        one wrong way to recover, refused loudly."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup, durable_dir=str(tmp_path))
+            with pytest.raises(RuntimeError, match="durable_dir"):
+                eng.recover(str(tmp_path))
+
+    def test_crash_is_a_base_exception(self):
+        """The in-process recovery loop catches RuntimeError and broad
+        driver code catches Exception; a process death must sail past
+        both to reach the harness."""
+        assert issubclass(InjectedCrash, BaseException)
+        assert not issubclass(InjectedCrash, Exception)
+
+
+# ===========================================================================
+class TestWarmPrefixIndex:
+    def test_prefix_index_survives_restart(self, tmp_path):
+        """Committed preamble pages are part of the durable state: an
+        admission AFTER recovery hits the index instead of paying the
+        full prefill again."""
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        rs = np.random.RandomState(35)
+        pre = rs.randint(0, cfg.vocab, (16,))
+        prompts = [np.concatenate([pre, rs.randint(0, cfg.vocab, (3,))])
+                   for _ in range(3)]
+        kw = dict(paged=True, page_size=4, num_pages=32,
+                  prefix_cache=True, max_len=32)
+        with use_mesh(setup[3]):
+            clean = _drive(_engine(setup, **kw), prompts)
+        rec = _crash_recover(setup, prompts, tmp_path, 3, **kw)
+        assert rec.done == clean.done
+        assert len(rec.prefix_index) > 0       # index came back warm
+        hits = rec.counters["prefix_hits"]
+        with use_mesh(setup[3]):
+            _drive(rec, [np.concatenate(
+                [pre, rs.randint(0, cfg.vocab, (3,))])])
+        assert rec.counters["prefix_hits"] > hits, \
+            "post-recovery admission missed a prefix the dead engine " \
+            "had committed"
+
+
+# ===========================================================================
+class TestSnapshotForwardCompat:
+    def _pr6_era(self, snap):
+        """Strip a current snapshot down to its PR 6-era shape: single
+        head-blocked tuple, no class counters, no prefix or durable
+        fields, counters without the later layers' keys."""
+        old = dict(snap)
+        old["head_blocked"] = (None, 0)
+        old.pop("class_counters", None)
+        old.pop("journal_cursor", None)
+        for k in ("prefix_index", "slot_shared", "pub"):
+            old.pop(k, None)
+        old["counters"] = {k: v for k, v in snap["counters"].items()
+                           if not k.startswith(("prefix_", "cow_"))}
+        for r in old["request_log"]:
+            r.pop("priority", None)            # rows predate the field
+        return old
+
+    def test_legacy_snapshot_restores_with_defaults(self):
+        """The snapshot comes from a PR 6-shaped engine (paged +
+        preempt, NO prefix cache, no priority fields) and restores
+        into a current engine with the prefix layer enabled — the
+        realistic upgrade path."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (6, 5, 7), seed=36)
+        kw = dict(paged=True, page_size=4, num_pages=16, max_len=32)
+        with use_mesh(setup[3]):
+            eng = _engine(setup, **kw)
+            for p in prompts:
+                eng.submit(p, gen_len=4)
+            eng.try_admit()
+            eng.step_many(2)
+            legacy = self._pr6_era(eng.snapshot())
+            eng2 = _engine(setup, prefix_cache=True, **kw)
+            eng2.restore(legacy)
+            # new fields defaulted: no tracked heads, zeroed class rows,
+            # cold prefix index — and the engine still drains cleanly
+            assert eng2._head_blocked == {}
+            assert all(row == eng2._fresh_class_row()
+                       for row in eng2.class_counters.values())
+            assert len(eng2.prefix_index) == 0
+            while eng2.live.any() or eng2.waiting:
+                eng2.step_many(4)
+            eng2.retire_finished()
+            base = _drive(_engine(setup, **kw), prompts, gen_len=4)
+        assert eng2.done == base.done
+        # legacy request_log rows (no priority field) aggregate as
+        # STANDARD instead of KeyError'ing
+        st = eng2.stats()
+        assert st["classes"]["standard"]["requests"] == len(prompts)
+
+    def test_legacy_tuple_head_blocked_with_tracked_head(self):
+        """A PR 6 tuple tracking a real head maps onto the STANDARD
+        class (the only scheduling the era had) so its escalation
+        count is not lost."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _engine(setup)
+            snap = eng.snapshot()
+            snap["head_blocked"] = (7, 2)
+            eng.restore(snap)
+        assert eng._head_blocked == {PriorityClass.STANDARD: (7, 2)}
