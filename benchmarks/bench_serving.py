@@ -806,6 +806,116 @@ def run_prefix_cache(n_requests=6, batch=2, pre_len=48, tail_len=4,
     return rows
 
 
+def run_failover(batch=2, page_size=4, num_pages=16, prompt_len=10,
+                 gen_len=6, block=2, kill_round=2):
+    """Primary kill mid-burst: time-to-promote + per-class TTFT cost.
+
+    A one-replica fleet with a hot standby serves the ``run_priority``
+    mixed-class burst twice: once fault-free, once with the primary
+    killed at fleet round ``kill_round`` (mid-burst — prefills landed,
+    decodes in flight, admission queue non-empty).  The standby tails
+    the journal, so promotion finishes the tail replay and resumes
+    every stream; the burst drains to completion on the promoted
+    engine.
+
+    Asserts zero lost and zero duplicated streams (same request-id
+    set, each completed exactly once, token streams byte-identical to
+    the fault-free run), exactly one promotion with a measured
+    time-to-promote, and REALTIME p99 TTFT inside its SLO target even
+    across the failover — BATCH absorbs the degradation.  Reports
+    time-to-promote and the per-class TTFT clean→failover movement so
+    BENCH_serving.json records what a primary death costs each class."""
+    import shutil
+    import tempfile
+
+    from repro.dist.constrain import use_mesh
+    from repro.ft.serving import FleetFaultInjector
+    from repro.launch.fleet import Fleet
+    from repro.launch.lifecycle import RequestStatus
+
+    cfg, ctx, fam, mesh, params = _serving_setup()
+    src = SyntheticLM(cfg.vocab, seed=0)
+    # worst-case arrival order again: the class that needs latency
+    # most arrives last AND must survive the primary's death
+    order = ["batch"] * 2 + ["standard"] * 2 + ["realtime"] * 2
+    prompts = [src.tokens(i, 1, prompt_len)[0, :-1]
+               for i in range(len(order))]
+    slo_ttft_s = 30.0
+    eng_kw = dict(batch=batch, max_len=prompt_len + gen_len + 8,
+                  paged=True, page_size=page_size, num_pages=num_pages,
+                  slo_targets={"realtime": {"ttft_s": slo_ttft_s}})
+
+    def burst(inj, standby_dir):
+        def factory(**over):
+            return make_engine(**dict(eng_kw, **over))
+
+        # wide failure-detection thresholds: this bench measures what a
+        # promotion COSTS, not whether jitter trips the detector — on a
+        # cold CPU, jit-compile spikes read exactly like a straggling
+        # replica, and an organic death would poison the fault-free arm
+        fl = Fleet(factory, 1, standby_dir=standby_dir,
+                   fault_injector=inj, suspect_after=64, dead_after=128,
+                   recover_after=1)
+        t0 = time.perf_counter()
+        for p, cls in zip(prompts, order):
+            fl.submit(p, gen_len=gen_len, priority=cls)
+        fl.try_admit()
+        fl.drain(block=block)
+        return fl, time.perf_counter() - t0
+
+    rows = []
+    runs = {}
+    tmp = tempfile.mkdtemp(prefix="bench_failover_")
+    try:
+        with use_mesh(mesh):
+            burst(None, tempfile.mkdtemp(dir=tmp))   # untimed: compiles
+            for name, inj in [
+                    ("fault_free", None),
+                    ("kill_primary", FleetFaultInjector(
+                        [(kill_round, 0, "kill")]))]:
+                sdir = tempfile.mkdtemp(dir=tmp)
+                fl, wall = burst(inj, sdir)
+                runs[name] = fl
+                st = fl.replicas[0].stats()   # promotion may have swapped
+                row = {"bench": "serving_failover", "name": name,
+                       "requests": len(order),
+                       "promotions": fl.counters["promotions"],
+                       "ms_total": wall * 1e3}
+                for cls in ("realtime", "batch"):
+                    c = st.get("classes", {}).get(cls, {})
+                    if "ttft_p99_s" in c:
+                        row[f"{cls}_ttft_p99_ms"] = c["ttft_p99_s"] * 1e3
+                if inj is not None:
+                    row["time_to_promote_ms"] = \
+                        fl.counters["time_to_promote_s"] * 1e3
+                rows.append(row)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    clean, faulty = runs["fault_free"], runs["kill_primary"]
+    # zero lost, zero duplicated: same id set (dict keys are unique, so
+    # presence == exactly once), every stream completed, byte-identical
+    assert sorted(faulty.results) == sorted(clean.results), \
+        "failover lost or invented streams"
+    for fid, res in clean.results.items():
+        assert faulty.results[fid]["status"] is RequestStatus.COMPLETED
+        assert np.array_equal(faulty.results[fid]["tokens"],
+                              res["tokens"]), \
+            f"stream {fid} diverged across the failover"
+    assert clean.counters["deaths"] == 0 \
+        and clean.counters["promotions"] == 0, \
+        "the fault-free arm was not fault-free"
+    assert faulty.counters["deaths"] == 1
+    assert faulty.counters["promotions"] == 1, \
+        "the primary kill did not trigger exactly one promotion"
+    assert faulty.counters["time_to_promote_s"] is not None
+    rt_failover = rows[1].get("realtime_ttft_p99_ms")
+    assert rt_failover is not None and rt_failover <= slo_ttft_s * 1e3, \
+        (f"REALTIME p99 TTFT {rt_failover:.1f} ms blew its SLO "
+         f"across the failover")
+    return rows
+
+
 def run():
     rows = []
     cfg = get_config("gemma-2b").smoke()
@@ -847,6 +957,7 @@ def run():
     rows.extend(run_preemption())
     rows.extend(run_priority())
     rows.extend(run_prefix_cache())
+    rows.extend(run_failover())
     return rows
 
 

@@ -32,7 +32,9 @@ _DELTA_KEYS = ("us_per_call", "tok_per_s", "prompt_tok_per_s",
                "accepted_per_step", "capacity_vs_dense", "mean_row_fill",
                "greedy_agreement_vs_fp32", "fit_residual",
                "tile_cost", "combine_cost", "speedup_vs_pinned_worst",
-               "speedup_vs_analytic")
+               "speedup_vs_analytic", "time_to_promote_ms",
+               "realtime_ttft_p99_ms", "batch_ttft_p50_ms",
+               "batch_ttft_p99_ms")
 
 
 def _fmt_derived(row):

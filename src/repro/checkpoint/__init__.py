@@ -1,6 +1,7 @@
 """Sharded checkpointing with async save and elastic restore."""
 
-from .store import (CheckpointManager, latest_step, restore_state,
-                    save_state)
+from .store import (BlobLog, BlobLogFollower, CheckpointManager,
+                    latest_step, restore_state, save_state)
 
-__all__ = ["CheckpointManager", "latest_step", "restore_state", "save_state"]
+__all__ = ["BlobLog", "BlobLogFollower", "CheckpointManager", "latest_step",
+           "restore_state", "save_state"]

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["save_state", "restore_state", "latest_step", "save_blob",
-           "load_blob", "BlobLog", "CheckpointManager"]
+           "load_blob", "BlobLog", "BlobLogFollower", "CheckpointManager"]
 
 _SEP = "."
 
@@ -175,7 +175,30 @@ class BlobLog:
                 f"journal {self.path} corrupt at byte {good}: broken "
                 f"frame followed by {len(tail) - max_torn} more bytes "
                 f"(not a torn tail)")
+        # second net, for damage the length bound can't see: a bit flip
+        # that ENLARGES a mid-file length field makes every committed
+        # record after it look like one huge torn frame.  A torn tail is
+        # a partial write of ONE record, so a complete CRC-valid frame
+        # anywhere inside it proves the break happened before committed
+        # history — refuse rather than drop it.  (Non-empty frames only:
+        # crc32(b"") == 0, so eight zero bytes inside a genuinely torn
+        # pickle body would otherwise masquerade as a valid empty frame.)
+        for probe in range(good + 1, end - self._HEADER.size + 1):
+            length, crc = self._HEADER.unpack_from(data, probe)
+            if length == 0:
+                continue
+            body = data[probe + self._HEADER.size:
+                        probe + self._HEADER.size + length]
+            if len(body) == length and zlib.crc32(body) == crc:
+                raise IOError(
+                    f"journal {self.path} corrupt at byte {good}: broken "
+                    f"frame with a complete valid frame at byte {probe} "
+                    f"after it (mid-file damage, not a torn tail)")
         return count, good
+
+    def follow(self) -> "BlobLogFollower":
+        """A cursor over this journal for another engine to tail."""
+        return BlobLogFollower(self.path)
 
     def append(self, obj) -> int:
         """Durably append one record; returns its index."""
@@ -209,6 +232,58 @@ class BlobLog:
     def close(self) -> None:
         if not self._f.closed:
             self._f.close()
+
+
+class BlobLogFollower:
+    """Incremental cursor over a :class:`BlobLog` another engine appends
+    to — the journal-shipping primitive under the fleet's hot standby.
+
+    :meth:`poll` returns every record that became durable since the
+    last call, advancing a (byte offset, record index) cursor.  The
+    writer only ever appends, so the follower distinguishes two tail
+    states it can observe:
+
+    * a **short frame** (header or body not fully on disk yet) is an
+      append in flight — stop, keep the cursor, pick it up next poll;
+    * a **complete frame with a CRC mismatch** can never be an append
+      in flight (bytes land in order, so a frame whose full claimed
+      length is on disk was fully written) — that is corruption, and
+      silently skipping it would ship the standby a wrong history, so
+      it raises.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self.offset = 0         # byte offset of the next unread frame
+        self.count = 0          # records consumed so far
+
+    def poll(self, max_records: Optional[int] = None) -> list:
+        """New durable records since the last poll (possibly none)."""
+        out: list = []
+        if not os.path.exists(self.path):
+            return out
+        with open(self.path, "rb") as f:
+            f.seek(self.offset)
+            data = f.read()
+        hdr = BlobLog._HEADER
+        off, end = 0, len(data)
+        while off + hdr.size <= end:
+            if max_records is not None and len(out) >= max_records:
+                break
+            length, crc = hdr.unpack_from(data, off)
+            body = data[off + hdr.size: off + hdr.size + length]
+            if len(body) < length:
+                break               # append in flight: wait for the rest
+            if zlib.crc32(body) != crc:
+                raise IOError(
+                    f"journal {self.path} corrupt at byte "
+                    f"{self.offset + off}: CRC mismatch on a complete "
+                    f"frame while following")
+            out.append(pickle.loads(body))
+            off += hdr.size + length
+            self.count += 1
+        self.offset += off
+        return out
 
 
 def latest_step(directory: str) -> Optional[int]:

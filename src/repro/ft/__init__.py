@@ -1,10 +1,12 @@
 """Fault tolerance: recovery loop, straggler detection, serving chaos."""
 
 from .recovery import FaultInjector, ResilientLoop
-from .serving import (CRASH_KIND, FAULT_KINDS, InjectedCrash, InjectedFault,
+from .serving import (CRASH_KIND, FAULT_KINDS, FLEET_FAULT_KINDS,
+                      FleetFaultInjector, InjectedCrash, InjectedFault,
                       PageCorruptionError, ServingFaultInjector)
-from .straggler import StragglerMonitor
+from .straggler import ReplicaHeartbeat, StragglerMonitor
 
 __all__ = ["FaultInjector", "ResilientLoop", "StragglerMonitor",
-           "ServingFaultInjector", "InjectedFault", "InjectedCrash",
-           "PageCorruptionError", "FAULT_KINDS", "CRASH_KIND"]
+           "ReplicaHeartbeat", "ServingFaultInjector", "FleetFaultInjector",
+           "InjectedFault", "InjectedCrash", "PageCorruptionError",
+           "FAULT_KINDS", "CRASH_KIND", "FLEET_FAULT_KINDS"]

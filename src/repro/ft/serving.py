@@ -51,12 +51,15 @@ from __future__ import annotations
 import time
 from typing import Dict, Iterable, Tuple, Union
 
-__all__ = ["ServingFaultInjector", "InjectedFault", "InjectedCrash",
-           "PageCorruptionError", "FAULT_KINDS", "CRASH_KIND"]
+__all__ = ["ServingFaultInjector", "FleetFaultInjector", "InjectedFault",
+           "InjectedCrash", "PageCorruptionError", "FAULT_KINDS",
+           "CRASH_KIND", "FLEET_FAULT_KINDS"]
 
 FAULT_KINDS = ("raise", "nan", "corrupt", "slow")
 #: recovered across processes (Engine.recover), not by in-process replay
 CRASH_KIND = "crash"
+#: fleet-level kinds (FleetFaultInjector; keyed by fleet round + replica)
+FLEET_FAULT_KINDS = ("kill", "lag", "stall")
 
 
 class InjectedFault(RuntimeError):
@@ -144,3 +147,73 @@ class ServingFaultInjector:
             self._pending_corruption = None
             raise PageCorruptionError(
                 f"page-pool integrity check failed after block {rnd}")
+
+
+class FleetFaultInjector:
+    """Deterministic fleet-level fault schedule, keyed by fleet round.
+
+    ``schedule`` is an iterable of ``(round, replica, kind)`` triples
+    (or a dict ``{round: (replica, kind)}``); rounds are 1-based fleet
+    step rounds, and each scheduled triple fires exactly once.  Kinds
+    (:data:`FLEET_FAULT_KINDS`):
+
+    * ``"kill"`` — replica death at that block round.
+      :class:`InjectedCrash` is raised out of the replica's step after
+      its journal handle is closed, exactly like the engine-level crash
+      kind.  The fleet's supervision catches the replica *dying under
+      it* — death is detected, never announced.
+    * ``"lag"`` — journal-shipping lag spike: the standby's tail apply
+      is suppressed for the round (the replica index is ignored).  The
+      fleet's bounded-lag promise must hold regardless, so a spike that
+      would breach ``max_standby_lag`` forces a drain instead.
+    * ``"stall"`` — routing-time stall: the replica makes no progress
+      for the round and its block report is penalized, so the fleet's
+      heartbeat sees exactly what a hung worker looks like.
+    """
+
+    def __init__(self, schedule):
+        items = (((rnd,) + tuple(v) for rnd, v in schedule.items())
+                 if isinstance(schedule, dict) else list(schedule))
+        self.schedule: Dict[int, list] = {}
+        for rnd, replica, kind in items:
+            if kind not in FLEET_FAULT_KINDS:
+                raise ValueError(f"unknown fleet fault kind {kind!r} "
+                                 f"(have {FLEET_FAULT_KINDS})")
+            self.schedule.setdefault(int(rnd), []).append(
+                (None if replica is None else int(replica), kind))
+        self.fired = set()
+        #: (round, replica, kind) log of every fault actually injected
+        self.events = []
+
+    def lag_injected(self, rnd: int) -> bool:
+        """True when a ``"lag"`` fault is scheduled for this round (and
+        marks it fired).  Queried by the fleet before standby sync."""
+        for replica, kind in self.schedule.get(rnd, ()):
+            key = (rnd, replica, kind)
+            if kind == "lag" and key not in self.fired:
+                self.fired.add(key)
+                self.events.append(key)
+                return True
+        return False
+
+    def before_step(self, rnd: int, replica: int, engine) -> tuple:
+        """Fire this round's faults against ``replica``; returns the
+        non-fatal kinds that fired (``"stall"``) or raises for a kill."""
+        kinds = []
+        for rep, kind in self.schedule.get(rnd, ()):
+            if kind == "lag" or rep != replica:
+                continue
+            key = (rnd, rep, kind)
+            if key in self.fired:
+                continue
+            self.fired.add(key)
+            self.events.append(key)
+            if kind == "kill":
+                j = getattr(engine, "_journal", None)
+                if j is not None:
+                    j.close()
+                raise InjectedCrash(
+                    f"injected death of replica {replica} at fleet "
+                    f"round {rnd}")
+            kinds.append(kind)
+        return tuple(kinds)

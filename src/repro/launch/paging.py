@@ -29,7 +29,10 @@ property sweeps).
 
 from __future__ import annotations
 
-from typing import Dict, List
+import math
+from typing import Dict, List, Optional, Tuple
+
+from .lifecycle import PriorityClass, coerce_priority, normalize_class_quotas
 
 __all__ = ["PageAllocator"]
 
@@ -51,7 +54,8 @@ class PageAllocator:
     the prefix index when it is published).
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 class_quotas=None):
         if num_pages <= 0 or page_size <= 0:
             raise ValueError("num_pages and page_size must be positive")
         self.num_pages = int(num_pages)
@@ -66,6 +70,30 @@ class PageAllocator:
         self._pages: Dict[object, List[int]] = {}
         #: page id -> reference count (>= 1 while allocated)
         self._ref: Dict[int, int] = {}
+        #: per-class partition of the pool (empty dict = unpartitioned,
+        #: byte-identical legacy behaviour).  A page is *charged* to the
+        #: class that allocated it for its whole pool lifetime — sharing
+        #: and ownership transfer (prefix publication) keep the charge,
+        #: so a REALTIME-published prefix page keeps counting toward the
+        #: REALTIME floor, which is exactly the working set the floor
+        #: exists to protect.
+        self.class_quotas = normalize_class_quotas(class_quotas)
+        self._cls: Dict[int, Optional[PriorityClass]] = {}
+        self._cls_used: Dict[PriorityClass, int] = {
+            c: 0 for c in PriorityClass}
+        #: floors round UP (the reservation is "at least this fraction"),
+        #: caps round down but never to zero (a cap the class can never
+        #: use at all would be a ban spelled as a bound)
+        self._floor_pages: Dict[PriorityClass, int] = {}
+        self._cap_pages: Dict[PriorityClass, int] = {}
+        for c, q in self.class_quotas.items():
+            if "floor" in q:
+                self._floor_pages[c] = min(
+                    self.num_pages,
+                    int(math.ceil(q["floor"] * self.num_pages - 1e-9)))
+            if "cap" in q:
+                self._cap_pages[c] = max(
+                    1, int(q["cap"] * self.num_pages + 1e-9))
 
     # -- queries ------------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -80,8 +108,118 @@ class PageAllocator:
     def used_pages(self) -> int:
         return self.num_pages - len(self._free)
 
-    def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+    def can_alloc(self, n: int, cls=None) -> bool:
+        if n > len(self._free):
+            return False
+        if not self.class_quotas:
+            return True
+        return self.quota_violation({self._coerce_cls(cls): int(n)}) is None
+
+    # -- class quotas -------------------------------------------------------
+    def _coerce_cls(self, cls) -> Optional[PriorityClass]:
+        """Charge class for an allocation: explicit class, else STANDARD
+        when the pool is partitioned (defaulted traffic is the middle
+        class, same convention as ``coerce_priority``), else ``None``
+        (unpartitioned pools track nothing)."""
+        if not self.class_quotas:
+            return None
+        return (PriorityClass.STANDARD if cls is None
+                else coerce_priority(cls))
+
+    def class_used(self, cls) -> int:
+        """Pages currently charged to ``cls``."""
+        return self._cls_used.get(coerce_priority(cls), 0)
+
+    def cap_pages(self, cls) -> Optional[int]:
+        """``cls``'s page cap (None = uncapped)."""
+        return self._cap_pages.get(coerce_priority(cls))
+
+    def floor_pages(self, cls) -> int:
+        """Pages reserved for ``cls`` (0 = no reservation)."""
+        return self._floor_pages.get(coerce_priority(cls), 0)
+
+    def quota_violation(self, needs: Dict, *, freed: int = 0,
+                        uncharge: Optional[Dict] = None) -> Optional[str]:
+        """``None`` if per-class allocations ``needs`` fit every quota,
+        else a message naming the violated constraint.
+
+        ``needs`` maps class -> fresh pages wanted.  ``freed`` pages are
+        known to return to the free list first (a recycle/preempt plan),
+        with ``uncharge`` as the matching per-class charge decrements
+        (see :meth:`release_credit`).  Two constraints:
+
+        * **cap**: a capped class may not exceed its page bound;
+        * **floor**: after the allocation, the free list must still
+          cover every *other* class's unfilled reservation — the free
+          pages behind a floor belong to that class's future, not to
+          whoever asks first.
+        """
+        if not self.class_quotas:
+            return None
+        used = dict(self._cls_used)
+        for c, n in (uncharge or {}).items():
+            used[c] = used.get(c, 0) - int(n)
+        total = 0
+        for key, n in needs.items():
+            c = self._coerce_cls(key)
+            used[c] = used.get(c, 0) + int(n)
+            total += int(n)
+        free_after = len(self._free) + int(freed) - total
+        for c, cap in self._cap_pages.items():
+            if used.get(c, 0) > cap:
+                return (f"class {c.name.lower()} over its page cap: "
+                        f"{used[c]} > {cap} of {self.num_pages}")
+        shortfall = sum(max(0, fp - used.get(c, 0))
+                        for c, fp in self._floor_pages.items())
+        if free_after < shortfall:
+            return (f"allocation would break reserved class floors: "
+                    f"{free_after} pages would stay free but "
+                    f"{shortfall} are reserved")
+        return None
+
+    def quota_evict_want(self, cls, n: int,
+                         planned: Optional[Dict] = None) -> int:
+        """Pages of ``cls`` (or less important) that would have to
+        leave the pool — freed AND uncharged — before ``n`` fresh pages
+        for ``cls`` clear both quota constraints (0 = quotas are not
+        the blocker).  Sizes the prefix-eviction sweep a quota-blocked
+        admission head runs: a pool with plenty of free pages can still
+        refuse a capped class whose *published* prefix pages hold its
+        whole budget."""
+        if not self.class_quotas:
+            return 0
+        used = dict(self._cls_used)
+        total = 0
+        for key, m in (planned or {}).items():
+            c = self._coerce_cls(key)
+            used[c] = used.get(c, 0) + int(m)
+            total += int(m)
+        c = self._coerce_cls(cls)
+        used[c] = used.get(c, 0) + int(n)
+        total += int(n)
+        want = 0
+        cap = self._cap_pages.get(c)
+        if cap is not None and used[c] > cap:
+            want = used[c] - cap
+        free_after = len(self._free) - total
+        shortfall = sum(max(0, fp - used.get(k, 0))
+                        for k, fp in self._floor_pages.items())
+        if free_after < shortfall:
+            want = max(want, shortfall - free_after)
+        return want
+
+    def release_credit(self, pages) -> Tuple[int, Dict]:
+        """``(pages that would return to the pool, per-class uncharges)``
+        if one reference were dropped on each of ``pages`` — the credit
+        an admission plan may count before it actually frees anything."""
+        freed, uncharge = 0, {}
+        for p in pages:
+            if self._ref.get(int(p), 0) == 1:
+                freed += 1
+                c = self._cls.get(int(p))
+                if c is not None:
+                    uncharge[c] = uncharge.get(c, 0) + 1
+        return freed, uncharge
 
     def pages_of(self, owner) -> List[int]:
         """The pages currently owned by ``owner``, in allocation order
@@ -98,17 +236,27 @@ class PageAllocator:
         return sum(1 for r in self._ref.values() if r > 1)
 
     # -- alloc / free -------------------------------------------------------
-    def alloc(self, n: int, owner=None) -> List[int]:
+    def alloc(self, n: int, owner=None, cls=None) -> List[int]:
         """Take ``n`` pages off the free list (raises if short), each
-        with refcount 1.
+        with refcount 1, charged to ``cls`` when the pool is
+        class-partitioned.
 
-        ``free_pages >= n`` is the complete admission condition — there
-        is no fragmentation failure mode to account for.
+        Without quotas ``free_pages >= n`` is the complete admission
+        condition — there is no fragmentation failure mode to account
+        for.  With quotas the class constraints of
+        :meth:`quota_violation` apply on top.
         """
         if n > len(self._free):
             raise MemoryError(
                 f"page pool exhausted: need {n}, free {len(self._free)} "
                 f"of {self.num_pages}")
+        cls = self._coerce_cls(cls)
+        if self.class_quotas:
+            msg = self.quota_violation({cls: int(n)})
+            if msg is not None:
+                raise MemoryError(
+                    f"class quota exceeded: {msg} (need {n} for "
+                    f"{cls.name.lower()})")
         pages = [self._free.pop() for _ in range(n)]
         own = self._pages.setdefault(owner, [])
         for p in pages:
@@ -116,7 +264,18 @@ class PageAllocator:
             self._owner[p] = owner
             self._ref[p] = 1
             own.append(p)
+            self._charge(p, cls)
         return pages
+
+    def _charge(self, page: int, cls: Optional[PriorityClass]) -> None:
+        self._cls[page] = cls
+        if cls is not None:
+            self._cls_used[cls] += 1
+
+    def _uncharge(self, page: int) -> None:
+        cls = self._cls.pop(page, None)
+        if cls is not None:
+            self._cls_used[cls] -= 1
 
     def share(self, pages: List[int]) -> None:
         """Add one reference to each page (all must be allocated).
@@ -158,6 +317,7 @@ class PageAllocator:
             owner = self._owner.pop(p)
             self._pages[owner].remove(p)
             self._free.append(p)
+            self._uncharge(p)
 
     def transfer(self, pages: List[int], owner) -> None:
         """Re-own allocated pages to ``owner`` (refcounts untouched).
@@ -194,8 +354,9 @@ class PageAllocator:
         self.free(pages)
         return pages
 
-    def adopt(self, pages: List[int], owner=None) -> None:
-        """Claim *specific* free page ids for ``owner`` (refcount 1).
+    def adopt(self, pages: List[int], owner=None, cls=None) -> None:
+        """Claim *specific* free page ids for ``owner`` (refcount 1),
+        charged to ``cls`` when the pool is class-partitioned.
 
         The restore-side primitive: re-attaching allocator state from an
         engine snapshot (or migrating pages between pools) must mark the
@@ -211,6 +372,13 @@ class PageAllocator:
                 raise ValueError(f"page {p} is already assigned")
             if p not in free_set:
                 raise ValueError(f"page {p} is not a valid free page")
+        cls = self._coerce_cls(cls)
+        if self.class_quotas:
+            msg = self.quota_violation({cls: len(pages)})
+            if msg is not None:
+                raise MemoryError(
+                    f"class quota exceeded: {msg} (adopting "
+                    f"{len(pages)} for {cls.name.lower()})")
         taken = set(pages)
         self._free = [p for p in self._free if p not in taken]
         own = self._pages.setdefault(owner, [])
@@ -218,6 +386,7 @@ class PageAllocator:
             self._owner[p] = owner
             self._ref[p] = 1
             own.append(p)
+            self._charge(p, cls)
 
     # -- snapshot / restore -------------------------------------------------
     def state(self) -> dict:
@@ -227,7 +396,9 @@ class PageAllocator:
         return {"free": list(self._free), "owner": dict(self._owner),
                 "ref": dict(self._ref),
                 "pages": {o: list(ps) for o, ps in self._pages.items()
-                          if ps}}
+                          if ps},
+                "cls": {p: (c.name if c is not None else None)
+                        for p, c in self._cls.items()}}
 
     def load_state(self, state: dict) -> None:
         """Restore :meth:`state` output; validates the page-id partition
@@ -258,3 +429,13 @@ class PageAllocator:
                                  "the owner map")
         self._free, self._owner = free, owner
         self._ref, self._pages = ref, pages
+        # class charges: legacy snapshots (pre-quota) carry none — their
+        # pages restore unclassified, which under-counts floors/caps
+        # until those requests retire (documented, conservative for the
+        # restored requests themselves, never for the floor holders)
+        cls_map = state.get("cls") or {}
+        self._cls = {}
+        self._cls_used = {c: 0 for c in PriorityClass}
+        for p in owner:
+            name = cls_map.get(p)
+            self._charge(p, PriorityClass[name] if name else None)

@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .lifecycle import PriorityClass, coerce_priority
+
 __all__ = ["PrefixIndex", "PREFIX_OWNER", "ROOT"]
 
 #: Allocator owner tag for pages held by the index.  Publication
@@ -46,16 +48,18 @@ ROOT = b""
 
 
 class _Entry:
-    __slots__ = ("key", "parent", "tokens", "page", "depth", "used")
+    __slots__ = ("key", "parent", "tokens", "page", "depth", "used", "cls")
 
     def __init__(self, key: bytes, parent: bytes, tokens: np.ndarray,
-                 page: int, depth: int, used: int):
+                 page: int, depth: int, used: int,
+                 cls: PriorityClass = PriorityClass.STANDARD):
         self.key = key
         self.parent = parent            # chain key of the previous chunk
         self.tokens = tokens            # this chunk's tokens (int32, page_size)
         self.page = page                # physical page id holding the KV rows
         self.depth = depth              # chunk index (0 = first page)
         self.used = used                # LRU tick of last match/publish
+        self.cls = cls                  # class of the publishing request
 
 
 class PrefixIndex:
@@ -139,8 +143,10 @@ class PrefixIndex:
 
     # -- mutation -----------------------------------------------------------
     def put(self, key: bytes, parent: bytes, tokens: np.ndarray,
-            page: int, depth: int) -> None:
-        """Register ``page`` as the committed KV of the chunk ``key``.
+            page: int, depth: int, cls=None) -> None:
+        """Register ``page`` as the committed KV of the chunk ``key``,
+        remembering the publishing request's priority class (eviction
+        dismantles less-important classes first).
 
         The caller must already hold a reference for the index (share +
         transfer to :data:`PREFIX_OWNER` in the allocator) — the index
@@ -149,9 +155,12 @@ class PrefixIndex:
         if key in self._by_key:
             raise ValueError("chain key already indexed")
         self._tick += 1
+        # a private copy, never a view: callers pass slices of mutable
+        # engine buffers (hist), and an aliased entry would silently
+        # stop matching the moment the slot is recycled
         self._by_key[key] = _Entry(
-            key, parent, np.ascontiguousarray(tokens, np.int32),
-            int(page), int(depth), self._tick)
+            key, parent, np.array(tokens, np.int32, copy=True),
+            int(page), int(depth), self._tick, coerce_priority(cls))
 
     def touch(self, key: bytes) -> bool:
         """Refresh ``key``'s LRU tick; False if not indexed."""
@@ -163,20 +172,26 @@ class PrefixIndex:
         return True
 
     def evict(self, allocator, want: int,
-              protect: Optional[set] = None) -> int:
-        """Free up to ``want`` pages by dropping index entries, oldest
-        first (deepest-first within an LRU tie, so chains dismantle
+              protect: Optional[set] = None, floor=None) -> int:
+        """Free up to ``want`` pages by dropping index entries,
+        least-important class first, oldest first within a class
+        (deepest-first within an LRU tie, so chains dismantle
         leaf-to-root).  Only entries whose page the index holds the
         *sole* reference on are eligible — a page mapped into any live
-        slot (refcount > 1) or listed in ``protect`` stays.  Returns
-        the number of pages actually freed."""
+        slot (refcount > 1) or listed in ``protect`` stays.  ``floor``
+        (a priority class) restricts eligibility to entries of that
+        class or *less* important — a BATCH admission may never evict
+        the REALTIME working set.  Returns the number of pages actually
+        freed."""
         if want <= 0:
             return 0
         protect = protect or set()
+        floor_v = None if floor is None else int(coerce_priority(floor))
         victims = sorted(
             (e for e in self._by_key.values()
-             if allocator.refcount(e.page) == 1 and e.page not in protect),
-            key=lambda e: (e.used, -e.depth))
+             if allocator.refcount(e.page) == 1 and e.page not in protect
+             and (floor_v is None or int(e.cls) >= floor_v)),
+            key=lambda e: (-int(e.cls), e.used, -e.depth))
         freed = 0
         # One entry per page by construction, but a child may become
         # sole-referenced only mid-sweep; the sort order guarantees a
@@ -202,7 +217,7 @@ class PrefixIndex:
             "entries": [
                 {"key": e.key, "parent": e.parent,
                  "tokens": e.tokens.copy(), "page": e.page,
-                 "depth": e.depth, "used": e.used}
+                 "depth": e.depth, "used": e.used, "cls": e.cls.name}
                 for e in self._by_key.values()],
         }
 
@@ -212,7 +227,10 @@ class PrefixIndex:
         self._tick = int(state["tick"])
         self._by_key = {}
         for d in state["entries"]:
+            # pre-quota snapshots carry no class: STANDARD, the same
+            # default coerce_priority applies to unlabelled requests
             self._by_key[d["key"]] = _Entry(
                 d["key"], d["parent"],
                 np.ascontiguousarray(d["tokens"], np.int32),
-                int(d["page"]), int(d["depth"]), int(d["used"]))
+                int(d["page"]), int(d["depth"]), int(d["used"]),
+                PriorityClass[d.get("cls", "STANDARD")])

@@ -107,7 +107,8 @@ from ..nn.context import QuantContext
 from ..train.step import (build_decode_loop, build_prefill_step,
                           build_serve_step, build_spec_decode_loop)
 from .lifecycle import (PriorityClass, RequestStatus, coerce_priority,
-                        normalize_slo_targets, request_row, validate_request)
+                        normalize_class_quotas, normalize_slo_targets,
+                        request_row, validate_request)
 from .lifecycle import now as _now
 from .mesh import make_local_mesh
 from .paging import PageAllocator
@@ -180,9 +181,9 @@ class Engine:
                  spec_k: int = 4, spec_draft=None, spec_ngram: int = 2,
                  drafter_fn=None, preempt: bool = False,
                  preempt_after: int = 2, shed_threshold=None,
-                 slo_targets=None, fault_injector=None, recover=None,
-                 max_replays: int = 8, straggler=None, clock=None,
-                 durable_dir=None, snapshot_every: int = 8):
+                 slo_targets=None, class_quotas=None, fault_injector=None,
+                 recover=None, max_replays: int = 8, straggler=None,
+                 clock=None, durable_dir=None, snapshot_every: int = 8):
         self.cfg, self.ctx, self.mesh = cfg, ctx, mesh
         self.batch, self.max_len = batch, max_len
         self.prefill_chunk = max(1, prefill_chunk)
@@ -242,13 +243,18 @@ class Engine:
         if self.spec:
             margin = max(margin, self.spec_k + 2)
         self.paged = bool(paged)
+        if class_quotas and not paged:
+            raise ValueError(
+                "class_quotas need the paged cache: quotas partition the "
+                "page pool, and dense slots have no pool to partition")
         if self.paged:
             ps = max(1, int(page_size))
             if num_pages is None:
                 # dense-equivalent HBM budget by default; the win comes
                 # from passing a smaller pool (or a bigger batch)
                 num_pages = -(-(batch * max_len) // ps)
-            self.allocator = PageAllocator(num_pages, ps)
+            self.allocator = PageAllocator(num_pages, ps,
+                                           class_quotas=class_quotas)
             self._trash = num_pages          # reserved garbage page id
             # table width covers every reachable write position: decode
             # holds a dead lane at pos <= max_len, chunked prefill's
@@ -429,7 +435,7 @@ class Engine:
                          "shed_spec_rounds": 0, "straggler_blocks": 0,
                          "prefix_hits": 0, "prefix_hit_pages": 0,
                          "prefix_tokens_saved": 0, "cow_copies": 0,
-                         "spec_k_rejits": 0}
+                         "spec_k_rejits": 0, "recoveries": 0}
         #: one dict per retired request: ttft_s, gen_tokens, decode_s
         self.request_log: List[dict] = []
         self._req_meta: Dict[int, dict] = {}    # slot -> live request row
@@ -467,6 +473,11 @@ class Engine:
         self.straggler = (StragglerMonitor() if straggler is None
                           else straggler)
         self.clock = _now if clock is None else clock
+        self._t_start = self.clock()        # uptime_s origin
+        #: journal records the hot standby has not applied yet; ``None``
+        #: until a fleet heartbeat feeds it (standalone engines have no
+        #: standby to lag), like ``decode_tok_per_s`` when unmeasurable
+        self.journal_lag_records = None
         #: terminal request outcomes: req_id -> {"status", "tokens"}
         self.results: Dict[int, dict] = {}
         self._next_id = 0
@@ -493,7 +504,12 @@ class Engine:
         self._journal = None
         self._jmute = 0             # >0: nested/replayed calls don't log
         self._durable_dir = None
-        self.snapshot_every = max(0, int(snapshot_every))
+        if int(snapshot_every) < 0:
+            raise ValueError(
+                f"snapshot_every must be >= 0 (got {snapshot_every}); "
+                f"0 disables periodic snapshots, a negative period has "
+                f"no meaning")
+        self.snapshot_every = int(snapshot_every)
         self._durable_step = 0
         self._blocks_since_snap = 0
         if durable_dir is not None:
@@ -667,6 +683,9 @@ class Engine:
                         info["shared"] + ([info["cow"]]
                                           if info["cow"] is not None
                                           else []))
+            cls_of = {s: coerce_priority(per_slot(priority, s, None))
+                      for s in reqs}
+            floor = min(cls_of.values())
             needs = {s: self.allocator.pages_for(stop_of(s, p.shape[0]))
                      - len(prefix_of[s]["shared"] if s in prefix_of else ())
                      for s, p in reqs.items()}
@@ -679,14 +698,16 @@ class Engine:
             if short() > 0 and self.prefix_cache:
                 # cold index entries yield before any running request
                 # does — dropping unreferenced cached prefixes is free
-                self.prefix_index.evict(self.allocator, short())
+                # (class floor: a cached chunk more important than every
+                # request being admitted stays)
+                self.prefix_index.evict(
+                    self.allocator, short(),
+                    floor=floor if self.allocator.class_quotas else None)
             if short() > 0 and self.preempt:
                 # graceful degradation instead of MemoryError: spill
                 # running victims until the admission fits — but only
                 # victims at or below the most important class being
                 # admitted (a BATCH add must never spill REALTIME work)
-                floor = min(coerce_priority(per_slot(priority, s, None))
-                            for s in reqs)
                 self._preempt_until(sum(needs.values()) - recyclable,
                                     exclude=set(reqs), floor=floor)
             if short() > 0:
@@ -699,6 +720,28 @@ class Engine:
                     f"{self.allocator.free_pages} of "
                     f"{self.allocator.num_pages} (queue through submit() "
                     f"to wait for pages)")
+            if self.allocator.class_quotas:
+                # group quota preflight BEFORE any state moves (same
+                # atomicity rule as the pool check above): count the
+                # pages the recycle loop below will release as credit
+                needs_cls: Dict[PriorityClass, int] = {}
+                for s in reqs:
+                    needs_cls[cls_of[s]] = (needs_cls.get(cls_of[s], 0)
+                                            + needs[s])
+                release = [p for s in reqs for p in
+                           (self._slot_shared.get(s, [])
+                            if self.prefix_cache else [])
+                           + self._slot_pages.get(s, [])]
+                freed, uncharge = self.allocator.release_credit(release)
+                qmsg = self.allocator.quota_violation(
+                    needs_cls, freed=freed, uncharge=uncharge)
+                if qmsg is not None:
+                    for h in held.values():
+                        if h:
+                            self.allocator.free(h)
+                    raise MemoryError(
+                        f"class quota exceeded: {qmsg} (queue through "
+                        f"submit() to wait)")
             for s in reqs:
                 # direct slot-addressed admission over a slot that still
                 # holds pages (no finish() in between) recycles them
@@ -710,7 +753,8 @@ class Engine:
             for s in reqs:
                 info = prefix_of.get(s)
                 shared = info["shared"] if info else []
-                pages = self.allocator.alloc(needs[s], owner=s)
+                pages = self.allocator.alloc(needs[s], owner=s,
+                                             cls=cls_of[s])
                 self._slot_pages[s] = pages
                 self.block_tables[s, :] = self._trash
                 self.block_tables[s, :len(shared)] = shared
@@ -874,7 +918,10 @@ class Engine:
                 self.allocator.transfer([page], PREFIX_OWNER)
                 self._slot_pages[slot].remove(page)
                 self._slot_shared[slot].append(page)
-                self.prefix_index.put(key, parent, chunk, page, depth)
+                meta = self._req_meta.get(slot)
+                self.prefix_index.put(
+                    key, parent, chunk, page, depth,
+                    cls=meta["priority"] if meta else None)
             depth, parent = depth + 1, key
         self._pub[slot] = (depth, parent)
 
@@ -902,7 +949,9 @@ class Engine:
                         or self.allocator.refcount(page) <= 1
                         or page in self._slot_pages.get(s, ())):
                     continue
-                fresh = self.allocator.alloc(1, owner=s)[0]
+                meta = self._req_meta.get(s)
+                fresh = self.allocator.alloc(
+                    1, owner=s, cls=meta["priority"] if meta else None)[0]
                 self.cache = self._copy_page(self.cache, jnp.int32(page),
                                              jnp.int32(fresh))
                 self.block_tables[s, e] = fresh
@@ -968,6 +1017,14 @@ class Engine:
                 raise ValueError(
                     f"request needs {need} pages but the pool only has "
                     f"{self.allocator.num_pages}; raise num_pages or "
+                    f"lower gen_len")
+            cap = self.allocator.cap_pages(req["priority"])
+            if cap is not None and need > cap:
+                # same head-of-line-forever shape, quota edition
+                raise ValueError(
+                    f"request needs {need} pages but class "
+                    f"{req['priority'].name.lower()} is capped at {cap} "
+                    f"of {self.allocator.num_pages}; raise the cap or "
                     f"lower gen_len")
         self.waiting.append(req)
         if self._journal is not None and self._jmute == 0:
@@ -1129,6 +1186,7 @@ class Engine:
                          "priority": {}, "_t_submit": {}, "_ids": {},
                          "_deadlines": {}, "_prefix": {}}
         planned = 0
+        planned_cls: Dict[PriorityClass, int] = {}
         resumed = 0
         placed: set = set()
         while self.waiting and free:
@@ -1146,21 +1204,40 @@ class Engine:
                         # admission costs only the suffix's fresh pages
                         pre = self._match_prefix(req["prompt"])
                         need -= len(pre["shared"])
-                if not self.allocator.can_alloc(planned + need):
+                fits = self.allocator.can_alloc(planned + need)
+                if fits and self.allocator.class_quotas:
+                    # the head waits (no exception) when its class is
+                    # over cap or the free pages belong to another
+                    # class's reserved floor — exactly how a pool-short
+                    # head waits for pages
+                    want = dict(planned_cls)
+                    want[cls] = want.get(cls, 0) + need
+                    fits = self.allocator.quota_violation(want) is None
+                if not fits:
                     if self.prefix_cache:
                         # drop cold cached prefixes before touching any
                         # running request.  Pages already promised this
                         # sweep are share()-held (refcount >= 2), so
                         # the eviction cannot take them; the CURRENT
                         # head's match is not held yet and is protected
-                        # explicitly.
+                        # explicitly.  Class floor: the head may only
+                        # evict chunks of its own class or less
+                        # important ones.
                         mine = set(pre["shared"]) if pre else set()
                         if pre and pre["cow"] is not None:
                             mine.add(pre["cow"])
+                        # the sweep must cover whichever constraint
+                        # actually blocks the head: the pool shortfall,
+                        # or — quota-blocked with a free pool — the
+                        # class's own published pages holding its budget
+                        want = max(
+                            planned + need - self.allocator.free_pages,
+                            self.allocator.quota_evict_want(
+                                cls, need, planned=planned_cls))
                         if self.prefix_index.evict(
-                                self.allocator,
-                                planned + need - self.allocator.free_pages,
-                                protect=mine):
+                                self.allocator, want, protect=mine,
+                                floor=(cls if self.allocator.class_quotas
+                                       else None)):
                             continue    # freed pages; recheck the head
                     if self._maybe_preempt(req, cls, planned + need, free,
                                            exclude=placed):
@@ -1184,6 +1261,7 @@ class Engine:
                 continue
             if self.paged:
                 planned += need
+                planned_cls[cls] = planned_cls.get(cls, 0) + need
             if pre is not None:
                 # hold the matched pages NOW: a later head's eviction
                 # (or a direct add elsewhere) must not free them while
@@ -1259,13 +1337,17 @@ class Engine:
         if rounds < self.preempt_after and not self._past_ttft_slo(req, cls):
             return False
         progressed = False
+        # quota-aware fit: charge the whole plan to the head's class —
+        # conservative when the sweep's earlier admissions were other
+        # classes (may spill one victim more than strictly needed),
+        # never permissive
         for v in self._victim_order(exclude, floor=cls):
-            if self.allocator.can_alloc(need):
+            if self.allocator.can_alloc(need, cls=cls):
                 break
             self._preempt(v)
             free.append(v)          # the victim's lane is admittable now
             progressed = True
-        return progressed and self.allocator.can_alloc(need)
+        return progressed and self.allocator.can_alloc(need, cls=cls)
 
     def _past_ttft_slo(self, req: dict, cls: PriorityClass) -> bool:
         """Has this queued record already blown its class TTFT target?
@@ -1388,7 +1470,8 @@ class Engine:
         ``pos``, the held token, partial outputs and drafting history
         pick up exactly where the spill happened — a resumed greedy
         stream is byte-identical to an unpreempted one."""
-        pages = self.allocator.alloc(rec["n_pages"], owner=slot)
+        pages = self.allocator.alloc(rec["n_pages"], owner=slot,
+                                     cls=self._rec_priority(rec))
         self._slot_pages[slot] = pages
         if self.prefix_cache:
             # a resumed request owns ALL its pages privately (the spill
@@ -2121,6 +2204,7 @@ class Engine:
         self._durable_dir = str(directory)
         self._journal = log
         self._blocks_since_snap = 0
+        self.counters["recoveries"] += 1
         return {"snapshot_step": step, "replayed": len(records)}
 
     def _replay_event(self, rec: tuple) -> None:
@@ -2240,6 +2324,14 @@ class Engine:
             out[k] = c[k]
         out["straggler_events"] = (len(self.straggler.events)
                                    if self.straggler is not None else 0)
+        # fleet-facing health counters: how long this engine has been
+        # up, how many times it was rebuilt from a journal (recover /
+        # promotion), and how far a hot standby trails its journal
+        # (None = no fleet heartbeat feeds it, like decode_tok_per_s
+        # when unmeasurable)
+        out["uptime_s"] = float(self.clock() - self._t_start)
+        out["recoveries"] = c["recoveries"]
+        out["journal_lag_records"] = self.journal_lag_records
         # per-class SLO telemetry: lifecycle counters plus latency
         # percentiles over the class's retired rows — only classes
         # with any activity appear, so single-class runs stay tidy
@@ -2403,6 +2495,27 @@ def main(argv=None):
                     help="blocks between durable snapshots "
                          "(--durable-dir mode); smaller = shorter "
                          "replay tail, more snapshot IO")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a Fleet of N engine replicas "
+                         "with class-aware least-pressure routing and "
+                         "heartbeat failure detection (1 = single "
+                         "engine, no fleet layer)")
+    ap.add_argument("--standby-dir", default=None,
+                    help="journal-shipped hot standby (implies a "
+                         "fleet): the primary journals under this "
+                         "directory, a warm standby tails it within "
+                         "--replicas' bounded lag, and on primary "
+                         "death the fleet promotes the standby and "
+                         "resumes every in-flight stream "
+                         "byte-identically")
+    ap.add_argument("--class-quota", action="append", default=None,
+                    metavar="CLASS:KIND=FRACTION",
+                    help="partition the page pool per SLO class "
+                         "(repeatable; needs --paged): e.g. "
+                         "'realtime:floor=0.25' reserves a quarter of "
+                         "the pages for realtime, 'batch:cap=0.5' "
+                         "caps batch at half — a batch flood can "
+                         "then never evict the realtime working set")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -2435,26 +2548,43 @@ def main(argv=None):
         def knob(v):
             return "auto" if v == "auto" else int(v)
 
-        eng = Engine(cfg, ctx, params, mesh, batch=args.batch,
-                     max_len=max_len, kv_bits=args.kv_bits,
-                     prefill_chunk=args.prefill_chunk, seed=args.seed,
-                     paged=args.paged, page_size=args.page_size,
-                     num_pages=args.num_pages,
-                     kv_split=knob(args.kv_split),
-                     pages_per_step=knob(args.pages_per_step),
-                     prefix_cache=args.prefix_cache,
-                     autotune=args.autotune,
-                     spec=args.spec,
-                     spec_k=args.spec_k, spec_draft=spec_draft,
-                     spec_ngram=args.spec_ngram, preempt=args.preempt,
-                     shed_threshold=args.shed_threshold,
-                     slo_targets=(
-                         {"realtime": {"ttft_s": args.slo_ttft_s,
-                                       "tok_per_s": args.slo_tok_per_s}}
-                         if (args.slo_ttft_s is not None
-                             or args.slo_tok_per_s is not None) else None),
-                     durable_dir=args.durable_dir,
-                     snapshot_every=args.snapshot_every)
+        eng_kw = dict(batch=args.batch,
+                      max_len=max_len, kv_bits=args.kv_bits,
+                      prefill_chunk=args.prefill_chunk, seed=args.seed,
+                      paged=args.paged, page_size=args.page_size,
+                      num_pages=args.num_pages,
+                      kv_split=knob(args.kv_split),
+                      pages_per_step=knob(args.pages_per_step),
+                      prefix_cache=args.prefix_cache,
+                      autotune=args.autotune,
+                      spec=args.spec,
+                      spec_k=args.spec_k, spec_draft=spec_draft,
+                      spec_ngram=args.spec_ngram, preempt=args.preempt,
+                      shed_threshold=args.shed_threshold,
+                      class_quotas=_parse_class_quotas(args.class_quota),
+                      slo_targets=(
+                          {"realtime": {"ttft_s": args.slo_ttft_s,
+                                        "tok_per_s": args.slo_tok_per_s}}
+                          if (args.slo_ttft_s is not None
+                              or args.slo_tok_per_s is not None) else None),
+                      durable_dir=args.durable_dir,
+                      snapshot_every=args.snapshot_every)
+
+        def make_engine(**over):
+            return Engine(cfg, ctx, params, mesh, **dict(eng_kw, **over))
+
+        fleet = None
+        if args.replicas > 1 or args.standby_dir is not None:
+            from .fleet import Fleet
+            # the fleet owns durability (primary journals under
+            # --standby-dir); replicas sharing one --durable-dir would
+            # clobber each other's journal
+            eng_kw["durable_dir"] = None
+            fleet = Fleet(make_engine, args.replicas,
+                          standby_dir=args.standby_dir)
+            eng = fleet.replicas[0]
+        else:
+            eng = make_engine()
 
         src = SyntheticLM(cfg.vocab, seed=args.seed)
         prompts = [src.tokens(i, 1, args.prompt_len)[0, :-1]
@@ -2468,16 +2598,30 @@ def main(argv=None):
         # is submitted up front; step_many retires finished slots and
         # admits whatever the freed lanes (and, paged, freed pages)
         # cover, one block's latency after they free up
-        for p in prompts:
-            eng.submit(p, gen_len=args.gen_len,
-                       temperature=args.temperature, top_k=args.top_k,
-                       deadline_s=args.deadline_s,
-                       priority=args.priority_class)
-        eng.try_admit()
-        while eng.live.any() or eng.waiting:
-            _, block_live = eng.step_many(block)
-            gen_tokens += int(block_live.sum())
-        eng.retire_finished()
+        if fleet is not None:
+            for p in prompts:
+                fleet.submit(p, gen_len=args.gen_len,
+                             temperature=args.temperature,
+                             top_k=args.top_k,
+                             deadline_s=args.deadline_s,
+                             priority=args.priority_class)
+            fleet.try_admit()
+            fleet.drain(block=block)
+            eng = fleet.replicas[0]     # promotion may have swapped it
+            gen_tokens = sum(
+                s["gen_tokens"] for s in fleet.stats()["per_replica"]
+                if s is not None)
+        else:
+            for p in prompts:
+                eng.submit(p, gen_len=args.gen_len,
+                           temperature=args.temperature, top_k=args.top_k,
+                           deadline_s=args.deadline_s,
+                           priority=args.priority_class)
+            eng.try_admit()
+            while eng.live.any() or eng.waiting:
+                _, block_live = eng.step_many(block)
+                gen_tokens += int(block_live.sum())
+            eng.retire_finished()
         dt = time.perf_counter() - t0
         paged_note = (f" paged(ps={eng.allocator.page_size},"
                       f"pages={eng.allocator.num_pages},"
@@ -2488,13 +2632,44 @@ def main(argv=None):
                      f"draft={args.spec_draft or 'ngram'})"
                      if args.spec else "")
         st = eng.stats()
-        print(f"served {len(eng.done)} requests, {gen_tokens} tokens in "
+        served = (len(fleet.results) if fleet is not None
+                  else len(eng.done))
+        print(f"served {served} requests, {gen_tokens} tokens in "
               f"{dt:.2f}s ({gen_tokens / dt:.1f} tok/s), "
               f"quant={args.quant} lut={args.lut} kv_bits={args.kv_bits} "
               f"decode_block={block}{paged_note}{spec_note} "
               f"peak_live={st['peak_live']}")
+        if fleet is not None:
+            fs = fleet.stats()
+            print(f"-- fleet: {args.replicas} replicas "
+                  f"(states {','.join(fs['states'])}), "
+                  f"standby={'on' if fs['standby'] else 'off'}, "
+                  f"deaths={fs['deaths']} promotions={fs['promotions']} "
+                  f"redispatched={fs['redispatched']}")
         print_stats_table(st)
-    return eng.done
+    return fleet.results if fleet is not None else eng.done
+
+
+def _parse_class_quotas(specs) -> Optional[dict]:
+    """``--class-quota CLASS:KIND=FRACTION`` strings -> the nested dict
+    :func:`normalize_class_quotas` validates (None when no flag given)."""
+    if not specs:
+        return None
+    quotas: Dict[str, Dict[str, float]] = {}
+    for spec in specs:
+        head, sep, val = spec.partition("=")
+        cls, csep, kind = head.partition(":")
+        if not sep or not csep or not cls or not kind:
+            raise SystemExit(
+                f"--class-quota {spec!r}: expected CLASS:KIND=FRACTION "
+                f"(e.g. realtime:floor=0.25)")
+        try:
+            frac = float(val)
+        except ValueError:
+            raise SystemExit(
+                f"--class-quota {spec!r}: fraction {val!r} is not a number")
+        quotas.setdefault(cls, {})[kind] = frac
+    return normalize_class_quotas(quotas)
 
 
 def print_stats_table(st: dict) -> None:
@@ -2508,6 +2683,8 @@ def print_stats_table(st: dict) -> None:
             ("decode tok/s", "n/a" if tps is None else f"{tps:.1f}")]
     if "ttft_mean_s" in st:
         rows.append(("mean TTFT", f"{st['ttft_mean_s'] * 1e3:.1f} ms"))
+    if "uptime_s" in st:
+        rows.append(("uptime", f"{st['uptime_s']:.2f} s"))
     if "accepted_per_step" in st:
         rows.append(("verify rounds", f"{st['verify_steps']}"))
         rows.append(("drafts accepted/round",
@@ -2535,6 +2712,8 @@ def print_stats_table(st: dict) -> None:
                        ("timeouts", "timeouts"),
                        ("failures", "failures"),
                        ("replays", "fault replays"),
+                       ("recoveries", "recoveries"),
+                       ("journal_lag_records", "journal lag (records)"),
                        ("shed_spec_rounds", "spec rounds shed"),
                        ("straggler_blocks", "straggler blocks")):
         if st.get(key):

@@ -1,0 +1,531 @@
+"""Fleet conformance: hot standby, SLO routing, class-partitioned pools.
+
+The PR 10 tentpole.  A :class:`repro.launch.fleet.Fleet` fronts N
+engine replicas behind one submit/step/results surface; pinned here:
+
+* **Boundary validation** — replica counts, lag bounds, quota
+  fractions, snapshot periods and heartbeat thresholds are rejected at
+  construction with messages naming the constraint (the
+  ``validate_request`` convention, per knob).
+* **Class-partitioned page pools** — per-class floors and caps at the
+  allocator, enforced at admission and by eviction priority in the
+  prefix index: a BATCH flood can neither take REALTIME's reserved
+  pages nor evict its prefix working set.
+* **Heartbeat hysteresis** — alive → suspect → dead escalation over
+  block-progress beats; dead is terminal, recovery needs consecutive
+  healthy beats, and an alternating replica still converges to dead.
+* **Promotion byte-identity** — the primary killed at EVERY fleet
+  round; the journal-tailing standby finishes the replay and every
+  completed stream equals the uninterrupted fleet's, exactly once.
+* **Exactly-once re-dispatch** — a dead secondary's journaled-but-
+  unfinished requests land on survivors once (REALTIME victims first),
+  with the same total multiset of completed streams.
+* **Bounded standby lag** — an injected lag spike defers at most one
+  sync and never breaches ``max_standby_lag``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.dist.constrain import use_mesh
+from repro.ft import FleetFaultInjector, ReplicaHeartbeat
+from repro.launch.fleet import Fleet
+from repro.launch.lifecycle import (PriorityClass, RequestStatus,
+                                    normalize_class_quotas)
+from repro.launch.paging import PageAllocator
+from repro.launch.serve import Engine, _parse_class_quotas
+
+from test_paged_serving import _prompts, _setup
+
+PAGED = dict(paged=True, page_size=4, num_pages=16)
+RT, SD, BA = (PriorityClass.REALTIME, PriorityClass.STANDARD,
+              PriorityClass.BATCH)
+
+
+def _factory(setup, **base):
+    cfg, ctx, params, mesh = setup
+    base.setdefault("batch", 2)
+    base.setdefault("max_len", 32)
+
+    def make_engine(**over):
+        return Engine(cfg, ctx, params, mesh, **dict(base, **over))
+
+    return make_engine
+
+
+def _run_fleet(setup, prompts, prios, *, n=1, standby_dir=None, inj=None,
+               gen_len=6, block=4, fleet_kw=None, **eng_kw):
+    with use_mesh(setup[3]):
+        fl = Fleet(_factory(setup, **eng_kw), n,
+                   standby_dir=None if standby_dir is None
+                   else str(standby_dir),
+                   fault_injector=inj, **(fleet_kw or {}))
+        fids = [fl.submit(p, gen_len=gen_len, priority=prios[i])
+                for i, p in enumerate(prompts)]
+        fl.drain(block=block)
+    return fl, fids
+
+
+# ===========================================================================
+class TestBoundaryValidation:
+    """Every fleet-layer knob rejects nonsense at construction, with a
+    message naming the constraint (the validate_request convention)."""
+
+    def test_non_positive_replicas(self):
+        for n in (0, -1):
+            with pytest.raises(ValueError, match="n_replicas"):
+                Fleet(lambda **kw: None, n)
+
+    def test_negative_standby_lag(self):
+        with pytest.raises(ValueError, match="max_standby_lag"):
+            Fleet(lambda **kw: None, 1, max_standby_lag=-1)
+
+    @pytest.mark.parametrize("frac", [0.0, -0.25, 1.5])
+    def test_quota_fraction_outside_unit_interval(self, frac):
+        with pytest.raises(ValueError, match=r"\(0, 1\]"):
+            normalize_class_quotas({"realtime": {"floor": frac}})
+
+    def test_quota_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown class-quota keys"):
+            normalize_class_quotas({"realtime": {"ceiling": 0.5}})
+
+    def test_quota_floor_above_cap(self):
+        with pytest.raises(ValueError, match="floor"):
+            normalize_class_quotas({"batch": {"floor": 0.8, "cap": 0.5}})
+
+    def test_quota_floors_oversubscribed(self):
+        with pytest.raises(ValueError, match="floor"):
+            normalize_class_quotas({"realtime": {"floor": 0.7},
+                                    "batch": {"floor": 0.7}})
+
+    def test_heartbeat_thresholds(self):
+        with pytest.raises(ValueError, match="positive"):
+            ReplicaHeartbeat(suspect_after=0)
+        with pytest.raises(ValueError, match="dead_after"):
+            ReplicaHeartbeat(suspect_after=3, dead_after=3)
+
+    def test_negative_snapshot_every(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            with pytest.raises(ValueError, match="snapshot_every"):
+                _factory(setup)(snapshot_every=-1)
+
+    def test_class_quotas_need_paged(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            with pytest.raises(ValueError, match="paged"):
+                _factory(setup)(class_quotas={"batch": {"cap": 0.5}})
+
+    def test_request_over_class_cap_is_rejected(self):
+        """A request that could NEVER fit its class cap would head-of-
+        line block forever — refused at submit, like the pool bound."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _factory(setup)(
+                **PAGED, class_quotas={"batch": {"cap": 0.25}})
+            with pytest.raises(ValueError, match="capped"):
+                eng.submit(_prompts(setup[0], (9,), seed=1)[0],
+                           gen_len=20, priority="batch")
+
+    def test_cli_quota_spec_parsing(self):
+        assert _parse_class_quotas(None) is None
+        q = _parse_class_quotas(["realtime:floor=0.25", "batch:cap=0.5"])
+        assert q[RT]["floor"] == 0.25 and q[BA]["cap"] == 0.5
+        for bad in ["realtime=0.25", "realtime:floor", "rt:floor=x"]:
+            with pytest.raises(SystemExit):
+                _parse_class_quotas([bad])
+
+
+# ===========================================================================
+class TestAllocatorQuotas:
+    def test_floor_rounds_up_cap_rounds_down_but_never_zero(self):
+        a = PageAllocator(10, 4, class_quotas={
+            "realtime": {"floor": 0.25}, "batch": {"cap": 0.05}})
+        assert a.floor_pages(RT) == 3          # ceil(2.5)
+        assert a.cap_pages(BA) == 1            # max(1, floor(0.5))
+        assert a.cap_pages(RT) is None
+        assert a.floor_pages(BA) == 0
+
+    def test_unpartitioned_pool_tracks_nothing(self):
+        a = PageAllocator(8, 4)
+        pages = a.alloc(3, owner=0, cls="batch")
+        assert a.class_used(BA) == 0           # legacy: no charges
+        assert a.can_alloc(5, cls="realtime")
+        a.free(pages)
+
+    def test_charge_follows_page_lifetime_not_ownership(self):
+        a = PageAllocator(8, 4, class_quotas={"realtime": {"floor": 0.5}})
+        pages = a.alloc(2, owner=0, cls="realtime")
+        assert a.class_used(RT) == 2
+        a.share(pages)
+        a.transfer(pages, "__prefix__")        # publication keeps charge
+        assert a.class_used(RT) == 2
+        a.free(pages)                          # drops to refcount 1
+        assert a.class_used(RT) == 2
+        a.free(pages)                          # back to the pool
+        assert a.class_used(RT) == 0
+
+    def test_floor_reservation_blocks_other_classes(self):
+        a = PageAllocator(8, 4, class_quotas={"realtime": {"floor": 0.5}})
+        assert not a.can_alloc(5, cls="batch")  # would leave 3 < 4 floor
+        assert a.can_alloc(4, cls="batch")
+        assert a.can_alloc(8, cls="realtime")   # the floor's own class may
+        with pytest.raises(MemoryError, match="reserved"):
+            a.alloc(5, owner=0, cls="batch")
+
+    def test_cap_violation_raises_with_class_name(self):
+        a = PageAllocator(8, 4, class_quotas={"batch": {"cap": 0.5}})
+        a.alloc(4, owner=0, cls="batch")
+        with pytest.raises(MemoryError, match="batch over its page cap"):
+            a.alloc(1, owner=1, cls="batch")
+        assert a.can_alloc(4, cls="standard")  # other classes unaffected
+
+    def test_quota_evict_want_sizes_the_sweep(self):
+        a = PageAllocator(8, 4, class_quotas={"batch": {"cap": 0.5}})
+        assert a.quota_evict_want("batch", 2) == 0
+        a.alloc(3, owner=0, cls="batch")
+        assert a.quota_evict_want("batch", 3) == 2   # 6 > cap 4 by 2
+        assert a.quota_evict_want("standard", 3) == 0
+        assert PageAllocator(8, 4).quota_evict_want("batch", 99) == 0
+
+    def test_state_round_trip_preserves_charges(self):
+        a = PageAllocator(8, 4, class_quotas={"realtime": {"floor": 0.5}})
+        a.alloc(2, owner=0, cls="realtime")
+        a.alloc(1, owner=1, cls="batch")
+        b = PageAllocator(8, 4, class_quotas={"realtime": {"floor": 0.5}})
+        b.load_state(a.state())
+        assert b.class_used(RT) == 2 and b.class_used(BA) == 1
+
+    def test_legacy_state_loads_uncharged(self):
+        a = PageAllocator(8, 4)
+        a.alloc(2, owner=0)
+        st = a.state()
+        st.pop("cls", None)                    # pre-quota snapshot shape
+        b = PageAllocator(8, 4, class_quotas={"realtime": {"floor": 0.25}})
+        b.load_state(st)
+        assert b.class_used(SD) == 0           # unknown history: uncharged
+
+
+# ===========================================================================
+class TestHeartbeatHysteresis:
+    def test_escalation_and_terminal_death(self):
+        hb = ReplicaHeartbeat(suspect_after=2, dead_after=4)
+        assert hb.beat(False) == "alive"
+        assert hb.beat(False) == "suspect"
+        assert hb.beat(False) == "suspect"
+        assert hb.beat(False) == "dead"
+        assert hb.beat(True) == "dead"         # terminal
+
+    def test_recovery_needs_consecutive_healthy_beats(self):
+        hb = ReplicaHeartbeat(suspect_after=2, dead_after=4,
+                              recover_after=2)
+        hb.beat(False), hb.beat(False)
+        assert hb.state == "suspect"
+        assert hb.beat(True) == "suspect"      # one lucky block: not yet
+        assert hb.beat(True) == "alive"
+
+    def test_alternating_blocks_still_converge_to_dead(self):
+        """The unhealthy streak is only forgiven by a full recovery, so
+        good/bad alternation cannot hover at the threshold forever."""
+        hb = ReplicaHeartbeat(suspect_after=2, dead_after=4,
+                              recover_after=2)
+        states = [hb.beat(h) for h in
+                  (False, True, False, True, False, True, False)]
+        assert states[-1] == "dead"
+
+
+# ===========================================================================
+class TestRouting:
+    def test_least_pressure_spreads_load(self):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=41)
+        with use_mesh(setup[3]):
+            fl = Fleet(_factory(setup), 2)
+            fids = [fl.submit(p, gen_len=4) for p in prompts]
+            homes = [fl._ledger[f]["replica"] for f in fids]
+            assert sorted(homes) == [0, 0, 1, 1]  # alternating, not piled
+            fl.drain(block=4)
+        assert all(fl.results[f]["status"] is RequestStatus.COMPLETED
+                   for f in fids)
+
+    def test_suspects_avoided_until_nothing_else_lives(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            fl = Fleet(_factory(setup), 2)
+            fl.state[1] = "suspect"
+            fids = [fl.submit(p, gen_len=4)
+                    for p in _prompts(setup[0], (9, 5), seed=42)]
+            assert all(fl._ledger[f]["replica"] == 0 for f in fids)
+            fl.state[0] = "dead"               # now only the suspect lives
+            f = fl.submit(_prompts(setup[0], (7,), seed=43)[0], gen_len=4)
+            assert fl._ledger[f]["replica"] == 1
+
+    def test_whole_fleet_dead_raises(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            fl = Fleet(_factory(setup), 2)
+            fl.state = ["dead", "dead"]
+            with pytest.raises(RuntimeError, match="no live replicas"):
+                fl.submit(_prompts(setup[0], (7,), seed=44)[0], gen_len=4)
+
+
+# ===========================================================================
+class TestPromotionByteIdentity:
+    """Primary killed at EVERY fleet round; the promoted standby's
+    completed streams must equal the uninterrupted fleet's — content,
+    status, and exactly-once completion."""
+
+    CELLS = [
+        ("lm", {}, False),
+        ("lm", dict(PAGED), False),
+        pytest.param("lm", dict(PAGED), True, marks=pytest.mark.slow),
+        pytest.param("ssm", {}, False, marks=pytest.mark.slow),
+        pytest.param("hybrid", dict(PAGED), False,
+                     marks=pytest.mark.slow),
+    ]
+
+    @pytest.mark.parametrize("family,kw,spec", CELLS)
+    def test_kill_primary_at_every_round(self, tmp_path, family, kw, spec):
+        setup = _setup(family, "f32")
+        drive = dict(gen_len=12, block=2) if spec else {}
+        if spec:
+            kw = dict(kw, spec=True)
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=31)
+        prios = ("batch", "realtime", None, "standard")
+        clean, fids = _run_fleet(setup, prompts, prios,
+                                 standby_dir=tmp_path / "clean",
+                                 **drive, **kw)
+        rounds = clean._round
+        assert rounds >= 3, "workload too short to exercise promotion"
+        for rnd in range(1, rounds + 1):
+            inj = FleetFaultInjector([(rnd, 0, "kill")])
+            fl, _ = _run_fleet(setup, prompts, prios,
+                               standby_dir=tmp_path / str(rnd), inj=inj,
+                               **drive, **kw)
+            assert fl.counters["promotions"] == 1
+            assert fl.counters["time_to_promote_s"] is not None
+            assert set(fl.results) == set(fids), f"lost stream @ {rnd}"
+            for f in fids:
+                assert fl.results[f]["tokens"] == \
+                    clean.results[f]["tokens"], f"diverged @ round {rnd}"
+                assert fl.results[f]["status"] == clean.results[f]["status"]
+
+    def test_promote_without_standby_is_refused(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            fl = Fleet(_factory(setup), 2)
+            with pytest.raises(RuntimeError, match="standby"):
+                fl.promote()
+
+
+# ===========================================================================
+class TestRedispatch:
+    def test_secondary_death_same_multiset_exactly_once(self, tmp_path):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3, 7, 8), seed=31)
+        prios = ("batch", "realtime", None, "standard", "realtime",
+                 "batch")
+        clean, fids = _run_fleet(setup, prompts, prios, n=2)
+        inj = FleetFaultInjector([(1, 1, "kill")])
+        fl, _ = _run_fleet(setup, prompts, prios, n=2, inj=inj)
+        assert fl.counters["deaths"] == 1
+        assert fl.counters["redispatched"] >= 1
+        assert set(fl.results) == set(fids)
+        for f in fids:
+            assert fl.results[f]["tokens"] == clean.results[f]["tokens"]
+        # exactly once: every re-dispatched ledger entry moved exactly
+        # one time, and no fleet id produced two results
+        assert all(not e["redispatched"] or e["replica"] == 0
+                   for e in fl._ledger.values())
+
+    def test_realtime_victims_redispatch_first(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            fl = Fleet(_factory(setup), 2)
+            # pin three requests to replica 1 by marking 0 suspect
+            fl.state[0] = "suspect"
+            prompts = _prompts(setup[0], (9, 5, 7), seed=45)
+            for p, prio in zip(prompts, ("batch", "realtime", "standard")):
+                fl.submit(p, gen_len=4, priority=prio)
+            fl.state[0] = "alive"
+            order = []
+            orig = fl.replicas[0].submit
+
+            def spy(prompt, **kw):
+                order.append(kw.get("priority"))
+                return orig(prompt, **kw)
+
+            fl.replicas[0].submit = spy
+            fl._on_death(1)
+            assert order == ["realtime", "standard", "batch"]
+            fl.drain(block=4)
+        assert len(fl.results) == 3
+
+    def test_stalled_replica_escalates_to_dead_and_work_moves(self):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=31)
+        prios = ("batch", "realtime", None, "standard")
+        clean, fids = _run_fleet(setup, prompts, prios, n=2)
+        inj = FleetFaultInjector([(r, 1, "stall") for r in range(1, 30)])
+        fl, _ = _run_fleet(setup, prompts, prios, n=2, inj=inj)
+        assert fl.state[1] == "dead"
+        assert fl.counters["suspects"] == 1    # went through suspect first
+        for f in fids:
+            assert fl.results[f]["tokens"] == clean.results[f]["tokens"]
+
+
+# ===========================================================================
+class TestStandbyLag:
+    def test_lag_spike_defers_one_sync_within_bound(self, tmp_path):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5, 12, 3), seed=31)
+        prios = ("batch", "realtime", None, "standard")
+        clean, fids = _run_fleet(setup, prompts, prios,
+                                 standby_dir=tmp_path / "clean")
+        inj = FleetFaultInjector([(2, None, "lag"), (3, 0, "kill")])
+        fl, _ = _run_fleet(setup, prompts, prios,
+                           standby_dir=tmp_path / "lag", inj=inj)
+        assert ("lag" in {k for (_, _, k) in inj.events})
+        for f in fids:
+            assert fl.results[f]["tokens"] == clean.results[f]["tokens"]
+
+    def test_fault_free_standby_fleet_drains_caught_up(self, tmp_path):
+        """Drain liveness: the admission sweep journals on the primary
+        even when idle, so a drive loop that admits after stepping must
+        sync the standby too — or the follower sits one record behind
+        forever and ``busy()`` never clears.  Wide heartbeat thresholds
+        keep scheduler jitter from promoting organically, which would
+        mask the hang (the follower detaches on promotion)."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5), seed=52)
+        fl, fids = _run_fleet(setup, prompts, (None, "realtime"),
+                              standby_dir=tmp_path,
+                              fleet_kw=dict(suspect_after=64,
+                                            dead_after=128))
+        assert fl.counters["deaths"] == 0
+        assert fl.counters["promotions"] == 0
+        assert fl.counters["journal_lag_records"] == 0
+        assert not fl.busy()
+        assert all(fl.results[f]["status"] is RequestStatus.COMPLETED
+                   for f in fids)
+
+    def test_zero_lag_bound_forces_every_sync(self, tmp_path):
+        """max_standby_lag=0: even an injected spike may not defer —
+        the bound wins and the standby stays fully caught up."""
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5), seed=46)
+        inj = FleetFaultInjector([(r, None, "lag") for r in range(1, 20)])
+        fl, fids = _run_fleet(setup, prompts, (None, None),
+                              standby_dir=tmp_path, inj=inj,
+                              fleet_kw=dict(max_standby_lag=0))
+        assert fl.counters["journal_lag_records"] == 0
+        assert all(fl.results[f]["status"] is RequestStatus.COMPLETED
+                   for f in fids)
+
+
+# ===========================================================================
+class TestQuotaIsolation:
+    def test_batch_flood_cannot_take_realtime_floor_or_prefix(self):
+        setup = _setup("lm", "f32")
+        cfg = setup[0]
+        kw = dict(batch=2, max_len=32, paged=True, page_size=4,
+                  num_pages=16, prefix_cache=True,
+                  class_quotas={"realtime": {"floor": 0.25},
+                                "batch": {"cap": 0.5}})
+        with use_mesh(setup[3]):
+            eng = _factory(setup)(**kw)
+            rs = np.random.RandomState(7)
+            pre = rs.randint(0, cfg.vocab, (8,))
+
+            def drive(prompt, prio):
+                eng.submit(prompt, gen_len=4, priority=prio)
+                eng.try_admit()
+                while eng.live.any() or eng.waiting:
+                    eng.step_many(4)
+                eng.retire_finished()
+
+            drive(np.concatenate([pre, rs.randint(0, cfg.vocab, (3,))]),
+                  "realtime")
+            rt_pages = set(eng.prefix_index.pages())
+            assert rt_pages, "realtime run published nothing"
+            # BATCH flood: distinct prompts, enough to churn the pool
+            for i in range(8):
+                eng.submit(_prompts(cfg, (9,), seed=100 + i)[0],
+                           gen_len=6, priority="batch")
+            eng.try_admit()
+            while eng.live.any() or eng.waiting:
+                eng.step_many(4)
+            eng.retire_finished()
+            # the floor held: realtime's published working set survived
+            # the flood page-for-page, and batch stayed under its cap
+            assert rt_pages <= set(eng.prefix_index.pages())
+            assert (eng.allocator.class_used(BA)
+                    <= eng.allocator.cap_pages(BA))
+            # and the survivor is WARM: the next realtime admission hits
+            hits = eng.counters["prefix_hits"]
+            drive(np.concatenate([pre, rs.randint(0, cfg.vocab, (3,))]),
+                  "realtime")
+            assert eng.counters["prefix_hits"] > hits
+
+    def test_flood_evicts_its_own_published_pages_to_stay_live(self):
+        """A capped class whose published prefixes hold its whole
+        budget must evict ITSELF forward — cap pressure never deadlocks
+        admission."""
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _factory(setup)(
+                batch=2, max_len=32, paged=True, page_size=4,
+                num_pages=16, prefix_cache=True,
+                class_quotas={"batch": {"cap": 0.5}})
+            for i in range(6):
+                eng.submit(_prompts(setup[0], (9,), seed=200 + i)[0],
+                           gen_len=6, priority="batch")
+            eng.try_admit()
+            rounds = 0
+            while eng.live.any() or eng.waiting:
+                eng.step_many(4)
+                rounds += 1
+                assert rounds < 200, "admission deadlocked under cap"
+            eng.retire_finished()
+        assert len(eng.done) == 6
+
+
+# ===========================================================================
+class TestFleetStats:
+    def test_engine_health_fields(self):
+        setup = _setup("lm", "f32")
+        with use_mesh(setup[3]):
+            eng = _factory(setup)()
+            st = eng.stats()
+        assert st["uptime_s"] >= 0.0
+        assert st["recoveries"] == 0
+        assert st["journal_lag_records"] is None   # no fleet feeds it
+
+    def test_fleet_stats_shape_and_dead_replicas(self, tmp_path):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5), seed=47)
+        inj = FleetFaultInjector([(1, 1, "kill")])
+        fl, _ = _run_fleet(setup, prompts, (None, None), n=2, inj=inj)
+        st = fl.stats()
+        assert st["replicas"] == 2
+        assert st["states"][1] == "dead"
+        assert st["per_replica"][1] is None
+        assert st["per_replica"][0]["requests"] >= 1
+        assert st["results"] == 2 and st["routed_open"] == 0
+
+    def test_standby_lag_feeds_primary_stats(self, tmp_path):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5), seed=48)
+        fl, _ = _run_fleet(setup, prompts, (None, None),
+                           standby_dir=tmp_path)
+        st = fl.replicas[0].stats()
+        assert st["journal_lag_records"] == 0      # fully caught up
+        assert fl.counters["journal_lag_records"] == 0
+
+    def test_promoted_standby_counts_a_recovery(self, tmp_path):
+        setup = _setup("lm", "f32")
+        prompts = _prompts(setup[0], (9, 5), seed=49)
+        inj = FleetFaultInjector([(1, 0, "kill")])
+        fl, _ = _run_fleet(setup, prompts, (None, None),
+                           standby_dir=tmp_path, inj=inj)
+        assert fl.replicas[0].stats()["recoveries"] == 1
